@@ -1,0 +1,66 @@
+"""Claim (§3/§4): serverless autoscaling driven by sidecar metrics.
+
+Measures the reaction time from a load burst to the operator's scale-up
+event, and the backlog drain speedup from the added instances.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import (AnalyticsUnitSpec, ConfigSchema, DriverSpec,
+                        FieldSpec, Operator, ScalePolicy, SensorSpec,
+                        StreamSchema, StreamSpec)
+
+from .common import emit
+
+SCHEMA = StreamSchema.of(value=FieldSpec("int"))
+
+
+def burst_driver(ctx):
+    def gen():
+        for i in range(int(ctx.config["n"])):
+            if not ctx.running:
+                return
+            yield {"value": i}
+    return gen()
+
+
+def slow_au(ctx):
+    def process(stream, payload):
+        time.sleep(0.01)
+        return {"value": payload["value"]}
+    return process
+
+
+def run() -> None:
+    op = Operator(reconcile_interval_s=0.05,
+                  scale_policy=ScalePolicy(backlog_high=16, backlog_low=1,
+                                           idle_s=1.0, cooldown_s=0.1))
+    op.register_driver(DriverSpec(name="burst", logic=burst_driver,
+                                  config_schema=ConfigSchema.of(n=("int", 500)),
+                                  output_schema=SCHEMA))
+    op.register_analytics_unit(AnalyticsUnitSpec(
+        name="slow", logic=slow_au, output_schema=SCHEMA,
+        min_instances=1, max_instances=8))
+    op.start()
+    op.register_sensor(SensorSpec(name="src", driver="burst",
+                                  config={"n": 500}), start=False)
+    op.create_stream(StreamSpec(name="out", analytics_unit="slow",
+                                inputs=("src",)))
+    t0 = time.monotonic()
+    op.start_pending_sensors()
+    scale_at = None
+    max_instances = 1
+    deadline = time.monotonic() + 30
+    while time.monotonic() < deadline:
+        n = len(op.executor.instances_of("out"))
+        max_instances = max(max_instances, n)
+        if scale_at is None and n > 1:
+            scale_at = time.monotonic() - t0
+        if op.bus.backlog("out") == 0 and n >= 1 and \
+                time.monotonic() - t0 > 2:
+            break
+        time.sleep(0.02)
+    op.shutdown()
+    emit("autoscale_reaction", (scale_at or -1) * 1e6,
+         f"max_instances={max_instances} policy=backlog>16")

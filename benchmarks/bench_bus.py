@@ -1,0 +1,52 @@
+"""Claim (§3/§4): automated data communication via the platform bus.
+
+Measures publish->receive throughput and latency, in-process and with the
+full wire (msgpack+numpy) round-trip — the cost the platform absorbs so
+application code contains zero communication logic.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import FieldSpec, MessageBus, StreamSchema
+
+from .common import emit, timeit
+
+
+def run() -> None:
+    bus = MessageBus()
+    bus.register_subject("bench", StreamSchema.of(
+        x=FieldSpec("int"), arr=FieldSpec("ndarray")))
+    tok = bus.issue_token("bench", ["bench"])
+    payload = {"x": 1, "arr": np.zeros((64, 64), np.float32)}
+
+    for wire in (False, True):
+        sub = bus.subscribe("bench", token=tok, maxsize=4096, wire=wire)
+        n = 2000
+
+        def pump():
+            for i in range(n):
+                bus.publish("bench", payload, token=tok)
+            got = 0
+            while got < n:
+                if sub.next(timeout=1.0) is not None:
+                    got += 1
+
+        us = timeit(pump, warmup=1, iters=3)
+        label = "wire" if wire else "inproc"
+        emit(f"bus_pubsub_{label}", us / n,
+             f"throughput={n/(us/1e6):.0f}msg/s payload=16KiB")
+        bus.unsubscribe(sub)
+
+    # single-message latency
+    sub = bus.subscribe("bench", token=tok, maxsize=16)
+    lat = []
+    for _ in range(200):
+        t0 = time.perf_counter()
+        bus.publish("bench", payload, token=tok)
+        sub.next(timeout=1.0)
+        lat.append((time.perf_counter() - t0) * 1e6)
+    lat.sort()
+    emit("bus_latency_p50", lat[len(lat) // 2], f"p99={lat[int(len(lat)*0.99)]:.1f}us")

@@ -1,0 +1,32 @@
+"""Distributed-optimization trick: gradient compression with error feedback.
+
+Reports the wire-bytes reduction (what crosses the ICI on a real pod) and
+the quantization bias with/without error feedback.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train import optimizer as opt
+
+from .common import emit
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=(1 << 16,)).astype(np.float32) * 1e-3)
+    f32_bytes = g.size * 4
+
+    for mode, wire in (("bf16", g.size * 2), ("int8_ef", g.size * 1 + 4)):
+        err = jnp.zeros_like(g)
+        acc = jnp.zeros_like(g)
+        steps = 30
+        for _ in range(steps):
+            deq, err = opt.compress_grad(g, err, mode)
+            acc = acc + deq
+        bias = float(jnp.abs(acc / steps - g).mean()) / float(
+            jnp.abs(g).mean())
+        emit(f"grad_compression_{mode}", 0.0,
+             f"wire_reduction={f32_bytes/wire:.1f}x rel_bias={bias:.2e} "
+             f"error_feedback={'yes' if mode=='int8_ef' else 'n/a'}")

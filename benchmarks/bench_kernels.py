@@ -1,0 +1,66 @@
+"""Pallas kernels vs jnp references (interpret mode on CPU).
+
+NOTE: interpret mode executes the kernel body per grid step in Python, so
+absolute numbers are NOT TPU performance — the derived column reports the
+model-level quantities (FLOPs, bytes) the roofline uses instead.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+from .common import emit, timeit
+
+KEY = jax.random.PRNGKey(0)
+
+
+def run() -> None:
+    # flash attention, GQA
+    B, S, H, KH, Dh = 1, 256, 8, 2, 64
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, Dh), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KH, Dh), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KH, Dh), jnp.float32)
+    flops = 4 * B * S * S * H * Dh / 2  # causal
+    us = timeit(lambda: jax.block_until_ready(
+        ops.flash_attention(q, k, v, causal=True)), warmup=1, iters=3)
+    emit("kernel_flash_attention", us, f"flops={flops:.2e} mode=interpret")
+    us = timeit(lambda: jax.block_until_ready(
+        ref.flash_attention_ref(q, k, v, causal=True)), warmup=1, iters=3)
+    emit("ref_flash_attention", us, f"flops={flops:.2e} backend=xla_cpu")
+
+    # decode attention
+    S = 2048
+    kc = jax.random.normal(ks[1], (2, S, KH, Dh), jnp.float32)
+    vc = jax.random.normal(ks[2], (2, S, KH, Dh), jnp.float32)
+    qd = jax.random.normal(ks[0], (2, H, Dh), jnp.float32)
+    lens = jnp.array([S, S // 2], jnp.int32)
+    bytes_touched = 2 * kc.size * 4
+    us = timeit(lambda: jax.block_until_ready(
+        ops.decode_attention(qd, kc, vc, lens)), warmup=1, iters=3)
+    emit("kernel_decode_attention", us,
+         f"cache_bytes={bytes_touched:.2e} mode=interpret")
+
+    # ssd scan
+    B, L, Hh, P, N = 1, 256, 8, 32, 32
+    ks5 = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks5[0], (B, L, Hh, P))
+    dt = jax.nn.softplus(jax.random.normal(ks5[1], (B, L, Hh)))
+    A = -jnp.exp(jax.random.normal(ks5[2], (Hh,)) * 0.5)
+    Bm = jax.random.normal(ks5[3], (B, L, 1, N))
+    Cm = jax.random.normal(ks5[4], (B, L, 1, N))
+    us = timeit(lambda: jax.block_until_ready(
+        ops.ssd_scan(x, dt, A, Bm, Cm, chunk=64)[0]), warmup=1, iters=3)
+    emit("kernel_ssd_scan", us, f"chunk=64 mode=interpret")
+    us = timeit(lambda: jax.block_until_ready(
+        ref.ssd_scan_ref(x, dt, A, Bm, Cm)[0]), warmup=1, iters=3)
+    emit("ref_ssd_scan", us, "sequential-recurrence backend=xla_cpu")
+
+    # rmsnorm
+    x = jax.random.normal(KEY, (512, 1024), jnp.bfloat16)
+    w = jnp.ones((1024,), jnp.bfloat16)
+    us = timeit(lambda: jax.block_until_ready(ops.rmsnorm(x, w)),
+                warmup=1, iters=3)
+    emit("kernel_rmsnorm", us, f"bytes={2*x.size*2:.2e} mode=interpret")

@@ -1,0 +1,113 @@
+"""Claim (§1/§3): programmer productivity — "simple abstraction".
+
+Proxy: lines of business logic needed for the fever-screening app on DataX
+(entities + logic only) vs the same topology hand-wired on the raw bus with
+explicit subscriptions, threads, serialization and restart handling.  The
+DataX number counts tests/test_system.py's app builder; the raw variant is
+measured from the inline implementation below (it is real, runnable code).
+"""
+from __future__ import annotations
+
+import inspect
+import queue
+import threading
+
+import numpy as np
+
+from .common import emit
+
+
+# --- the raw-bus implementation someone would write without the platform ---
+def _raw_pipeline(n_frames: int = 5) -> int:
+    qs = {name: queue.Queue() for name in
+          ("rgb", "thermal", "detections", "tracks", "aligned", "fused",
+           "screenings")}
+    results = []
+    stop = threading.Event()
+
+    def camera(seed, out):
+        rng = np.random.default_rng(seed)
+        for i in range(n_frames):
+            qs[out].put({"frame_id": i, "data": rng.random((8, 8))})
+
+    def stage(inq, outq, fn):
+        while not stop.is_set():
+            try:
+                p = qs[inq].get(timeout=0.1)
+            except queue.Empty:
+                continue
+            r = fn(p)
+            if r is not None:
+                qs[outq].put(r)
+
+    def detector(p):
+        return {"frame_id": p["frame_id"], "data": p["data"] * 0.5}
+
+    tracks_db = {}
+
+    def tracker(p):
+        tracks_db[p["frame_id"]] = True
+        return p
+
+    def alignment(p):
+        return p
+
+    pending = {}
+
+    def fusion(p):
+        o = pending.pop(p["frame_id"], None)
+        if o is None:
+            pending[p["frame_id"]] = p
+            return None
+        return {"frame_id": p["frame_id"], "data": (p["data"] + o["data"]) / 2}
+
+    def screening(p):
+        return {"frame_id": p["frame_id"], "fever": p["data"].mean() > 0.375}
+
+    def gate():
+        got = 0
+        while got < n_frames and not stop.is_set():
+            try:
+                p = qs["screenings"].get(timeout=0.1)
+            except queue.Empty:
+                continue
+            results.append((p["frame_id"], p["fever"]))
+            got += 1
+
+    threads = [
+        threading.Thread(target=camera, args=(1, "thermal")),
+        threading.Thread(target=camera, args=(2, "rgb")),
+        threading.Thread(target=stage, args=("rgb", "detections", detector)),
+        threading.Thread(target=stage, args=("detections", "tracks", tracker)),
+        threading.Thread(target=stage, args=("thermal", "aligned", alignment)),
+        threading.Thread(target=stage, args=("tracks", "fused", fusion)),
+        threading.Thread(target=stage, args=("aligned", "fused", fusion)),
+        threading.Thread(target=stage, args=("fused", "screenings", screening)),
+        threading.Thread(target=gate),
+    ]
+    for t in threads:
+        t.start()
+    threads[-1].join(timeout=20)
+    stop.set()
+    for t in threads[:-1]:
+        t.join(timeout=1)
+    return len(results)
+
+
+def _loc(obj) -> int:
+    src = inspect.getsource(obj)
+    return len([l for l in src.splitlines()
+                if l.strip() and not l.strip().startswith("#")])
+
+
+def run() -> None:
+    import sys
+    sys.path.insert(0, "tests")
+    from test_system import _fever_app
+
+    assert _raw_pipeline() == 5          # the raw version must actually work
+    datax_loc = _loc(_fever_app)
+    raw_loc = _loc(_raw_pipeline)
+    emit("loc_fever_app", 0.0,
+         f"datax_loc={datax_loc} raw_loc={raw_loc} "
+         f"note=raw version has no restart/autoscale/schema/authz")

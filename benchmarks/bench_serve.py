@@ -1,0 +1,55 @@
+"""Serving: continuous vs static batching (tokens/s, TTFT).
+
+Continuous batching admits requests as slots free; static batching waits for
+the whole batch to finish before admitting the next wave — the difference is
+the platform's serverless elasticity applied to inference.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro import models
+from repro.configs import get_smoke_config
+from repro.configs.base import RunConfig
+from repro.serve import ServeEngine
+
+from .common import emit
+
+
+def run() -> None:
+    cfg = get_smoke_config("qwen3-14b")
+    run_cfg = RunConfig(attention_impl="naive", remat="none")
+    params = models.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    reqs = [(f"r{i}", list(rng.integers(1, cfg.vocab, 6)),
+             int(rng.integers(4, 12))) for i in range(12)]
+
+    # continuous batching
+    eng = ServeEngine(cfg, run_cfg, params, n_slots=4, max_seq=64)
+    t0 = time.perf_counter()
+    for rid, prompt, n in reqs:
+        eng.submit(rid, prompt, max_new_tokens=n)
+    done = eng.run_until_idle()
+    dt_cont = time.perf_counter() - t0
+    toks = sum(len(r.generated) for r in done)
+    ttft = np.mean([r.first_token_at - r.arrived for r in done]) * 1e3
+    emit("serve_continuous", dt_cont / toks * 1e6,
+         f"tokens={toks} tok/s={toks/dt_cont:.0f} mean_ttft_ms={ttft:.0f}")
+
+    # static batching: waves of 4, next wave only after the slowest finishes
+    eng2 = ServeEngine(cfg, run_cfg, params, n_slots=4, max_seq=64)
+    t0 = time.perf_counter()
+    done2 = []
+    for w in range(0, len(reqs), 4):
+        for rid, prompt, n in reqs[w:w + 4]:
+            eng2.submit(rid, prompt, max_new_tokens=n)
+        done2.extend(eng2.run_until_idle())
+    dt_static = time.perf_counter() - t0
+    toks2 = sum(len(r.generated) for r in done2)
+    emit("serve_static_waves", dt_static / toks2 * 1e6,
+         f"tokens={toks2} tok/s={toks2/dt_static:.0f} "
+         f"speedup_continuous={dt_static/dt_cont:.2f}x")

@@ -1,0 +1,31 @@
+"""Training pipeline: end-to-end step time through the DataX stream graph
+(corpus -> packer -> batcher -> device train step), CPU-sized model."""
+from __future__ import annotations
+
+import shutil
+import time
+
+from repro.configs import get_smoke_config
+from repro.configs.base import RunConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+from .common import emit
+
+
+def run() -> None:
+    shutil.rmtree("/tmp/repro-bench-train", ignore_errors=True)
+    cfg = get_smoke_config("minitron-4b")
+    rc = RunConfig(attention_impl="chunked", attention_chunk=32, remat="none")
+    tcfg = TrainerConfig(global_batch=4, seq_len=64, ckpt_every=1000,
+                         total_steps=100, workdir="/tmp/repro-bench-train")
+    tr = Trainer(cfg, rc, tcfg)
+    tr.init_or_restore()
+    tr.run_steps(2)  # compile + warm the pipeline
+    t0 = time.perf_counter()
+    ms = tr.run_steps(8)
+    dt = time.perf_counter() - t0
+    tr.close()
+    toks = tcfg.global_batch * tcfg.seq_len * len(ms)
+    emit("train_pipeline_step", dt / max(len(ms), 1) * 1e6,
+         f"steps={len(ms)} tok/s={toks/dt:.0f} "
+         f"loss_first={ms[0]['loss']:.3f} loss_last={ms[-1]['loss']:.3f}")

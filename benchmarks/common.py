@@ -1,0 +1,21 @@
+"""Benchmark helpers: timing + CSV emission (name,us_per_call,derived)."""
+from __future__ import annotations
+
+import time
+
+
+def timeit(fn, *, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall time per call, in microseconds."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")

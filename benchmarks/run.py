@@ -1,0 +1,48 @@
+"""Benchmark harness — one entry per paper claim/figure (DESIGN.md §9).
+
+Prints ``name,us_per_call,derived`` CSV.  Run:
+    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from . import (bench_autoscale, bench_bus, bench_compression, bench_kernels,
+               bench_loc, bench_pipeline, bench_reuse, bench_serve,
+               bench_train)
+
+ALL = {
+    "bus": bench_bus,
+    "pipeline": bench_pipeline,
+    "autoscale": bench_autoscale,
+    "loc": bench_loc,
+    "reuse": bench_reuse,
+    "kernels": bench_kernels,
+    "compression": bench_compression,
+    "serve": bench_serve,
+    "train": bench_train,
+}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=sorted(ALL), default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, mod in ALL.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            mod.run()
+        except Exception:
+            failed += 1
+            print(f"{name},-1,FAILED")
+            traceback.print_exc()
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

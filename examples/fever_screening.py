@@ -1,0 +1,146 @@
+"""The paper's flagship application (Fig. 3): Free-Flow Fever Screening,
+rebuilt 1:1 on the platform with ML-flavoured payloads.
+
+Topology (exactly the paper's): 2 sensors (thermal + RGB cameras), 2 driver
+instances, 5 analytics units (detect -> track -> align -> fuse -> screen),
+1 platform database (track state), 1 actuator driving the entry-gate gadget.
+
+Every box is pure business logic — the operator wires the streams, scales
+instances, restarts crashes, and owns the database.
+
+Run:  PYTHONPATH=src python examples/fever_screening.py
+"""
+import time
+
+import numpy as np
+
+from repro.core import (ActuatorSpec, AnalyticsUnitSpec, Application,
+                        ConfigSchema, DatabaseSpec, DriverSpec, FieldSpec,
+                        GadgetSpec, Operator, SensorSpec, StreamSchema,
+                        StreamSpec)
+
+FRAME = StreamSchema.of(frame_id=FieldSpec("int"), data=FieldSpec("ndarray"))
+VERDICT = StreamSchema.of(frame_id=FieldSpec("int"), fever=FieldSpec("bool"),
+                          temp_c=FieldSpec("float"))
+
+
+def camera_driver(ctx):
+    rng = np.random.default_rng(ctx.config["seed"])
+    period = 1.0 / ctx.config["fps"]
+
+    def gen():
+        for i in range(ctx.config["frames"]):
+            if not ctx.running:
+                return
+            time.sleep(period)
+            yield {"frame_id": i,
+                   "data": rng.random((16, 16)).astype(np.float32)
+                   * ctx.config["gain"]}
+    return gen()
+
+
+def face_detector(ctx):
+    return lambda s, p: {"frame_id": p["frame_id"],
+                         "data": p["data"][4:12, 4:12]}  # "face crop"
+
+
+def tracker(ctx):
+    table = ctx.db.ensure_table("tracks", ["first_seen"]) if ctx.db else None
+
+    def process(s, p):
+        if table is not None and table.get(p["frame_id"] % 7) is None:
+            table.put(p["frame_id"] % 7, {"first_seen": p["frame_id"]})
+        return p
+    return process
+
+
+def alignment(ctx):
+    return lambda s, p: {"frame_id": p["frame_id"],
+                         "data": p["data"][4:12, 4:12]}
+
+
+_pending: dict = {}
+
+
+def fusion(ctx):
+    def process(stream, p):
+        other = _pending.pop(p["frame_id"], None)
+        if other is None:
+            _pending[p["frame_id"]] = p
+            return None
+        return {"frame_id": p["frame_id"],
+                "data": (p["data"] + other["data"]) / 2}
+    return process
+
+
+def screening(ctx):
+    thr = ctx.config["fever_c"]
+
+    def process(s, p):
+        temp = 36.0 + float(p["data"].mean()) * 3.0
+        return {"frame_id": p["frame_id"], "fever": bool(temp > thr),
+                "temp_c": temp}
+    return process
+
+
+def gate_actuator(ctx):
+    def process(s, p):
+        action = "HOLD + alert" if p["fever"] else "open"
+        print(f"frame {p['frame_id']:3d}: {p['temp_c']:.1f}C -> gate {action}")
+    return process
+
+
+def main() -> None:
+    app = Application(name="fever-screening")
+    app.driver(DriverSpec(
+        name="camera", logic=camera_driver,
+        config_schema=ConfigSchema.of(seed=("int", 0), frames=("int", 40),
+                                      fps=("float", 40.0),
+                                      gain=("float", 1.0)),
+        output_schema=FRAME))
+    for name, logic in [("detector", face_detector), ("tracker", tracker),
+                        ("alignment", alignment), ("fusion", fusion)]:
+        app.analytics_unit(AnalyticsUnitSpec(
+            name=name, logic=logic, output_schema=FRAME,
+            stateful=(name == "tracker")))
+    app.analytics_unit(AnalyticsUnitSpec(
+        name="screening", logic=screening,
+        config_schema=ConfigSchema.of(fever_c=("float", 37.6)),
+        output_schema=VERDICT))
+    app.actuator(ActuatorSpec(name="gate", logic=gate_actuator))
+    app.database(DatabaseSpec(name="track-db",
+                              tables={"tracks": ["first_seen"]}))
+    app.sensor(SensorSpec(name="thermal", driver="camera",
+                          config={"seed": 1, "gain": 1.1}))
+    app.sensor(SensorSpec(name="rgb", driver="camera",
+                          config={"seed": 2}))
+    app.stream(StreamSpec(name="detections", analytics_unit="detector",
+                          inputs=("rgb",)))
+    app.stream(StreamSpec(name="tracks", analytics_unit="tracker",
+                          inputs=("detections",), fixed_instances=1))
+    app.stream(StreamSpec(name="aligned-thermal", analytics_unit="alignment",
+                          inputs=("thermal",)))
+    app.stream(StreamSpec(name="fused", analytics_unit="fusion",
+                          inputs=("tracks", "aligned-thermal"),
+                          fixed_instances=1))
+    app.stream(StreamSpec(name="screenings", analytics_unit="screening",
+                          inputs=("fused",)))
+    app.gadget(GadgetSpec(name="entry-gate", actuator="gate",
+                          inputs=("screenings",)))
+
+    op = Operator()
+    app.deploy(op)
+    op.start()
+    print(f"deployed: {app.loc_footprint()} entities; streams:",
+          op.registered_streams())
+    time.sleep(3.0)
+    print("\nsidecar metrics (the numbers that drive autoscaling):")
+    for iid, m in sorted(op.metrics().items()):
+        print(f"  {iid:38s} recv={m['received']:3d} pub={m['published']:3d} "
+              f"lat={m['latency_ewma_s']*1e6:5.0f}us")
+    print("\ntrack DB rows:", len(op.store.get("au-tracks").table("tracks")))
+    op.shutdown()
+
+
+if __name__ == "__main__":
+    main()

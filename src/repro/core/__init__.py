@@ -1,0 +1,33 @@
+"""repro.core — the DataX platform: the paper's primary contribution in JAX.
+
+Entities (§2), Operator coherence + lifecycle (§4), message bus (NATS analog),
+sidecar metrics, serverless autoscaling, platform state, and the 3-method SDK.
+"""
+from .app import Application, AppValidationError
+from .bus import (BusError, MessageBus, Subscription, Unauthorized,
+                  UnknownSubject, decode_message, decode_payload,
+                  encode_message, encode_payload, drain)
+from .entities import (ActuatorSpec, AnalyticsUnitSpec, DatabaseSpec,
+                       DriverSpec, EntityKind, GadgetSpec, Placement,
+                       SensorSpec, StreamSpec)
+from .operator import CoherenceError, Operator, OperatorError
+from .schema import ConfigSchema, FieldSpec, Message, StreamSchema
+from .sdk import DataX, LogicContext, sdk_entrypoint
+from .serverless import AutoScaler, Executor, InstanceHandle, ScalePolicy
+from .sidecar import Sidecar
+from .state import Database, StateError, StateStore, Table
+
+__all__ = [
+    "Application", "AppValidationError",
+    "BusError", "MessageBus", "Subscription", "Unauthorized", "UnknownSubject",
+    "decode_message", "decode_payload", "encode_message", "encode_payload",
+    "drain",
+    "ActuatorSpec", "AnalyticsUnitSpec", "DatabaseSpec", "DriverSpec",
+    "EntityKind", "GadgetSpec", "Placement", "SensorSpec", "StreamSpec",
+    "CoherenceError", "Operator", "OperatorError",
+    "ConfigSchema", "FieldSpec", "Message", "StreamSchema",
+    "DataX", "LogicContext", "sdk_entrypoint",
+    "AutoScaler", "Executor", "InstanceHandle", "ScalePolicy",
+    "Sidecar",
+    "Database", "StateError", "StateStore", "Table",
+]

@@ -1,0 +1,309 @@
+"""MessageBus — the NATS analog (paper §4, "Message bus").
+
+Subject-based pub/sub with:
+
+* **registration + authorization** — "only services deployed on DataX will be
+  able to connect ... they will be able to subscribe and publish only on the
+  defined and registered streams."  Publishing to an unregistered subject, or
+  with a token that is not authorized for that subject, raises.
+* **bounded subscriber queues** with a drop-oldest policy (streams are lossy
+  real-time flows; the sidecar counts drops and reports them as metrics).
+* **schema enforcement** — each subject carries a StreamSchema; publishes are
+  validated against it (homogeneous streams, §2).
+* **wire serialization** — msgpack (+numpy) encode/decode used when a message
+  crosses a host boundary.  In-process delivery passes payloads by reference;
+  ``wire=True`` subscriptions force the encode/decode round-trip, which tests
+  use to prove payloads are wire-safe.
+
+This is deliberately an in-process bus: the container is one host.  The class
+is factored so a NATS-backed implementation only replaces ``_deliver``.
+"""
+from __future__ import annotations
+
+import io
+import queue
+import threading
+import time
+from typing import Callable, Iterable
+
+import msgpack
+import numpy as np
+
+from .schema import Message, StreamSchema
+
+
+# ---------------------------------------------------------------------------
+# Wire format: msgpack with an extension for numpy arrays
+# ---------------------------------------------------------------------------
+
+_NDARRAY_EXT = 42
+
+
+def _default(obj):
+    if isinstance(obj, np.ndarray):
+        buf = io.BytesIO()
+        np.save(buf, obj, allow_pickle=False)
+        return msgpack.ExtType(_NDARRAY_EXT, buf.getvalue())
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (np.floating,)):
+        return float(obj)
+    if isinstance(obj, (np.bool_,)):
+        return bool(obj)
+    raise TypeError(f"cannot serialize {type(obj).__name__} on the wire")
+
+
+def _ext_hook(code, data):
+    if code == _NDARRAY_EXT:
+        return np.load(io.BytesIO(data), allow_pickle=False)
+    return msgpack.ExtType(code, data)
+
+
+def encode_payload(payload: dict) -> bytes:
+    return msgpack.packb(payload, default=_default, use_bin_type=True)
+
+
+def decode_payload(raw: bytes) -> dict:
+    return msgpack.unpackb(raw, ext_hook=_ext_hook, raw=False, strict_map_key=False)
+
+
+def encode_message(msg: Message) -> bytes:
+    return msgpack.packb(
+        {"subject": msg.subject, "seq": msg.seq, "ts": msg.ts,
+         "headers": msg.headers, "payload": msg.payload},
+        default=_default, use_bin_type=True)
+
+
+def decode_message(raw: bytes) -> Message:
+    d = msgpack.unpackb(raw, ext_hook=_ext_hook, raw=False, strict_map_key=False)
+    return Message(subject=d["subject"], payload=d["payload"], seq=d["seq"],
+                   ts=d["ts"], headers=d.get("headers", {}))
+
+
+# ---------------------------------------------------------------------------
+# Errors
+# ---------------------------------------------------------------------------
+
+class BusError(RuntimeError):
+    pass
+
+
+class Unauthorized(BusError):
+    pass
+
+
+class UnknownSubject(BusError):
+    pass
+
+
+# ---------------------------------------------------------------------------
+# Subscriptions
+# ---------------------------------------------------------------------------
+
+class Subscription:
+    """A bounded mailbox bound to one subject."""
+
+    def __init__(self, subject: str, maxsize: int, wire: bool, name: str = ""):
+        self.subject = subject
+        self.name = name or f"sub-{id(self):x}"
+        self.wire = wire
+        self._q: queue.Queue = queue.Queue(maxsize=maxsize)
+        self.received = 0
+        self.dropped = 0
+        self.closed = False
+        self._lock = threading.Lock()
+
+    def _offer(self, item) -> None:
+        """Enqueue with drop-oldest on overflow (lossy stream semantics)."""
+        with self._lock:
+            if self.closed:
+                return
+            while True:
+                try:
+                    self._q.put_nowait(item)
+                    self.received += 1
+                    return
+                except queue.Full:
+                    try:
+                        self._q.get_nowait()
+                        self.dropped += 1
+                    except queue.Empty:  # pragma: no cover - race guard
+                        pass
+
+    def next(self, timeout: float | None = None) -> Message | None:
+        """Blocking pop; None on timeout or close."""
+        try:
+            item = self._q.get(timeout=timeout)
+        except queue.Empty:
+            return None
+        if item is None:
+            return None
+        if self.wire:
+            return decode_message(item)
+        return item
+
+    def qsize(self) -> int:
+        return self._q.qsize()
+
+    def close(self) -> None:
+        with self._lock:
+            self.closed = True
+        try:
+            self._q.put_nowait(None)  # wake blocked readers
+        except queue.Full:
+            pass
+
+
+# ---------------------------------------------------------------------------
+# The bus
+# ---------------------------------------------------------------------------
+
+class MessageBus:
+    """Subject-based pub/sub with registration, authz, schema enforcement."""
+
+    def __init__(self, default_queue_size: int = 256):
+        self._lock = threading.RLock()
+        self._subjects: dict[str, StreamSchema] = {}
+        self._subs: dict[str, list[Subscription]] = {}
+        self._tokens: dict[str, set[str] | None] = {}  # token -> allowed subjects (None=all)
+        self._published: dict[str, int] = {}
+        self._default_queue_size = default_queue_size
+        self._closed = False
+
+    # -- administration (called by the Operator, not by user code) ----------
+    def register_subject(self, subject: str, schema: StreamSchema | None = None) -> None:
+        with self._lock:
+            if subject in self._subjects:
+                raise BusError(f"subject {subject!r} already registered")
+            self._subjects[subject] = schema or StreamSchema.untyped()
+            self._subs[subject] = []
+            self._published[subject] = 0
+
+    def unregister_subject(self, subject: str) -> None:
+        with self._lock:
+            if subject not in self._subjects:
+                raise UnknownSubject(subject)
+            for sub in self._subs.pop(subject):
+                sub.close()
+            del self._subjects[subject]
+            del self._published[subject]
+
+    def subjects(self) -> list[str]:
+        with self._lock:
+            return sorted(self._subjects)
+
+    def schema_of(self, subject: str) -> StreamSchema:
+        with self._lock:
+            if subject not in self._subjects:
+                raise UnknownSubject(subject)
+            return self._subjects[subject]
+
+    def issue_token(self, name: str, subjects: Iterable[str] | None = None) -> str:
+        """Mint an auth token (None = platform token, allowed everywhere)."""
+        token = f"tok-{name}-{len(self._tokens):04d}"
+        with self._lock:
+            self._tokens[token] = None if subjects is None else set(subjects)
+        return token
+
+    def revoke_token(self, token: str) -> None:
+        with self._lock:
+            self._tokens.pop(token, None)
+
+    def _authorize(self, token: str | None, subject: str) -> None:
+        if token is None:
+            raise Unauthorized("no token presented")
+        with self._lock:
+            if token not in self._tokens:
+                raise Unauthorized(f"unknown token {token!r}")
+            allowed = self._tokens[token]
+        if allowed is not None and subject not in allowed:
+            raise Unauthorized(f"token not authorized for subject {subject!r}")
+
+    # -- data plane ----------------------------------------------------------
+    def publish(self, subject: str, payload: dict, *, token: str,
+                headers: dict | None = None) -> Message:
+        if self._closed:
+            raise BusError("bus closed")
+        with self._lock:
+            if subject not in self._subjects:
+                raise UnknownSubject(subject)
+        self._authorize(token, subject)
+        with self._lock:
+            if subject not in self._subjects:
+                raise UnknownSubject(subject)
+            schema = self._subjects[subject]
+            subs = list(self._subs[subject])
+        schema.validate(payload)
+        msg = Message(subject=subject, payload=payload, headers=headers or {})
+        self._deliver(msg, subs)
+        with self._lock:
+            if subject in self._published:
+                self._published[subject] += 1
+        return msg
+
+    def _deliver(self, msg: Message, subs: list[Subscription]) -> None:
+        wire_blob = None
+        for sub in subs:
+            if sub.wire:
+                if wire_blob is None:
+                    wire_blob = encode_message(msg)
+                sub._offer(wire_blob)
+            else:
+                sub._offer(msg)
+
+    def subscribe(self, subject: str, *, token: str, maxsize: int | None = None,
+                  wire: bool = False, name: str = "") -> Subscription:
+        self._authorize(token, subject)
+        with self._lock:
+            if subject not in self._subjects:
+                raise UnknownSubject(subject)
+            sub = Subscription(subject, maxsize or self._default_queue_size,
+                               wire=wire, name=name)
+            self._subs[subject].append(sub)
+            return sub
+
+    def unsubscribe(self, sub: Subscription) -> None:
+        with self._lock:
+            subs = self._subs.get(sub.subject)
+            if subs and sub in subs:
+                subs.remove(sub)
+        sub.close()
+
+    # -- introspection --------------------------------------------------------
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                subject: {
+                    "published": self._published[subject],
+                    "subscribers": len(self._subs[subject]),
+                    "backlog": sum(s.qsize() for s in self._subs[subject]),
+                    "dropped": sum(s.dropped for s in self._subs[subject]),
+                }
+                for subject in self._subjects
+            }
+
+    def backlog(self, subject: str) -> int:
+        with self._lock:
+            subs = self._subs.get(subject, [])
+            return max((s.qsize() for s in subs), default=0)
+
+    def close(self) -> None:
+        with self._lock:
+            self._closed = True
+            for subs in self._subs.values():
+                for s in subs:
+                    s.close()
+
+
+def drain(sub: Subscription, n: int, timeout: float = 5.0) -> list[Message]:
+    """Test helper: pop n messages or raise."""
+    out = []
+    deadline = time.monotonic() + timeout
+    while len(out) < n:
+        remaining = deadline - time.monotonic()
+        if remaining <= 0:
+            raise TimeoutError(f"drained {len(out)}/{n} from {sub.subject}")
+        msg = sub.next(timeout=remaining)
+        if msg is not None:
+            out.append(msg)
+    return out

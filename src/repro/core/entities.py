@@ -1,0 +1,152 @@
+"""DataX entity specs — the custom resources of §2/§4.
+
+Seven entity kinds, mirroring the paper's CRDs: driver, analytics unit (AU),
+actuator (the three *code* entities, registered with business logic), and
+sensor, stream, gadget, database (the *instance* entities that reference them).
+
+Code entities carry a ``logic`` factory (the paper's "script or docker image")
+and a :class:`ConfigSchema`.  Instance entities carry a config validated
+against the code entity's schema by the Operator at registration time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Callable, Mapping, Sequence
+
+from .schema import ConfigSchema, StreamSchema
+
+
+class EntityKind(str, enum.Enum):
+    DRIVER = "driver"
+    ANALYTICS_UNIT = "analytics_unit"
+    ACTUATOR = "actuator"
+    SENSOR = "sensor"
+    STREAM = "stream"
+    GADGET = "gadget"
+    DATABASE = "database"
+
+
+class Placement(str, enum.Enum):
+    """Where an AU's logic executes.
+
+    HOST   — a python callable run by worker threads (classic DataX).
+    DEVICE — a jitted JAX program on the mesh; the operator lowers its stream
+             edges to pjit shardings instead of bus hops (TPU adaptation).
+    """
+
+    HOST = "host"
+    DEVICE = "device"
+
+
+# ---------------------------------------------------------------------------
+# Code entities
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DriverSpec:
+    """Generates a stream from a sensor (paper: 'business logic ... a driver')."""
+
+    name: str
+    logic: Callable[..., Any]            # factory: (ctx) -> iterator/callable
+    config_schema: ConfigSchema = dataclasses.field(default_factory=ConfigSchema.empty)
+    output_schema: StreamSchema = dataclasses.field(default_factory=StreamSchema.untyped)
+    version: int = 1
+    node_affinity: str | None = None     # e.g. "usb:host3" — the paper's USB pinning
+
+    kind = EntityKind.DRIVER
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalyticsUnitSpec:
+    """Transforms/fuses input streams into an output stream (paper §2)."""
+
+    name: str
+    logic: Callable[..., Any]            # factory: (ctx) -> process(payloads)->payload
+    config_schema: ConfigSchema = dataclasses.field(default_factory=ConfigSchema.empty)
+    input_schemas: Sequence[StreamSchema] = ()
+    output_schema: StreamSchema = dataclasses.field(default_factory=StreamSchema.untyped)
+    version: int = 1
+    placement: Placement = Placement.HOST
+    stateful: bool = False               # wants a platform database attached
+    min_instances: int = 1
+    max_instances: int = 8
+
+    kind = EntityKind.ANALYTICS_UNIT
+
+
+@dataclasses.dataclass(frozen=True)
+class ActuatorSpec:
+    """Controls a gadget using insights from input streams (paper §2)."""
+
+    name: str
+    logic: Callable[..., Any]
+    config_schema: ConfigSchema = dataclasses.field(default_factory=ConfigSchema.empty)
+    input_schemas: Sequence[StreamSchema] = ()
+    version: int = 1
+
+    kind = EntityKind.ACTUATOR
+
+
+# ---------------------------------------------------------------------------
+# Instance entities
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SensorSpec:
+    """A registered physical/virtual data source, served by a driver.
+
+    Registration (paper §4) requires (a) the driver installed, (b) the config
+    valid under the driver's schema.  "A registered sensor always generates an
+    output stream that has the same name as the sensor."
+    """
+
+    name: str
+    driver: str
+    config: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+    kind = EntityKind.SENSOR
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamSpec:
+    """A derived (augmented) stream: AU + input streams + AU config (paper §4)."""
+
+    name: str
+    analytics_unit: str
+    inputs: Sequence[str] = ()
+    config: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    fixed_instances: int | None = None   # None => operator auto-scales
+
+    kind = EntityKind.STREAM
+
+
+@dataclasses.dataclass(frozen=True)
+class GadgetSpec:
+    """A controllable endpoint, driven by an actuator reading input streams."""
+
+    name: str
+    actuator: str
+    inputs: Sequence[str] = ()
+    config: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+    kind = EntityKind.GADGET
+
+
+@dataclasses.dataclass(frozen=True)
+class DatabaseSpec:
+    """A platform-managed database attachable to drivers/AUs/actuators (§2).
+
+    'DataX installs and maintains the databases, while applications are
+    responsible for the content' — schema here is the app-declared table set.
+    """
+
+    name: str
+    engine: str = "memkv"                # memkv | sqlite-like file store
+    tables: Mapping[str, Sequence[str]] = dataclasses.field(default_factory=dict)
+
+    kind = EntityKind.DATABASE
+
+
+CodeEntity = DriverSpec | AnalyticsUnitSpec | ActuatorSpec
+InstanceEntity = SensorSpec | StreamSpec | GadgetSpec | DatabaseSpec

@@ -1,0 +1,537 @@
+"""DataX Operator — registry + reconciler with coherence enforcement (paper §4).
+
+The Operator is the paper's core mechanism: it owns every entity's lifecycle
+and "takes necessary actions to ensure that all DataX applications are in a
+coherent state at all times", protecting the system from user actions that
+would make it unrecoverable.  Faithfully implemented rules:
+
+* **register driver/AU/actuator** — unique names, validated specs.
+* **upgrade** — only if the new config schema *accepts* every running
+  instance's config; otherwise the user may supply a converter script, and the
+  upgrade is accepted only if the converter succeeds for ALL running instances
+  (§4, verbatim behaviour).  Accepted upgrades cascade: running instances are
+  restarted with the new logic + (converted) configs.
+* **delete driver/AU/actuator** — refused while any sensor/stream/gadget uses
+  it ("refuse the operation if there is already a running instance").
+* **register sensor** — requires (a) driver installed, (b) config compatible;
+  the Operator "will also maintain the driver's running instance ... as long
+  as the sensor is registered"; the sensor's output stream gets the sensor's
+  name.  Node affinity (the paper's USB-attached case) pins the instance.
+* **create stream** — AU available + config compatible + all input streams
+  registered; instance count auto-scaled unless the user fixed it.
+* **delete sensor/stream** — refused while the stream feeds other streams or
+  gadgets ("ensures that they are not input to produce other streams").
+* **reconcile loop** — restarts crashed instances (reliable operation),
+  applies autoscale decisions, flags stragglers (latency ≫ peer median) and
+  replaces them.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable, Mapping
+
+from .bus import MessageBus
+from .entities import (ActuatorSpec, AnalyticsUnitSpec, DatabaseSpec,
+                       DriverSpec, GadgetSpec, Placement, SensorSpec,
+                       StreamSpec)
+from .serverless import AutoScaler, Executor, InstanceHandle, ScalePolicy
+from .state import Database, StateStore
+
+
+class CoherenceError(RuntimeError):
+    """User action refused: it would leave the platform incoherent (§4)."""
+
+
+class OperatorError(RuntimeError):
+    pass
+
+
+class Operator:
+    """The control plane.  One per DataX deployment."""
+
+    def __init__(self, *, bus: MessageBus | None = None,
+                 state_root: str | None = None,
+                 scale_policy: ScalePolicy | None = None,
+                 straggler_factor: float = 4.0,
+                 reconcile_interval_s: float = 0.2):
+        self.bus = bus or MessageBus()
+        self.store = StateStore(root=state_root)
+        self.executor = Executor(self.bus)
+        self.autoscaler = AutoScaler(scale_policy)
+        self.straggler_factor = straggler_factor
+        self._reconcile_interval_s = reconcile_interval_s
+
+        self._lock = threading.RLock()
+        # code entities
+        self._drivers: dict[str, DriverSpec] = {}
+        self._aus: dict[str, AnalyticsUnitSpec] = {}
+        self._actuators: dict[str, ActuatorSpec] = {}
+        # instance entities (desired state)
+        self._sensors: dict[str, SensorSpec] = {}
+        self._streams: dict[str, StreamSpec] = {}
+        self._gadgets: dict[str, GadgetSpec] = {}
+        self._databases: dict[str, DatabaseSpec] = {}
+        # resolved configs for running entities (post schema validation)
+        self._resolved: dict[str, dict] = {}
+        # events observed by tests/ops tooling
+        self.events: list[tuple[float, str, str]] = []
+        self._pending_sensors: list[str] = []
+        self._reconciler: threading.Thread | None = None
+        self._stop = threading.Event()
+
+    # ------------------------------------------------------------------ util
+    def _event(self, kind: str, detail: str) -> None:
+        with self._lock:
+            self.events.append((time.monotonic(), kind, detail))
+
+    def _stream_names(self) -> set[str]:
+        with self._lock:
+            return set(self._sensors) | set(self._streams)
+
+    # =====================================================================
+    # Code entities: drivers, AUs, actuators
+    # =====================================================================
+
+    def register_driver(self, spec: DriverSpec) -> None:
+        with self._lock:
+            if spec.name in self._drivers:
+                raise OperatorError(f"driver {spec.name!r} already registered")
+            self._drivers[spec.name] = spec
+        self._event("register", f"driver/{spec.name}@v{spec.version}")
+
+    def register_analytics_unit(self, spec: AnalyticsUnitSpec) -> None:
+        with self._lock:
+            if spec.name in self._aus:
+                raise OperatorError(f"analytics unit {spec.name!r} already registered")
+            self._aus[spec.name] = spec
+        self._event("register", f"au/{spec.name}@v{spec.version}")
+
+    def register_actuator(self, spec: ActuatorSpec) -> None:
+        with self._lock:
+            if spec.name in self._actuators:
+                raise OperatorError(f"actuator {spec.name!r} already registered")
+            self._actuators[spec.name] = spec
+        self._event("register", f"actuator/{spec.name}@v{spec.version}")
+
+    # -- upgrades (§4: cascade + compatibility or converter) -----------------
+    def upgrade_analytics_unit(self, spec: AnalyticsUnitSpec,
+                               converter: Callable[[dict], dict] | None = None) -> None:
+        self._upgrade_code_entity("au", self._aus, spec, converter,
+                                  users=lambda: [s for s in self._streams.values()
+                                                 if s.analytics_unit == spec.name])
+
+    def upgrade_driver(self, spec: DriverSpec,
+                       converter: Callable[[dict], dict] | None = None) -> None:
+        self._upgrade_code_entity("driver", self._drivers, spec, converter,
+                                  users=lambda: [s for s in self._sensors.values()
+                                                 if s.driver == spec.name])
+
+    def upgrade_actuator(self, spec: ActuatorSpec,
+                         converter: Callable[[dict], dict] | None = None) -> None:
+        self._upgrade_code_entity("actuator", self._actuators, spec, converter,
+                                  users=lambda: [g for g in self._gadgets.values()
+                                                 if g.actuator == spec.name])
+
+    def _upgrade_code_entity(self, kind: str, registry: dict, spec,
+                             converter, users: Callable[[], list]) -> None:
+        with self._lock:
+            if spec.name not in registry:
+                raise OperatorError(f"{kind} {spec.name!r} not registered")
+            old = registry[spec.name]
+            if spec.version <= old.version:
+                raise OperatorError(
+                    f"{kind} {spec.name!r}: version must increase "
+                    f"({old.version} -> {spec.version})")
+            using = users()
+            new_configs: dict[str, dict] = {}
+            for user in using:
+                cfg = dict(user.config)
+                if converter is not None:
+                    # §4: accept only if the converter executes successfully
+                    # for ALL running instances.
+                    try:
+                        cfg = converter(cfg)
+                    except Exception as e:
+                        raise CoherenceError(
+                            f"upgrade of {kind} {spec.name!r} rejected: converter "
+                            f"failed for {user.name!r}: {e}") from None
+                try:
+                    new_configs[user.name] = spec.config_schema.validate(cfg)
+                except Exception as e:
+                    raise CoherenceError(
+                        f"upgrade of {kind} {spec.name!r} rejected: config of "
+                        f"{user.name!r} incompatible with new schema: {e}") from None
+            if converter is None and using and \
+                    not spec.config_schema.accepts_configs_of(old.config_schema):
+                raise CoherenceError(
+                    f"upgrade of {kind} {spec.name!r} rejected: new config schema "
+                    f"is not compatible with the running instances' schema")
+            registry[spec.name] = spec
+            for name, cfg in new_configs.items():
+                self._resolved[name] = cfg
+        # cascade: restart running instances with new logic/config (§4)
+        for user in using:
+            self._restart_owner(user.name)
+        self._event("upgrade", f"{kind}/{spec.name}@v{spec.version} "
+                               f"(cascaded to {len(using)} instances)")
+
+    # -- deletion (§4: refuse while in use) -----------------------------------
+    def delete_driver(self, name: str) -> None:
+        with self._lock:
+            if name not in self._drivers:
+                raise OperatorError(f"driver {name!r} not registered")
+            users = [s.name for s in self._sensors.values() if s.driver == name]
+            if users:
+                raise CoherenceError(
+                    f"cannot delete driver {name!r}: in use by sensors {users}")
+            del self._drivers[name]
+        self._event("delete", f"driver/{name}")
+
+    def delete_analytics_unit(self, name: str) -> None:
+        with self._lock:
+            if name not in self._aus:
+                raise OperatorError(f"analytics unit {name!r} not registered")
+            users = [s.name for s in self._streams.values()
+                     if s.analytics_unit == name]
+            if users:
+                raise CoherenceError(
+                    f"cannot delete analytics unit {name!r}: in use by streams {users}")
+            del self._aus[name]
+        self._event("delete", f"au/{name}")
+
+    def delete_actuator(self, name: str) -> None:
+        with self._lock:
+            if name not in self._actuators:
+                raise OperatorError(f"actuator {name!r} not registered")
+            users = [g.name for g in self._gadgets.values() if g.actuator == name]
+            if users:
+                raise CoherenceError(
+                    f"cannot delete actuator {name!r}: in use by gadgets {users}")
+            del self._actuators[name]
+        self._event("delete", f"actuator/{name}")
+
+    # =====================================================================
+    # Instance entities: sensors, streams, gadgets, databases
+    # =====================================================================
+
+    def register_sensor(self, spec: SensorSpec, *, start: bool = True) -> None:
+        """``start=False`` defers the driver instance until
+        :meth:`start_pending_sensors` — used by Application.deploy so finite
+        sources cannot emit before downstream AUs have subscribed (streams
+        are lossy; there is no replay)."""
+        with self._lock:
+            if spec.name in self._stream_names():
+                raise OperatorError(f"name {spec.name!r} already a stream/sensor")
+            if spec.driver not in self._drivers:
+                raise CoherenceError(
+                    f"sensor {spec.name!r}: driver {spec.driver!r} is not installed")
+            driver = self._drivers[spec.driver]
+            resolved = driver.config_schema.validate(spec.config)  # (b) in §4
+            self._sensors[spec.name] = spec
+            self._resolved[spec.name] = resolved
+        # a registered sensor always generates a stream with the sensor's name
+        self.bus.register_subject(spec.name, driver.output_schema)
+        if start:
+            self._spawn_driver(spec, driver, resolved)
+        else:
+            with self._lock:
+                self._pending_sensors.append(spec.name)
+        self._event("register", f"sensor/{spec.name} (driver={spec.driver})")
+
+    def start_pending_sensors(self) -> None:
+        with self._lock:
+            pending, self._pending_sensors = self._pending_sensors, []
+        for name in pending:
+            with self._lock:
+                spec = self._sensors.get(name)
+                if spec is None:
+                    continue
+                driver = self._drivers[spec.driver]
+                resolved = self._resolved[name]
+            self._spawn_driver(spec, driver, resolved)
+
+    def _spawn_driver(self, spec: SensorSpec, driver: DriverSpec,
+                      resolved: Mapping[str, Any]) -> InstanceHandle:
+        return self.executor.start_instance(
+            entity_kind="driver", entity_name=driver.name, owner=spec.name,
+            logic=driver.logic, config=dict(resolved), inputs=(),
+            output=spec.name, db=self._db_for(resolved),
+            node=driver.node_affinity)
+
+    def create_stream(self, spec: StreamSpec) -> None:
+        with self._lock:
+            if spec.name in self._stream_names():
+                raise OperatorError(f"name {spec.name!r} already a stream/sensor")
+            if spec.analytics_unit not in self._aus:
+                raise CoherenceError(
+                    f"stream {spec.name!r}: analytics unit "
+                    f"{spec.analytics_unit!r} is not available")
+            au = self._aus[spec.analytics_unit]
+            missing = [s for s in spec.inputs if s not in self._stream_names()]
+            if missing:
+                raise CoherenceError(
+                    f"stream {spec.name!r}: input streams not registered: {missing}")
+            resolved = au.config_schema.validate(spec.config)
+            # input schema compatibility: each declared input schema must accept
+            # the corresponding registered stream's schema
+            for i, schema in enumerate(au.input_schemas):
+                if i < len(spec.inputs):
+                    actual = self.bus.schema_of(spec.inputs[i])
+                    if not schema.accepts(actual):
+                        raise CoherenceError(
+                            f"stream {spec.name!r}: input {spec.inputs[i]!r} schema "
+                            f"incompatible with AU {au.name!r} input {i}")
+            self._streams[spec.name] = spec
+            self._resolved[spec.name] = resolved
+        self.bus.register_subject(spec.name, au.output_schema)
+        n = spec.fixed_instances if spec.fixed_instances is not None else au.min_instances
+        for _ in range(max(1, n)):
+            self._spawn_au(spec, au, resolved)
+        self._event("register", f"stream/{spec.name} (au={spec.analytics_unit}, "
+                                f"inputs={list(spec.inputs)})")
+
+    def _spawn_au(self, spec: StreamSpec, au: AnalyticsUnitSpec,
+                  resolved: Mapping[str, Any]) -> InstanceHandle:
+        db = None
+        if au.stateful:
+            db_name = f"au-{spec.name}"
+            db = (self.store.get(db_name) if self.store.exists(db_name)
+                  else self.store.create(db_name))
+        return self.executor.start_instance(
+            entity_kind="analytics_unit", entity_name=au.name, owner=spec.name,
+            logic=au.logic, config=dict(resolved), inputs=tuple(spec.inputs),
+            output=spec.name, db=db or self._db_for(resolved))
+
+    def register_gadget(self, spec: GadgetSpec) -> None:
+        with self._lock:
+            if spec.name in self._gadgets:
+                raise OperatorError(f"gadget {spec.name!r} already registered")
+            if spec.actuator not in self._actuators:
+                raise CoherenceError(
+                    f"gadget {spec.name!r}: actuator {spec.actuator!r} not available")
+            act = self._actuators[spec.actuator]
+            missing = [s for s in spec.inputs if s not in self._stream_names()]
+            if missing:
+                raise CoherenceError(
+                    f"gadget {spec.name!r}: input streams not registered: {missing}")
+            resolved = act.config_schema.validate(spec.config)
+            self._gadgets[spec.name] = spec
+            self._resolved[spec.name] = resolved
+        self.executor.start_instance(
+            entity_kind="actuator", entity_name=act.name, owner=spec.name,
+            logic=act.logic, config=dict(resolved), inputs=tuple(spec.inputs),
+            output=None, db=self._db_for(resolved))
+        self._event("register", f"gadget/{spec.name} (actuator={spec.actuator})")
+
+    def create_database(self, spec: DatabaseSpec) -> Database:
+        with self._lock:
+            if spec.name in self._databases:
+                raise OperatorError(f"database {spec.name!r} already registered")
+            self._databases[spec.name] = spec
+        db = self.store.create(spec.name, engine=spec.engine, tables=spec.tables)
+        self._event("register", f"database/{spec.name} ({spec.engine})")
+        return db
+
+    def _db_for(self, resolved: Mapping[str, Any]) -> Database | None:
+        """Entities reference a platform database via config key 'database'."""
+        name = resolved.get("database")
+        if isinstance(name, str) and name and self.store.exists(name):
+            return self.store.get(name)
+        return None
+
+    # -- deletion with coherence ------------------------------------------------
+    def delete_sensor(self, name: str) -> None:
+        with self._lock:
+            if name not in self._sensors:
+                raise OperatorError(f"sensor {name!r} not registered")
+            self._refuse_if_feeding(name)
+            del self._sensors[name]
+            self._resolved.pop(name, None)
+        self._teardown_owner(name)
+        self.bus.unregister_subject(name)
+        self._event("delete", f"sensor/{name}")
+
+    def delete_stream(self, name: str) -> None:
+        with self._lock:
+            if name not in self._streams:
+                raise OperatorError(f"stream {name!r} not registered")
+            self._refuse_if_feeding(name)
+            del self._streams[name]
+            self._resolved.pop(name, None)
+        self._teardown_owner(name)
+        self.bus.unregister_subject(name)
+        self._event("delete", f"stream/{name}")
+
+    def delete_gadget(self, name: str) -> None:
+        with self._lock:
+            if name not in self._gadgets:
+                raise OperatorError(f"gadget {name!r} not registered")
+            del self._gadgets[name]
+            self._resolved.pop(name, None)
+        self._teardown_owner(name)
+        self._event("delete", f"gadget/{name}")
+
+    def _refuse_if_feeding(self, name: str) -> None:
+        consumers = [s.name for s in self._streams.values() if name in s.inputs]
+        consumers += [g.name for g in self._gadgets.values() if name in g.inputs]
+        if consumers:
+            raise CoherenceError(
+                f"cannot delete {name!r}: it feeds {sorted(consumers)}")
+
+    def _teardown_owner(self, owner: str) -> None:
+        for h in self.executor.instances_of(owner):
+            self.executor.stop_instance(h.instance_id)
+
+    def _restart_owner(self, owner: str) -> None:
+        self._teardown_owner(owner)
+        with self._lock:
+            if owner in self._sensors:
+                spec = self._sensors[owner]
+                driver = self._drivers[spec.driver]
+                resolved = self._resolved[owner]
+                spawn = lambda: self._spawn_driver(spec, driver, resolved)
+                count = 1
+            elif owner in self._streams:
+                spec = self._streams[owner]
+                au = self._aus[spec.analytics_unit]
+                resolved = self._resolved[owner]
+                spawn = lambda: self._spawn_au(spec, au, resolved)
+                count = (spec.fixed_instances if spec.fixed_instances is not None
+                         else au.min_instances)
+            else:
+                return
+        for _ in range(max(1, count)):
+            spawn()
+
+    # =====================================================================
+    # Reconciliation — reliability, autoscaling, stragglers
+    # =====================================================================
+
+    def start(self) -> None:
+        if self._reconciler is not None:
+            return
+        self._stop.clear()
+        self._reconciler = threading.Thread(
+            target=self._reconcile_loop, name="datax-operator", daemon=True)
+        self._reconciler.start()
+
+    def _reconcile_loop(self) -> None:
+        while not self._stop.wait(self._reconcile_interval_s):
+            try:
+                self.reconcile_once()
+            except Exception as e:  # the operator itself must not die
+                self._event("reconcile-error", repr(e))
+
+    def reconcile_once(self) -> None:
+        self._restart_crashed()
+        self._apply_autoscale()
+        self._replace_stragglers()
+
+    def _restart_crashed(self) -> None:
+        dead = self.executor.reap_dead()
+        with self._lock:
+            # completed instances (finite sources that ran to a normal end)
+            # are NOT restarted — only crashed ones violate desired state.
+            owners = {h.owner for h in dead
+                      if h.crashed
+                      and (h.owner in self._sensors or h.owner in self._streams
+                           or h.owner in self._gadgets)}
+        for h in dead:
+            if h.crashed:
+                self._event("crash", f"{h.instance_id}: {h.crash_info.splitlines()[-1] if h.crash_info else '?'}")
+        for owner in owners:
+            # desired state says this entity should be running -> restart (§4
+            # "reliably operate")
+            live = self.executor.instances_of(owner)
+            if not live:
+                self._restart_owner(owner)
+                self._event("restart", owner)
+
+    def _apply_autoscale(self) -> None:
+        with self._lock:
+            streams = list(self._streams.values())
+        for spec in streams:
+            if spec.fixed_instances is not None:
+                continue  # §4: unless the user requests a fixed number
+            with self._lock:
+                au = self._aus.get(spec.analytics_unit)
+                resolved = self._resolved.get(spec.name, {})
+            if au is None or au.placement is Placement.DEVICE:
+                continue
+            handles = self.executor.instances_of(spec.name)
+            desired = self.autoscaler.decide(spec.name, handles,
+                                             au.min_instances, au.max_instances)
+            cur = len(handles)
+            if desired > cur:
+                for _ in range(desired - cur):
+                    self._spawn_au(spec, au, resolved)
+                self._event("scale-up", f"{spec.name}: {cur} -> {desired}")
+            elif desired < cur:
+                for h in handles[: cur - desired]:
+                    self.executor.stop_instance(h.instance_id)
+                self._event("scale-down", f"{spec.name}: {cur} -> {desired}")
+
+    def _replace_stragglers(self) -> None:
+        """Mark instances whose latency EWMA ≫ peer median, replace them."""
+        with self._lock:
+            streams = list(self._streams.values())
+        for spec in streams:
+            handles = self.executor.instances_of(spec.name)
+            if len(handles) < 3:
+                continue  # need peers to define a median
+            lat = sorted(h.sidecar.latency_ewma_s for h in handles)
+            median = lat[len(lat) // 2]
+            if median <= 0:
+                continue
+            for h in handles:
+                if (h.sidecar.latency_ewma_s > self.straggler_factor * median
+                        and h.sidecar.processed >= 4):
+                    with self._lock:
+                        au = self._aus.get(spec.analytics_unit)
+                        resolved = self._resolved.get(spec.name, {})
+                    if au is None:
+                        continue
+                    self.executor.stop_instance(h.instance_id)
+                    self._spawn_au(spec, au, resolved)
+                    self._event("straggler", f"replaced {h.instance_id} "
+                                             f"(ewma {h.sidecar.latency_ewma_s:.4f}s "
+                                             f"vs median {median:.4f}s)")
+
+    # =====================================================================
+    # Introspection / shutdown
+    # =====================================================================
+
+    def describe(self) -> dict:
+        with self._lock:
+            return {
+                "drivers": {n: s.version for n, s in self._drivers.items()},
+                "analytics_units": {n: s.version for n, s in self._aus.items()},
+                "actuators": {n: s.version for n, s in self._actuators.items()},
+                "sensors": sorted(self._sensors),
+                "streams": sorted(self._streams),
+                "gadgets": sorted(self._gadgets),
+                "databases": sorted(self._databases),
+                "instances": [h.instance_id for h in self.executor.all_instances()],
+            }
+
+    def registered_streams(self) -> list[str]:
+        """Everything subscribable — the paper's stream-reuse surface (§3)."""
+        return sorted(self._stream_names())
+
+    def metrics(self) -> dict:
+        return {h.instance_id: h.sidecar.metrics()
+                for h in self.executor.all_instances()}
+
+    def subscribe(self, stream: str, *, name: str = "external", maxsize: int = 256):
+        """Third-party subscription to any registered stream (§3 reuse)."""
+        token = self.bus.issue_token(name, [stream])
+        return self.bus.subscribe(stream, token=token, maxsize=maxsize, name=name)
+
+    def shutdown(self) -> None:
+        self._stop.set()
+        if self._reconciler is not None:
+            self._reconciler.join(timeout=2.0)
+            self._reconciler = None
+        self.executor.shutdown()
+        self.bus.close()

@@ -1,0 +1,276 @@
+"""Stream schemas and messages — the typed payloads that flow on DataX streams.
+
+The paper (§2) defines a stream as "a continuous flow of homogeneous discrete
+messages".  Homogeneity is enforced here: every stream carries a
+:class:`StreamSchema`, and the bus/operator refuse publishes that do not
+conform.  Schemas double as the *compatibility* objects the DataX Operator
+checks during upgrades (§4: "new configuration schemas are compatible with the
+schemas of the running instances").
+
+Two kinds of fields exist:
+
+* host fields — python scalars/strings/bytes/numpy arrays, carried on the
+  message bus (serialized with msgpack at process boundaries);
+* device fields — described by ``jax.ShapeDtypeStruct``; these are the stream
+  edges that lower onto the TPU mesh (pjit shardings are chosen by the
+  operator from these schemas — the paper's "automated data communication").
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Mapping
+
+import numpy as np
+
+try:  # jax is always present in this repo, but keep the core importable alone
+    import jax
+    _HAS_JAX = True
+except Exception:  # pragma: no cover
+    _HAS_JAX = False
+
+
+# ---------------------------------------------------------------------------
+# Field and schema definitions
+# ---------------------------------------------------------------------------
+
+#: Permitted scalar type names in host field schemas.
+SCALAR_TYPES = ("int", "float", "str", "bool", "bytes")
+
+
+@dataclasses.dataclass(frozen=True)
+class FieldSpec:
+    """One field of a stream message.
+
+    ``kind`` is one of:
+      * a scalar type name from :data:`SCALAR_TYPES`
+      * ``"ndarray"`` — a numpy array with optional shape/dtype constraints
+      * ``"device"``  — a jax array described by shape/dtype (ShapeDtypeStruct)
+      * ``"any"``     — unconstrained (escape hatch, discouraged)
+    """
+
+    kind: str
+    shape: tuple | None = None  # None = unconstrained; -1 entries = wildcard dims
+    dtype: str | None = None
+    required: bool = True
+    default: Any = None
+
+    def __post_init__(self) -> None:
+        allowed = SCALAR_TYPES + ("ndarray", "device", "any")
+        if self.kind not in allowed:
+            raise ValueError(f"unknown field kind {self.kind!r}; allowed: {allowed}")
+
+    # -- validation ---------------------------------------------------------
+    def validate(self, value: Any) -> None:
+        if self.kind == "any":
+            return
+        if self.kind in SCALAR_TYPES:
+            pytype = {"int": int, "float": (int, float), "str": str,
+                      "bool": bool, "bytes": bytes}[self.kind]
+            if not isinstance(value, pytype):
+                raise TypeError(f"expected {self.kind}, got {type(value).__name__}")
+            return
+        # array-like kinds
+        if self.kind == "ndarray":
+            if not isinstance(value, np.ndarray):
+                raise TypeError(f"expected ndarray, got {type(value).__name__}")
+            self._check_shape_dtype(value.shape, str(value.dtype))
+        elif self.kind == "device":
+            shape = getattr(value, "shape", None)
+            dtype = getattr(value, "dtype", None)
+            if shape is None or dtype is None:
+                raise TypeError(f"expected array-like with shape/dtype, got {type(value).__name__}")
+            self._check_shape_dtype(tuple(shape), str(dtype))
+
+    def _check_shape_dtype(self, shape: tuple, dtype: str) -> None:
+        if self.shape is not None:
+            if len(shape) != len(self.shape):
+                raise TypeError(f"rank mismatch: expected {self.shape}, got {shape}")
+            for want, got in zip(self.shape, shape):
+                if want != -1 and want != got:
+                    raise TypeError(f"shape mismatch: expected {self.shape}, got {shape}")
+        if self.dtype is not None and self.dtype != dtype:
+            raise TypeError(f"dtype mismatch: expected {self.dtype}, got {dtype}")
+
+    # -- compatibility ------------------------------------------------------
+    def accepts(self, other: "FieldSpec") -> bool:
+        """True if every value valid under ``other`` is valid under ``self``."""
+        if self.kind == "any":
+            return True
+        if self.kind != other.kind:
+            return False
+        if self.shape is not None:
+            if other.shape is None or len(self.shape) != len(other.shape):
+                return False
+            for want, got in zip(self.shape, other.shape):
+                if want != -1 and want != got:
+                    return False
+        if self.dtype is not None and self.dtype != other.dtype:
+            return False
+        return True
+
+    def to_shape_dtype_struct(self):
+        """Device fields become jax.ShapeDtypeStruct stand-ins (dry-run inputs)."""
+        if self.kind != "device":
+            raise ValueError(f"field kind {self.kind!r} has no device representation")
+        if self.shape is None or self.dtype is None or any(d == -1 for d in self.shape):
+            raise ValueError("device fields need fully-concrete shape/dtype")
+        if not _HAS_JAX:  # pragma: no cover
+            raise RuntimeError("jax unavailable")
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamSchema:
+    """The homogeneous message type of one stream."""
+
+    fields: Mapping[str, FieldSpec]
+
+    @staticmethod
+    def of(**fields: FieldSpec) -> "StreamSchema":
+        return StreamSchema(fields=dict(fields))
+
+    @staticmethod
+    def device(**arrays: "tuple[tuple, str]") -> "StreamSchema":
+        """Shorthand: StreamSchema.device(tokens=((B, S), 'int32'))."""
+        return StreamSchema(fields={
+            k: FieldSpec(kind="device", shape=tuple(shape), dtype=dtype)
+            for k, (shape, dtype) in arrays.items()
+        })
+
+    @staticmethod
+    def untyped() -> "StreamSchema":
+        return StreamSchema(fields={})  # empty = accept anything
+
+    def validate(self, payload: Mapping[str, Any]) -> None:
+        if not self.fields:
+            return
+        for name, spec in self.fields.items():
+            if name not in payload:
+                if spec.required and spec.default is None:
+                    raise KeyError(f"missing required field {name!r}")
+                continue
+            try:
+                spec.validate(payload[name])
+            except TypeError as e:
+                raise TypeError(f"field {name!r}: {e}") from None
+
+    def accepts(self, other: "StreamSchema") -> bool:
+        """Compatibility: can a consumer expecting ``self`` read ``other``?"""
+        if not self.fields:
+            return True
+        if not other.fields:
+            return False  # producer makes no guarantees
+        for name, spec in self.fields.items():
+            if not spec.required:
+                continue
+            if name not in other.fields:
+                return False
+            if not spec.accepts(other.fields[name]):
+                return False
+        return True
+
+    def device_specs(self) -> dict:
+        """ShapeDtypeStructs for all device fields (dry-run stand-ins)."""
+        return {k: f.to_shape_dtype_struct()
+                for k, f in self.fields.items() if f.kind == "device"}
+
+
+# ---------------------------------------------------------------------------
+# Config schemas (for drivers / AUs / actuators) — §4 upgrade coherency
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ConfigSchema:
+    """Schema for entity configuration (the paper's "configuration schema").
+
+    ``fields`` maps name -> (type-name, default-or-REQUIRED).  An upgrade is
+    *compatible* iff every config valid under the old schema is valid under the
+    new one: the new schema may add fields with defaults, may drop fields, may
+    relax required->optional, but may not add required fields or change types.
+    """
+
+    REQUIRED = "__required__"
+    fields: Mapping[str, tuple]  # name -> (type_name, default)
+
+    @staticmethod
+    def of(**fields: Any) -> "ConfigSchema":
+        """ConfigSchema.of(rate=("float", 1.0), url=("str", ConfigSchema.REQUIRED))"""
+        out = {}
+        for name, spec in fields.items():
+            if isinstance(spec, tuple) and len(spec) == 2:
+                out[name] = spec
+            else:
+                raise ValueError(f"field {name!r}: expected (type, default) tuple")
+        return ConfigSchema(fields=out)
+
+    @staticmethod
+    def empty() -> "ConfigSchema":
+        return ConfigSchema(fields={})
+
+    def validate(self, config: Mapping[str, Any]) -> dict:
+        """Validate + apply defaults; returns the resolved config dict."""
+        resolved = {}
+        pytypes = {"int": int, "float": (int, float), "str": str,
+                   "bool": bool, "bytes": bytes, "dict": dict, "list": list,
+                   "any": object}
+        for name, (tname, default) in self.fields.items():
+            if name in config:
+                val = config[name]
+                want = pytypes.get(tname, object)
+                if not isinstance(val, want):
+                    raise TypeError(
+                        f"config field {name!r}: expected {tname}, got {type(val).__name__}")
+                resolved[name] = val
+            elif default is ConfigSchema.REQUIRED:
+                raise KeyError(f"missing required config field {name!r}")
+            else:
+                resolved[name] = default
+        unknown = set(config) - set(self.fields)
+        if unknown:
+            raise KeyError(f"unknown config fields: {sorted(unknown)}")
+        return resolved
+
+    def accepts_configs_of(self, old: "ConfigSchema") -> bool:
+        """True if any config valid under ``old`` validates under ``self``."""
+        for name, (tname, default) in self.fields.items():
+            if default is not ConfigSchema.REQUIRED:
+                continue
+            # new required field: old configs must have been required to carry it
+            if name not in old.fields:
+                return False
+            old_t, old_default = old.fields[name]
+            if old_default is not ConfigSchema.REQUIRED:
+                return False  # old configs may omit it
+            if old_t != tname:
+                return False
+        # type changes on shared fields break compatibility
+        for name, (tname, _) in self.fields.items():
+            if name in old.fields and old.fields[name][0] != tname:
+                return False
+        return True
+
+
+# ---------------------------------------------------------------------------
+# Messages
+# ---------------------------------------------------------------------------
+
+_seq_counter = iter(range(1, 1 << 62))
+
+
+@dataclasses.dataclass
+class Message:
+    """One discrete message on a stream (paper §2)."""
+
+    subject: str
+    payload: dict
+    seq: int = dataclasses.field(default_factory=lambda: next(_seq_counter))
+    ts: float = dataclasses.field(default_factory=time.monotonic)
+    headers: dict = dataclasses.field(default_factory=dict)
+
+    def with_subject(self, subject: str) -> "Message":
+        return dataclasses.replace(self, subject=subject)
+
+
+#: Signature of AU business logic at the host level: payload(s) in, payload out.
+HostLogic = Callable[..., Any]

@@ -1,0 +1,99 @@
+"""DataX SDK — the developer-facing API (paper §4, "DataX SDKs").
+
+The paper's Python SDK is a class ``DataX`` with exactly three public methods:
+
+* ``get_configuration()`` — the entity's configuration as a dict
+* ``next()``              — ``(stream_name, message_dict)`` from an input stream
+* ``emit(message)``       — publish a dict on the output stream
+
+plus (per §2) access to the platform database when the entity is stateful.
+The SDK is a thin veneer over the Sidecar — "DataX Sidecar does most of the
+work in managing data communication, and the SDKs provide an interface between
+DataX Sidecar and the business logic".
+
+Business logic can be written in two styles:
+
+1. **SDK style** (the paper's): a long-running ``main(dx)`` decorated with
+   :func:`sdk_entrypoint`, looping on ``dx.next()`` / ``dx.emit()``.
+2. **Callback style**: a factory ``make(ctx) -> process`` where ``process``
+   is called per message; the runtime owns the loop.  For drivers the factory
+   may return an iterator, each item becoming one emitted message.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, Iterator
+
+from .sidecar import Sidecar
+from .state import Database
+
+
+class DataX:
+    """The object handed to SDK-style business logic."""
+
+    def __init__(self, sidecar: Sidecar, config: dict,
+                 db: Database | None = None,
+                 stop_event: threading.Event | None = None):
+        self._sidecar = sidecar
+        self._config = dict(config)
+        self._db = db
+        self._stop = stop_event or threading.Event()
+
+    # -- the paper's three public methods ------------------------------------
+    def get_configuration(self) -> dict:
+        """Configuration as key-value pairs."""
+        return dict(self._config)
+
+    def next(self, timeout: float | None = 1.0) -> tuple[str, dict] | None:
+        """(stream_name, message) from one of the input streams, or None."""
+        item = self._sidecar.next(timeout=timeout)
+        if item is None:
+            return None
+        stream, msg = item
+        return (stream, msg.payload)
+
+    def emit(self, message: dict) -> None:
+        """Publish a new message (a dict with string keys) on the output."""
+        if not isinstance(message, dict):
+            raise TypeError("emit() takes a dict with string keys")
+        self._sidecar.emit(message)
+
+    # -- extras ---------------------------------------------------------------
+    @property
+    def db(self) -> Database | None:
+        """The platform-managed database, if the entity is stateful (§2)."""
+        return self._db
+
+    @property
+    def running(self) -> bool:
+        """SDK-style mains should loop ``while dx.running:``."""
+        return not self._stop.is_set()
+
+
+def sdk_entrypoint(fn: Callable[[DataX], Any]) -> Callable[[DataX], Any]:
+    """Mark a function as SDK-style business logic (owns its own loop)."""
+    fn.datax_sdk_style = True  # type: ignore[attr-defined]
+    return fn
+
+
+def is_sdk_style(logic: Callable) -> bool:
+    return bool(getattr(logic, "datax_sdk_style", False))
+
+
+class LogicContext:
+    """Context handed to callback-style factories."""
+
+    def __init__(self, config: dict, db: Database | None = None,
+                 instance_id: str = "", stop_event: threading.Event | None = None):
+        self.config = dict(config)
+        self.db = db
+        self.instance_id = instance_id
+        self._stop = stop_event or threading.Event()
+
+    @property
+    def running(self) -> bool:
+        return not self._stop.is_set()
+
+
+DriverIterator = Iterator[dict]
+ProcessFn = Callable[[str, dict], Any]  # (stream, payload) -> payload | list | None

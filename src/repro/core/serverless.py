@@ -1,0 +1,246 @@
+"""Serverless execution + autoscaling (paper §3 "Serverless stream processing").
+
+The Executor is the platform's compute fabric: it runs every driver / AU /
+actuator instance on worker threads, wrapped in a Sidecar.  Developers never
+touch it — the Operator asks for instances and the Executor provides them,
+which is the paper's serverless claim ("developers only provide the business
+logic and actual execution is handled transparently").
+
+The AutoScaler turns sidecar metrics into scale decisions — the paper: "these
+metrics also drive the auto-scaling process".
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+import time
+import traceback
+from typing import Any, Callable, Sequence
+
+from .bus import MessageBus
+from .schema import Message
+from .sdk import DataX, LogicContext, is_sdk_style
+from .sidecar import Sidecar
+from .state import Database
+
+
+@dataclasses.dataclass
+class InstanceHandle:
+    """One running instance of a driver/AU/actuator."""
+
+    instance_id: str
+    entity_kind: str                 # driver | analytics_unit | actuator
+    entity_name: str                 # code-entity name
+    owner: str                       # sensor/stream/gadget that requested it
+    config: dict
+    sidecar: Sidecar
+    thread: threading.Thread
+    stop_event: threading.Event
+    node: str | None = None          # simulated placement (paper's USB affinity)
+    started_at: float = dataclasses.field(default_factory=time.monotonic)
+    crashed: bool = False
+    completed: bool = False          # ran to normal end (e.g. finite driver)
+    crash_info: str = ""
+
+    def alive(self) -> bool:
+        return self.thread.is_alive()
+
+    def stop(self, join_timeout: float = 2.0) -> None:
+        self.stop_event.set()
+        self.thread.join(timeout=join_timeout)
+        self.sidecar.close()
+
+
+class Executor:
+    """Thread-backed serverless fabric."""
+
+    def __init__(self, bus: MessageBus):
+        self._bus = bus
+        self._instances: dict[str, InstanceHandle] = {}
+        self._lock = threading.RLock()
+        self._ids = itertools.count()
+
+    # ------------------------------------------------------------------ run
+    def start_instance(self, *, entity_kind: str, entity_name: str, owner: str,
+                       logic: Callable, config: dict,
+                       inputs: Sequence[str] = (), output: str | None = None,
+                       db: Database | None = None, node: str | None = None,
+                       queue_size: int = 256) -> InstanceHandle:
+        iid = f"{owner}/{entity_name}-{next(self._ids):04d}"
+        stop_event = threading.Event()
+        sidecar = Sidecar(iid, self._bus, inputs=inputs, output=output,
+                          queue_size=queue_size)
+
+        handle = InstanceHandle(
+            instance_id=iid, entity_kind=entity_kind, entity_name=entity_name,
+            owner=owner, config=dict(config), sidecar=sidecar,
+            thread=None, stop_event=stop_event, node=node)  # type: ignore[arg-type]
+
+        runner = self._make_runner(handle, logic, db)
+        thread = threading.Thread(target=runner, name=iid, daemon=True)
+        handle.thread = thread
+        with self._lock:
+            self._instances[iid] = handle
+        thread.start()
+        return handle
+
+    def _make_runner(self, handle: InstanceHandle, logic: Callable,
+                     db: Database | None) -> Callable[[], None]:
+        sidecar, stop_event = handle.sidecar, handle.stop_event
+
+        def run() -> None:
+            try:
+                if is_sdk_style(logic):
+                    dx = DataX(sidecar, handle.config, db=db, stop_event=stop_event)
+                    logic(dx)
+                    return
+                ctx = LogicContext(handle.config, db=db,
+                                   instance_id=handle.instance_id,
+                                   stop_event=stop_event)
+                made = logic(ctx)
+                if handle.entity_kind == "driver":
+                    self._drive_source(made, sidecar, stop_event)
+                else:
+                    self._pump(made, sidecar, stop_event,
+                               sink=handle.entity_kind == "actuator")
+            except Exception:
+                handle.crashed = True
+                handle.crash_info = traceback.format_exc()
+            else:
+                handle.completed = True
+
+        return run
+
+    @staticmethod
+    def _drive_source(made: Any, sidecar: Sidecar,
+                      stop_event: threading.Event) -> None:
+        """Drivers: iterate a generator (or poll a callable) and emit."""
+        if callable(made) and not hasattr(made, "__next__"):
+            # callable driver: poll until it returns None or stop
+            while not stop_event.is_set():
+                t0 = time.monotonic()
+                payload = made()
+                if payload is None:
+                    return
+                sidecar.emit(payload)
+                sidecar.record_processing(time.monotonic() - t0)
+            return
+        for payload in made:
+            if stop_event.is_set():
+                return
+            if payload is None:
+                continue
+            sidecar.emit(payload)
+            sidecar.record_processing(0.0)
+
+    @staticmethod
+    def _pump(process: Callable, sidecar: Sidecar, stop_event: threading.Event,
+              sink: bool) -> None:
+        """AUs/actuators: pull → business logic → (emit)."""
+        if not callable(process):
+            raise TypeError("AU/actuator factory must return a callable process fn")
+        while not stop_event.is_set():
+            item = sidecar.next(timeout=0.1)
+            if item is None:
+                continue
+            stream, msg = item
+            t0 = time.monotonic()
+            ok = True
+            try:
+                out = process(stream, msg.payload)
+            except Exception:
+                ok = False
+                out = None
+                raise
+            finally:
+                sidecar.record_processing(time.monotonic() - t0, ok=ok)
+            if sink or out is None:
+                continue
+            outs = out if isinstance(out, list) else [out]
+            for payload in outs:
+                sidecar.emit(payload)
+
+    # ------------------------------------------------------------- lifecycle
+    def stop_instance(self, instance_id: str) -> None:
+        with self._lock:
+            handle = self._instances.pop(instance_id, None)
+        if handle is not None:
+            handle.stop()
+
+    def instances_of(self, owner: str) -> list[InstanceHandle]:
+        with self._lock:
+            return [h for h in self._instances.values() if h.owner == owner]
+
+    def all_instances(self) -> list[InstanceHandle]:
+        with self._lock:
+            return list(self._instances.values())
+
+    def get(self, instance_id: str) -> InstanceHandle | None:
+        with self._lock:
+            return self._instances.get(instance_id)
+
+    def reap_dead(self) -> list[InstanceHandle]:
+        """Remove finished/crashed instances; return them (reconciler restarts)."""
+        with self._lock:
+            dead = [h for h in self._instances.values()
+                    if not h.thread.is_alive()]
+            for h in dead:
+                del self._instances[h.instance_id]
+        for h in dead:
+            h.sidecar.close()
+        return dead
+
+    def shutdown(self) -> None:
+        with self._lock:
+            handles = list(self._instances.values())
+            self._instances.clear()
+        for h in handles:
+            h.stop()
+
+
+# ---------------------------------------------------------------------------
+# Autoscaling policy
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ScalePolicy:
+    """Backlog/latency-driven scaling thresholds."""
+
+    backlog_high: int = 32        # scale up if per-instance backlog exceeds this
+    backlog_low: int = 2          # scale down if total backlog below this
+    idle_s: float = 5.0           # and instances have been idle this long
+    cooldown_s: float = 1.0       # min seconds between decisions per stream
+
+
+class AutoScaler:
+    """Decides instance counts from sidecar metrics (paper §4: metrics drive
+    the auto-scaling process)."""
+
+    def __init__(self, policy: ScalePolicy | None = None):
+        self.policy = policy or ScalePolicy()
+        self._last_decision: dict[str, float] = {}
+
+    def decide(self, owner: str, handles: Sequence[InstanceHandle],
+               min_instances: int, max_instances: int) -> int:
+        """Return the desired instance count for ``owner``."""
+        now = time.monotonic()
+        cur = len(handles)
+        if cur == 0:
+            return max(min_instances, 1)
+        last = self._last_decision.get(owner, 0.0)
+        if now - last < self.policy.cooldown_s:
+            return cur
+        metrics = [h.sidecar.metrics() for h in handles]
+        per_instance_backlog = max(m["backlog"] for m in metrics)
+        total_backlog = sum(m["backlog"] for m in metrics)
+        all_idle = all(m["idle_s"] > self.policy.idle_s for m in metrics)
+
+        desired = cur
+        if per_instance_backlog > self.policy.backlog_high and cur < max_instances:
+            desired = min(max_instances, cur * 2)
+        elif total_backlog <= self.policy.backlog_low and all_idle and cur > min_instances:
+            desired = cur - 1
+        if desired != cur:
+            self._last_decision[owner] = now
+        return desired

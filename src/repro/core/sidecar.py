@@ -1,0 +1,128 @@
+"""DataX Sidecar — per-instance data-plane manager + metrics (paper §4).
+
+"The main role of the DataX Sidecar is to automatically manage data
+communication (it manages the connection, subscriptions, and publishing to the
+messages bus).  Also, DataX Sidecar monitors the health of the user's
+application; it exposes ... metrics such as the systems resources utilization
+and the number of messages received, dropped, and published."
+
+One Sidecar is attached to every running instance.  It owns the bus
+subscriptions and the publish path (business logic never touches the bus), and
+keeps the counters that drive (a) autoscaling, (b) straggler detection, and
+(c) the health checks the reconciler uses to restart dead instances.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Sequence
+
+from .bus import MessageBus, Subscription
+from .schema import Message
+
+
+class Sidecar:
+    """Connection + subscription + publish manager, with metrics."""
+
+    def __init__(self, instance_id: str, bus: MessageBus, *,
+                 inputs: Sequence[str] = (), output: str | None = None,
+                 token: str | None = None, queue_size: int = 256,
+                 wire: bool = False):
+        self.instance_id = instance_id
+        self._bus = bus
+        self._output = output
+        self._token = token or bus.issue_token(
+            instance_id, list(inputs) + ([output] if output else []))
+        self._subs: list[Subscription] = [
+            bus.subscribe(s, token=self._token, maxsize=queue_size, wire=wire,
+                          name=f"{instance_id}:{s}")
+            for s in inputs
+        ]
+        self._rr = 0  # round-robin cursor over input subscriptions
+        self._lock = threading.Lock()
+        # metrics
+        self.published = 0
+        self.processed = 0
+        self.errors = 0
+        self.latency_ewma_s = 0.0     # business-logic processing latency
+        self.started_at = time.monotonic()
+        self.last_activity = self.started_at
+        self._ewma_alpha = 0.2
+
+    # -- data plane (used by the SDK / runtime, not by business logic) -------
+    def next(self, timeout: float | None = 0.1) -> tuple[str, Message] | None:
+        """Round-robin poll across input subscriptions.
+
+        Returns (stream_name, message) or None if nothing arrived in time.
+        Mirrors the paper's SDK ``next()`` returning "the name of the stream
+        and the message".
+        """
+        if not self._subs:
+            return None
+        n = len(self._subs)
+        # fast pass: try each queue without blocking
+        for i in range(n):
+            sub = self._subs[(self._rr + i) % n]
+            msg = sub.next(timeout=0)
+            if msg is not None:
+                self._rr = (self._rr + i + 1) % n
+                self.last_activity = time.monotonic()
+                return (sub.subject, msg)
+        if timeout == 0:
+            return None
+        # slow pass: block on the round-robin head
+        sub = self._subs[self._rr % n]
+        msg = sub.next(timeout=timeout)
+        if msg is None:
+            return None
+        self._rr = (self._rr + 1) % n
+        self.last_activity = time.monotonic()
+        return (sub.subject, msg)
+
+    def emit(self, payload: dict, headers: dict | None = None) -> None:
+        if self._output is None:
+            raise RuntimeError(f"instance {self.instance_id} has no output stream")
+        self._bus.publish(self._output, payload, token=self._token,
+                          headers=headers)
+        with self._lock:
+            self.published += 1
+            self.last_activity = time.monotonic()
+
+    # -- bookkeeping ----------------------------------------------------------
+    def record_processing(self, latency_s: float, ok: bool = True) -> None:
+        with self._lock:
+            self.processed += 1
+            if not ok:
+                self.errors += 1
+            a = self._ewma_alpha
+            self.latency_ewma_s = (1 - a) * self.latency_ewma_s + a * latency_s
+
+    # -- the REST-analog metrics endpoint (paper: sidecar exposes REST API) ---
+    def metrics(self) -> dict:
+        received = sum(s.received for s in self._subs)
+        dropped = sum(s.dropped for s in self._subs)
+        backlog = sum(s.qsize() for s in self._subs)
+        with self._lock:
+            return {
+                "instance": self.instance_id,
+                "received": received,
+                "dropped": dropped,
+                "published": self.published,
+                "processed": self.processed,
+                "errors": self.errors,
+                "backlog": backlog,
+                "latency_ewma_s": self.latency_ewma_s,
+                "uptime_s": time.monotonic() - self.started_at,
+                "idle_s": time.monotonic() - self.last_activity,
+            }
+
+    def healthy(self, stall_timeout_s: float = 60.0) -> bool:
+        m = self.metrics()
+        if m["errors"] > 0 and m["processed"] == m["errors"]:
+            return False  # every message errored
+        return True
+
+    def close(self) -> None:
+        for s in self._subs:
+            self._bus.unsubscribe(s)
+        self._bus.revoke_token(self._token)

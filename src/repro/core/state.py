@@ -1,0 +1,205 @@
+"""StateStore — the paper's platform-managed database abstraction (§2, §3).
+
+"DataX makes this state management easy by exposing in-built database
+management systems and the associated databases.  Developers can choose the
+specific database, create the desired schema, and manage the desired
+content/state."
+
+Two engines:
+
+* ``memkv``  — in-memory, thread-safe table store (row dicts, per-table locks)
+* ``filekv`` — same API, persisted to zstd-compressed msgpack files so state
+               survives restarts (used by checkpoint metadata + fault tests)
+
+The training/serving substrates reuse this as their state backbone: optimizer
+state manifests, KV-cache registries and serving session tables are all DataX
+databases — the paper's claim "state management within and across AUs".
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+from typing import Any, Iterable, Mapping
+
+import msgpack
+import zstandard
+
+from .bus import _default, _ext_hook  # reuse the numpy-aware wire format
+
+
+class StateError(RuntimeError):
+    pass
+
+
+class Table:
+    """A named table with primary-key rows and optional declared columns."""
+
+    def __init__(self, name: str, columns: Iterable[str] | None = None):
+        self.name = name
+        self.columns = tuple(columns) if columns else None
+        self._rows: dict[Any, dict] = {}
+        self._lock = threading.RLock()
+
+    def put(self, key: Any, row: Mapping[str, Any]) -> None:
+        if self.columns is not None:
+            unknown = set(row) - set(self.columns)
+            if unknown:
+                raise StateError(f"table {self.name!r}: unknown columns {sorted(unknown)}")
+        with self._lock:
+            self._rows[key] = dict(row)
+
+    def get(self, key: Any, default: Any = None) -> dict | None:
+        with self._lock:
+            row = self._rows.get(key)
+            return dict(row) if row is not None else default
+
+    def update(self, key: Any, **fields: Any) -> dict:
+        with self._lock:
+            if key not in self._rows:
+                raise StateError(f"table {self.name!r}: no row {key!r}")
+            self._rows[key].update(fields)
+            return dict(self._rows[key])
+
+    def delete(self, key: Any) -> None:
+        with self._lock:
+            self._rows.pop(key, None)
+
+    def scan(self, predicate=None) -> list[tuple[Any, dict]]:
+        with self._lock:
+            items = [(k, dict(v)) for k, v in self._rows.items()]
+        if predicate is not None:
+            items = [(k, v) for k, v in items if predicate(k, v)]
+        return items
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._rows)
+
+    # -- (de)serialization ---------------------------------------------------
+    def to_obj(self) -> dict:
+        with self._lock:
+            return {"name": self.name, "columns": self.columns,
+                    "rows": [(k, v) for k, v in self._rows.items()]}
+
+    @staticmethod
+    def from_obj(obj: dict) -> "Table":
+        t = Table(obj["name"], obj["columns"])
+        for k, v in obj["rows"]:
+            t._rows[k] = v
+        return t
+
+
+class Database:
+    """One database: a set of tables behind a single name."""
+
+    def __init__(self, name: str, engine: str = "memkv", path: str | None = None):
+        if engine not in ("memkv", "filekv"):
+            raise StateError(f"unknown engine {engine!r}")
+        self.name = name
+        self.engine = engine
+        self.path = path
+        self._tables: dict[str, Table] = {}
+        self._lock = threading.RLock()
+        if engine == "filekv":
+            if not path:
+                raise StateError("filekv engine needs a path")
+            if os.path.exists(path):
+                self._load()
+
+    def create_table(self, name: str, columns: Iterable[str] | None = None) -> Table:
+        with self._lock:
+            if name in self._tables:
+                raise StateError(f"table {name!r} exists")
+            t = Table(name, columns)
+            self._tables[name] = t
+            return t
+
+    def table(self, name: str) -> Table:
+        with self._lock:
+            if name not in self._tables:
+                raise StateError(f"no table {name!r} in database {self.name!r}")
+            return self._tables[name]
+
+    def ensure_table(self, name: str, columns: Iterable[str] | None = None) -> Table:
+        with self._lock:
+            if name not in self._tables:
+                return self.create_table(name, columns)
+            return self._tables[name]
+
+    def tables(self) -> list[str]:
+        with self._lock:
+            return sorted(self._tables)
+
+    def drop_table(self, name: str) -> None:
+        with self._lock:
+            self._tables.pop(name, None)
+
+    # -- persistence (filekv) -------------------------------------------------
+    def flush(self) -> None:
+        if self.engine != "filekv":
+            return
+        with self._lock:
+            obj = {"name": self.name, "ts": time.time(),
+                   "tables": [t.to_obj() for t in self._tables.values()]}
+        blob = zstandard.ZstdCompressor(level=3).compress(
+            msgpack.packb(obj, default=_default, use_bin_type=True))
+        tmp = f"{self.path}.tmp"
+        with open(tmp, "wb") as f:
+            f.write(blob)
+        os.replace(tmp, self.path)  # atomic commit
+
+    def _load(self) -> None:
+        with open(self.path, "rb") as f:
+            blob = f.read()
+        obj = msgpack.unpackb(zstandard.ZstdDecompressor().decompress(blob),
+                              ext_hook=_ext_hook, raw=False, strict_map_key=False)
+        for tobj in obj["tables"]:
+            t = Table.from_obj(tobj)
+            self._tables[t.name] = t
+
+
+class StateStore:
+    """Platform-level registry of databases; the Operator installs them."""
+
+    def __init__(self, root: str | None = None):
+        self._dbs: dict[str, Database] = {}
+        self._lock = threading.RLock()
+        self._root = root
+
+    def create(self, name: str, engine: str = "memkv",
+               tables: Mapping[str, Iterable[str]] | None = None) -> Database:
+        with self._lock:
+            if name in self._dbs:
+                raise StateError(f"database {name!r} exists")
+            path = None
+            if engine == "filekv":
+                if not self._root:
+                    raise StateError("StateStore has no root dir for filekv databases")
+                os.makedirs(self._root, exist_ok=True)
+                path = os.path.join(self._root, f"{name}.dxdb")
+            db = Database(name, engine, path)
+            for tname, cols in (tables or {}).items():
+                db.ensure_table(tname, cols)
+            self._dbs[name] = db
+            return db
+
+    def get(self, name: str) -> Database:
+        with self._lock:
+            if name not in self._dbs:
+                raise StateError(f"no database {name!r}")
+            return self._dbs[name]
+
+    def exists(self, name: str) -> bool:
+        with self._lock:
+            return name in self._dbs
+
+    def drop(self, name: str) -> None:
+        with self._lock:
+            db = self._dbs.pop(name, None)
+        if db is not None and db.engine == "filekv" and db.path and os.path.exists(db.path):
+            os.remove(db.path)
+
+    def names(self) -> list[str]:
+        with self._lock:
+            return sorted(self._dbs)

@@ -1,0 +1,4 @@
+"""Data pipeline: corpus driver + packing/batching AUs + modality stubs."""
+from . import corpus, pipeline
+
+__all__ = ["corpus", "pipeline"]

@@ -1,0 +1,52 @@
+"""Synthetic LM corpus — the 'sensor' of the training application.
+
+A driver (DataX entity) that emits documents: variable-length token
+sequences with Zipfian token statistics (deterministic per seed+doc-id, so
+restarts resume identically).  Real deployments swap this driver for a file
+or object-store reader; the downstream stream graph is unchanged — that is
+the paper's stream-reuse claim doing real work.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.schema import ConfigSchema, FieldSpec, StreamSchema
+
+CORPUS_CONFIG = ConfigSchema.of(
+    vocab=("int", 32000),
+    seed=("int", 0),
+    mean_doc_len=("int", 512),
+    n_docs=("int", 1_000_000),
+    start_doc=("int", 0),
+)
+
+CORPUS_SCHEMA = StreamSchema.of(
+    doc_id=FieldSpec("int"),
+    tokens=FieldSpec("ndarray", shape=(-1,), dtype="int32"),
+)
+
+
+def synth_doc(doc_id: int, vocab: int, mean_len: int, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(np.uint64(seed) * np.uint64(1_000_003)
+                                + np.uint64(doc_id))
+    length = int(np.clip(rng.geometric(1.0 / mean_len), 8, 4 * mean_len))
+    # zipf-ish unigram over the vocab, cheap approximation
+    u = rng.random(length)
+    toks = np.minimum((vocab - 2) * u ** 3, vocab - 2).astype(np.int32) + 1
+    toks[0] = 0  # BOS
+    return toks
+
+
+def corpus_driver(ctx):
+    """Callback-style driver factory: yields {'doc_id', 'tokens'}."""
+    cfg = ctx.config
+
+    def gen():
+        for doc_id in range(cfg["start_doc"], cfg["n_docs"]):
+            if not ctx.running:
+                return
+            yield {"doc_id": doc_id,
+                   "tokens": synth_doc(doc_id, cfg["vocab"],
+                                       cfg["mean_doc_len"], cfg["seed"])}
+
+    return gen()

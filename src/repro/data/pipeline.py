@@ -1,0 +1,70 @@
+"""Host-side data pipeline AUs: sequence packing and batching.
+
+These are DataX analytics units (the paper's transformation microservices):
+
+  corpus (sensor) --docs--> packer (AU) --sequences--> batcher (AU) --batches-->
+      device-feed / train-step (device AU)
+
+The packer concatenates documents into fixed-length training sequences
+(standard LM sequence packing; no padding waste).  The batcher accumulates
+``global_batch`` sequences into one numpy batch message.  Both are pure
+business logic against the 3-method SDK — zero communication code, which is
+the paper's productivity claim made concrete.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.schema import ConfigSchema, FieldSpec, StreamSchema
+
+PACKER_CONFIG = ConfigSchema.of(seq_len=("int", 1024))
+PACKED_SCHEMA = StreamSchema.of(
+    tokens=FieldSpec("ndarray", shape=(-1,), dtype="int32"))
+
+BATCHER_CONFIG = ConfigSchema.of(batch=("int", 8))
+BATCH_SCHEMA = StreamSchema.of(
+    tokens=FieldSpec("ndarray", shape=(-1, -1), dtype="int32"),
+    labels=FieldSpec("ndarray", shape=(-1, -1), dtype="int32"),
+)
+
+
+def packer_au(ctx):
+    """Concatenate docs into (seq_len+1)-token sequences (+1 for the label
+    shift); carries leftover tokens across documents."""
+    seq_len = ctx.config["seq_len"] + 1
+    buf: list[np.ndarray] = []
+    buffered = 0
+
+    def process(stream: str, payload: dict):
+        nonlocal buffered
+        buf.append(np.asarray(payload["tokens"], dtype=np.int32))
+        buffered += len(buf[-1])
+        out = []
+        if buffered >= seq_len:
+            cat = np.concatenate(buf)
+            n = len(cat) // seq_len
+            for i in range(n):
+                out.append({"tokens": cat[i * seq_len:(i + 1) * seq_len]})
+            rest = cat[n * seq_len:]
+            buf.clear()
+            buf.append(rest)
+            buffered = len(rest)
+        return out
+
+    return process
+
+
+def batcher_au(ctx):
+    """Collect `batch` sequences -> {'tokens': [B,S], 'labels': [B,S]}."""
+    batch = ctx.config["batch"]
+    acc: list[np.ndarray] = []
+
+    def process(stream: str, payload: dict):
+        acc.append(np.asarray(payload["tokens"], dtype=np.int32))
+        if len(acc) < batch:
+            return None
+        seqs = np.stack(acc)
+        acc.clear()
+        return {"tokens": seqs[:, :-1].copy(), "labels": seqs[:, 1:].copy()}
+
+    return process

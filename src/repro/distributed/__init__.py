@@ -1,0 +1,4 @@
+"""Distribution layer: sharding rules, ZeRO, compressed collectives."""
+from . import sharding
+
+__all__ = ["sharding"]

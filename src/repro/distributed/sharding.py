@@ -1,0 +1,259 @@
+"""Sharding rules: parameter/batch/cache PartitionSpecs per architecture.
+
+This is the platform's "automated data communication" at the device level
+(DESIGN.md §2): the operator derives every pjit sharding from the stream
+schemas + mesh — users never write a PartitionSpec.
+
+Axis meanings (launch.mesh):
+  pod    — data parallelism across pods (hierarchical gradient reduction)
+  data   — within-pod data parallelism; also the FSDP/ZeRO axis when
+           run.zero3 is set (params/optimizer sharded over it)
+  model  — tensor parallelism (heads / FFN hidden / experts' hidden / SSM
+           inner channels / vocab)
+
+Rules are path-based over the param pytree; trailing-dim specs are defined
+per weight kind and left-padded with None for stacked-layer leading dims.
+Divisibility is checked: a dim is only sharded when the axis size divides it
+(e.g. whisper's 20 heads are NOT sharded 16-way — its attention runs
+data-parallel while its MLP is tensor-parallel; recorded per-arch).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunConfig
+
+
+# ---------------------------------------------------------------------------
+# Helpers
+# ---------------------------------------------------------------------------
+
+def axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def _div(dim: int, n: int) -> bool:
+    return n > 0 and dim % n == 0
+
+
+def batch_axes(mesh: Mesh) -> tuple:
+    """The data-parallel axes: ('pod', 'data') when pod exists."""
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def batch_spec_for(mesh: Mesh, global_batch: int, extra_dims: int) -> P:
+    """Shard the leading batch dim over as many DP axes as divide it."""
+    axes = []
+    prod = 1
+    for a in batch_axes(mesh):
+        if _div(global_batch, prod * axis_size(mesh, a)):
+            axes.append(a)
+            prod *= axis_size(mesh, a)
+    lead = tuple(axes) if axes else None
+    return P(lead, *([None] * extra_dims))
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules
+# ---------------------------------------------------------------------------
+
+def _param_rule(path: tuple[str, ...], shape: tuple[int, ...],
+                cfg: ModelConfig, run: RunConfig, mesh: Mesh) -> P:
+    """Trailing-dims PartitionSpec for one weight; leading stack dims padded."""
+    tp = axis_size(mesh, "model")
+    dp = axis_size(mesh, "data")
+    name = path[-1]
+    ctx = path[-2] if len(path) >= 2 else ""
+    H, KH = cfg.n_heads, cfg.n_kv_heads
+    Dh = cfg.resolved_head_dim
+
+    # fsdp axis on a given dim only if divisible
+    def fs(dim: int):
+        return "data" if (run.zero3 and _div(dim, dp)) else None
+
+    def mp(dim: int, ok: bool = True):
+        return "model" if (ok and _div(dim, tp)) else None
+
+    heads_shardable = _div(H, tp)          # q/o projections
+    kv_shardable = _div(KH, tp)            # k/v projections (GQA: often not)
+
+    spec: tuple
+    if name == "table":                    # embedding [V, D]
+        if cfg.tie_embeddings:
+            # vocab-sharded (logits stay sharded for the xent); lookup is a
+            # one-hot einsum so the sharded-V contraction partitions cleanly
+            spec = (mp(shape[-2]), None)
+        else:
+            # D-sharded: the token gather is then communication-free
+            spec = (None, mp(shape[-1]))
+    elif name == "unembed":                # [D, V]
+        spec = (fs(shape[-2]), mp(shape[-1]))
+    elif name == "enc_pos":                # [F, D]
+        spec = (None, None)
+    elif name == "scale":                  # norm scales; shard only SSM gate
+        if ctx == "gate_norm":
+            spec = (mp(shape[-1]),)
+        else:
+            spec = (None,)
+    elif name == "wq":                     # [D, H*Dh]
+        spec = (fs(shape[-2]), mp(shape[-1], heads_shardable))
+    elif name in ("wk", "wv"):             # [D, KH*Dh]
+        spec = (fs(shape[-2]), mp(shape[-1], kv_shardable))
+    elif name == "wo":                     # [H*Dh, D]
+        spec = (mp(shape[-2], heads_shardable), fs(shape[-1]))
+    elif name in ("w_gate", "w_up"):
+        if len(shape) >= 3 and shape[-3] == getattr(cfg.moe, "num_experts", -1):
+            # MoE experts [E, D, F]: expert-TP on F + FSDP on D
+            spec = (None, fs(shape[-2]), mp(shape[-1]))
+        else:                              # [D, F]
+            spec = (fs(shape[-2]), mp(shape[-1]))
+    elif name == "w_down":
+        if len(shape) >= 3 and shape[-3] == getattr(cfg.moe, "num_experts", -1):
+            spec = (None, mp(shape[-2]), fs(shape[-1]))
+        else:                              # [F, D]
+            spec = (mp(shape[-2]), fs(shape[-1]))
+    elif name == "router":                 # [D, E]
+        spec = (None, None)
+    elif name in ("w_z", "w_xBC"):         # [D, d_in] / [D, conv_dim]
+        spec = (fs(shape[-2]), mp(shape[-1]))
+    elif name == "w_dt":                   # [D, nheads]
+        spec = (fs(shape[-2]), mp(shape[-1]))
+    elif name == "conv_w":                 # [W, conv_dim]
+        spec = (None, mp(shape[-1]))
+    elif name == "conv_b":                 # [conv_dim]
+        spec = (mp(shape[-1]),)
+    elif name in ("A_log", "D", "dt_bias"):  # [nheads]
+        spec = (mp(shape[-1]),)
+    elif name == "out_proj":               # [d_in, D]
+        spec = (mp(shape[-2]), fs(shape[-1]))
+    else:
+        spec = tuple(None for _ in shape)
+
+    pad = len(shape) - len(spec)
+    assert pad >= 0, (path, shape, spec)
+    return P(*([None] * pad + list(spec)))
+
+
+def _path_names(path) -> tuple[str, ...]:
+    out = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            out.append(str(p.key))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            out.append(p.name)
+        else:
+            out.append(str(p))
+    return tuple(out)
+
+
+def param_specs(params_shape: Any, cfg: ModelConfig, run: RunConfig,
+                mesh: Mesh) -> Any:
+    """Pytree of PartitionSpec matching a params (shape) pytree."""
+    def rule(path, leaf):
+        return _param_rule(_path_names(path), tuple(leaf.shape), cfg, run, mesh)
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def param_shardings(params_shape: Any, cfg: ModelConfig, run: RunConfig,
+                    mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params_shape, cfg, run, mesh))
+
+
+# ---------------------------------------------------------------------------
+# Optimizer-state rules (ZeRO-1)
+# ---------------------------------------------------------------------------
+
+def opt_state_spec_from_param(spec: P, shape: tuple[int, ...],
+                              run: RunConfig, mesh: Mesh) -> P:
+    """Adam m/v: same layout as the param, plus ZeRO-1 sharding of the first
+    unsharded divisible dim over 'data' (when the param isn't already
+    data-sharded via zero3)."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    flat = []
+    for e in entries:
+        flat.extend(e if isinstance(e, tuple) else [e])
+    if "data" in flat:
+        return P(*entries)
+    dp = axis_size(mesh, "data")
+    for i, e in enumerate(entries):
+        if e is None and shape[i] % dp == 0 and shape[i] >= dp:
+            entries[i] = "data"
+            break
+    return P(*entries)
+
+
+# ---------------------------------------------------------------------------
+# Cache / batch rules
+# ---------------------------------------------------------------------------
+
+def cache_specs(cache_shape: Any, cfg: ModelConfig, run: RunConfig,
+                mesh: Mesh, batch: int) -> Any:
+    """Decode-state shardings.
+
+    KV caches [L, B, S, KH, Dh]: batch->data when divisible; seq->model when
+    run.seq_shard_kv (flash-decoding-style sharded cache reads; softmax
+    reductions over the sharded seq become all-reduces).  SSM states
+    [L, B, H, N, P]: batch->data, heads->model.  Conv states: channel->model.
+    """
+    dp = axis_size(mesh, "data")
+    tp = axis_size(mesh, "model")
+    b_axis = "data" if _div(batch, dp) else None
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        shape = tuple(leaf.shape)
+        if name in ("k", "v", "xk", "xv"):
+            s_axis = "model" if (run.seq_shard_kv and _div(shape[2], tp)) else None
+            kh_axis = None
+            if s_axis is None and _div(shape[3], tp):
+                kh_axis = "model"
+            return P(None, b_axis, s_axis, kh_axis, None)
+        if name == "ssm":                   # [L, B, H, N, P]
+            h_axis = "model" if _div(shape[2], tp) else None
+            return P(None, b_axis, h_axis, None, None)
+        if name == "conv":                  # [L, B, W-1, conv_dim]
+            c_axis = "model" if _div(shape[3], tp) else None
+            return P(None, b_axis, None, c_axis)
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+
+def batch_specs(batch_shape: Any, mesh: Mesh) -> Any:
+    """Token batches: leading dim over DP axes; scalars replicated."""
+    def rule(path, leaf):
+        shape = tuple(leaf.shape)
+        if not shape:
+            return P()
+        return batch_spec_for(mesh, shape[0], len(shape) - 1)
+    return jax.tree_util.tree_map_with_path(rule, batch_shape)
+
+
+def to_shardings(spec_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s,
+        spec_tree, is_leaf=lambda s: isinstance(s, P))
+
+
+def sharding_report(params_shape: Any, specs: Any, mesh: Mesh) -> dict:
+    """Bytes-per-device accounting (pre-compile sanity check)."""
+    total = 0
+    per_dev = 0
+    for leaf, spec in zip(jax.tree.leaves(params_shape),
+                          jax.tree.leaves(specs,
+                                          is_leaf=lambda s: isinstance(s, P))):
+        n = int(np.prod(leaf.shape)) if leaf.shape else 1
+        bytes_ = n * jax.dtypes.canonicalize_dtype(leaf.dtype).itemsize
+        shards = 1
+        for e in spec:
+            for a in (e if isinstance(e, tuple) else [e] if e else []):
+                shards *= axis_size(mesh, a)
+        total += bytes_
+        per_dev += bytes_ / max(shards, 1)
+    return {"total_bytes": int(total), "bytes_per_device": int(per_dev)}

@@ -1,0 +1,44 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode — the kernel
+body runs in Python per grid step, bit-accurate to the TPU lowering's
+semantics.  On TPU they compile to Mosaic.  `interpret=None` auto-detects.
+"""
+from __future__ import annotations
+
+import jax
+
+from . import decode_attention as _da
+from . import flash_attention as _fa
+from . import rmsnorm as _rn
+from . import ssd_scan as _ss
+
+
+def _auto(interpret: bool | None) -> bool:
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool | None = None):
+    return _fa.flash_attention(q, k, v, causal=causal, block_q=block_q,
+                               block_k=block_k, interpret=_auto(interpret))
+
+
+def decode_attention(q, k_cache, v_cache, lens, *, block_s: int = 512,
+                     interpret: bool | None = None):
+    return _da.decode_attention(q, k_cache, v_cache, lens, block_s=block_s,
+                                interpret=_auto(interpret))
+
+
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 128, block_h: int = 8,
+             interpret: bool | None = None):
+    return _ss.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, block_h=block_h,
+                        interpret=_auto(interpret))
+
+
+def rmsnorm(x, w, *, eps: float = 1e-6, block_rows: int = 256,
+            interpret: bool | None = None):
+    return _rn.rmsnorm(x, w, eps=eps, block_rows=block_rows,
+                       interpret=_auto(interpret))

@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+Deliberately simple O(S²)/sequential implementations — readable, obviously
+correct, and independent of the kernels' blocking strategy.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """q: [B,Sq,H,Dh]; k/v: [B,Sk,KH,Dh] (GQA: H = KH·G)."""
+    B, Sq, H, Dh = q.shape
+    Sk, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    qg = q.reshape(B, Sq, KH, G, Dh).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bckd->bqkgc", qg, k.astype(jnp.float32))
+    s = s / math.sqrt(Dh)
+    if causal:
+        mask = jnp.arange(Sk)[None, :] > jnp.arange(Sq)[:, None]
+        s = jnp.where(mask[None, :, None, None, :], -2.0e30, s)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqkgc,bckd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, Dh).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, lens):
+    """q: [B,H,Dh]; caches [B,S,KH,Dh]; lens [B]."""
+    B, H, Dh = q.shape
+    S, KH = k_cache.shape[1], k_cache.shape[2]
+    G = H // KH
+    qg = q.reshape(B, KH, G, Dh).astype(jnp.float32) / math.sqrt(Dh)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache.astype(jnp.float32))
+    valid = jnp.arange(S)[None, :] < lens[:, None]
+    s = jnp.where(valid[:, None, None, :], s, -2.0e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, H, Dh).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, A, Bm, Cm):
+    """Sequential state-space recurrence (the SSD ground truth).
+
+    x [B,L,H,P]; dt [B,L,H]; A [H]; Bm/Cm [B,L,G,N].
+    Returns (y [B,L,H,P], final_state [B,H,N,P]).
+    """
+    Bsz, L, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    HperG = H // G
+    f32 = jnp.float32
+    Bh = jnp.repeat(Bm.astype(f32), HperG, axis=2)   # [B,L,H,N]
+    Ch = jnp.repeat(Cm.astype(f32), HperG, axis=2)
+
+    def step(S, inputs):
+        x_t, dt_t, B_t, C_t = inputs                 # [B,H,P],[B,H],[B,H,N]x2
+        a = jnp.exp(dt_t * A.astype(f32))            # [B,H]
+        S = S * a[:, :, None, None] + jnp.einsum(
+            "bhn,bhp->bhnp", B_t, x_t.astype(f32) * dt_t[..., None])
+        y = jnp.einsum("bhn,bhnp->bhp", C_t, S)
+        return S, y
+
+    S0 = jnp.zeros((Bsz, H, N, P), f32)
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt.astype(f32), 1, 0),
+          jnp.moveaxis(Bh, 1, 0), jnp.moveaxis(Ch, 1, 0))
+    S_final, ys = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), S_final
+
+
+def rmsnorm_ref(x, w, *, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)
+            * w.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,5 @@
+"""Launchers: mesh definitions, dry-run, train/serve drivers.
+
+NOTE: repro.launch.dryrun sets XLA_FLAGS at import — import it only in a
+fresh process (its __main__ entry).  Everything else here is import-safe.
+"""

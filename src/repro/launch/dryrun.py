@@ -1,0 +1,162 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first init.
+# The dry-run (and ONLY the dry-run) builds the 512-chip production meshes.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware:
+
+  * (16, 16) single-pod mesh  — 256 chips; the roofline table reads this.
+  * (2, 16, 16) multi-pod mesh — 512 chips; proves the 'pod' axis shards.
+
+For each cell: jit(step).lower(**input_specs).compile(), then record
+memory_analysis (fits-on-chip proof), cost_analysis (FLOPs/bytes) and the
+collective schedule parsed from the optimized HLO -> JSON in
+experiments/dryrun/ consumed by EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod | --both]
+"""
+import argparse
+import gzip
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import (ARCHS, SHAPES_BY_NAME, get_config, shapes_for,
+                           skipped_shapes_for)
+from repro.launch import presets
+from repro.launch.inputs import input_specs
+from repro.launch.mesh import make_production_mesh
+from repro.roofline import analysis as roofline
+from repro.train import steps
+
+
+def _mesh_desc(mesh) -> str:
+    return "x".join(f"{k}={v}" for k, v in mesh.shape.items())
+
+
+def build_lowered(arch: str, shape_name: str, mesh, run=None):
+    """Lower one cell; returns (lowered, cfg, run, n_chips)."""
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    run = run or presets.run_preset(cfg, shape)
+    specs = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        fn, (params_shape, opt_shape) = steps.jit_train_step(
+            cfg, run, mesh, specs["batch"])
+        lowered = fn.lower(params_shape, opt_shape, specs["batch"])
+    elif shape.kind == "prefill":
+        fn, params_shape = steps.jit_prefill_step(cfg, run, mesh,
+                                                  specs["batch"])
+        lowered = fn.lower(params_shape, specs["batch"])
+    else:
+        fn, (params_shape, cache_shape) = steps.jit_decode_step(
+            cfg, run, mesh, shape.global_batch, shape.seq_len, specs["batch"])
+        lowered = fn.lower(params_shape, specs["cache"], specs["batch"])
+    return lowered, cfg, run, mesh.devices.size
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             out_dir: str = "experiments/dryrun", run=None,
+             tag: str = "") -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    shape = SHAPES_BY_NAME[shape_name]
+    t0 = time.monotonic()
+    lowered, cfg, run, chips = build_lowered(arch, shape_name, mesh, run)
+    t1 = time.monotonic()
+    compiled = lowered.compile()
+    t2 = time.monotonic()
+
+    mem = compiled.memory_analysis()
+    r = roofline.analyze(
+        compiled, arch=arch, shape_name=shape_name, mesh_desc=_mesh_desc(mesh),
+        chips=chips, model_flops=roofline.model_flops_for(cfg, shape),
+        notes=f"remat={run.remat} mb={run.microbatches} zero3={run.zero3}")
+    result = r.to_dict()
+    result.update({
+        "lower_s": round(t1 - t0, 2),
+        "compile_s": round(t2 - t1, 2),
+        "memory_analysis": {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "alias_bytes": int(getattr(mem, "alias_size_in_bytes", 0)),
+            "generated_code_bytes": int(
+                getattr(mem, "generated_code_size_in_bytes", 0)),
+        },
+        "ok": True,
+    })
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    cell = f"{arch}__{shape_name}__{'pod2' if multi_pod else 'pod1'}{suffix}"
+    with open(os.path.join(out_dir, f"{cell}.json"), "w") as f:
+        json.dump(result, f, indent=2)
+    # cache the optimized HLO so roofline models can be re-derived without
+    # recompiling (perf-iteration loop reads these)
+    hlo_dir = os.path.join(os.path.dirname(out_dir.rstrip("/")), "hlo")
+    os.makedirs(hlo_dir, exist_ok=True)
+    with gzip.open(os.path.join(hlo_dir, f"{cell}.hlo.gz"), "wt") as f:
+        f.write(compiled.as_text())
+    return result
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=list(ARCHS), default=None)
+    ap.add_argument("--shape", choices=list(SHAPES_BY_NAME), default=None)
+    ap.add_argument("--all", action="store_true", help="sweep all cells")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both", action="store_true",
+                    help="run single-pod AND multi-pod meshes")
+    ap.add_argument("--out-dir", default="experiments/dryrun")
+    ap.add_argument("--continue-on-error", action="store_true")
+    args = ap.parse_args(argv)
+
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        for arch in ARCHS:
+            for shape in shapes_for(arch):
+                cells.append((arch, shape.name))
+            for shape_name, reason in skipped_shapes_for(arch):
+                print(f"SKIP {arch} × {shape_name}: {reason}")
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    meshes = [False, True] if args.both else [args.multi_pod]
+    failures = 0
+    for arch, shape_name in cells:
+        for mp in meshes:
+            label = f"{arch} × {shape_name} × {'pod2' if mp else 'pod1'}"
+            try:
+                r = run_cell(arch, shape_name, multi_pod=mp,
+                             out_dir=args.out_dir)
+                print(f"OK   {label}: "
+                      f"flops/dev={r['flops_per_device']:.3e} "
+                      f"bytes/dev={r['bytes_per_device']:.3e} "
+                      f"wire/dev={r['wire_bytes_per_device']:.3e} "
+                      f"bottleneck={r['bottleneck']} "
+                      f"peak_mem={r['peak_memory_bytes']/2**30:.2f}GiB "
+                      f"(lower {r['lower_s']}s compile {r['compile_s']}s)")
+                sys.stdout.flush()
+            except Exception:
+                failures += 1
+                print(f"FAIL {label}\n{traceback.format_exc()}")
+                sys.stdout.flush()
+                if not args.continue_on_error:
+                    return 1
+    print(f"dry-run complete: {len(cells)*len(meshes)-failures} ok, "
+          f"{failures} failed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,68 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, zero allocation — the dry-run lowers against
+these.  Modality frontends are STUBS per the assignment: whisper gets
+precomputed frame embeddings [B, F, D]; qwen2-vl gets token ids + M-RoPE
+position ids [B, 3, S] (patch embedder not modelled).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro import models
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    batch = {
+        "tokens": _sds((B, S), "int32"),
+        "labels": _sds((B, S), "int32"),
+    }
+    if cfg.family == "encdec":
+        batch["frames"] = _sds((B, cfg.encoder_seq, cfg.d_model),
+                               cfg.activation_dtype)
+    if cfg.mrope:
+        batch["positions"] = _sds((B, 3, S), "int32")
+    return batch
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    batch = {"tokens": _sds((B, S), "int32")}
+    if cfg.family == "encdec":
+        batch["frames"] = _sds((B, cfg.encoder_seq, cfg.d_model),
+                               cfg.activation_dtype)
+    if cfg.mrope:
+        batch["positions"] = _sds((B, 3, S), "int32")
+    return batch
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B = shape.global_batch
+    return {
+        "tokens": _sds((B, 1), "int32"),
+        "seq_lens": _sds((B,), "int32"),
+    }
+
+
+def decode_cache_specs(cfg: ModelConfig, shape: ShapeConfig):
+    return jax.eval_shape(functools.partial(
+        models.init_cache, cfg, shape.global_batch, shape.seq_len))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """All device-input stand-ins for one (arch × shape) cell."""
+    if shape.kind == "train":
+        return {"batch": train_input_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"batch": prefill_input_specs(cfg, shape)}
+    return {"batch": decode_input_specs(cfg, shape),
+            "cache": decode_cache_specs(cfg, shape)}

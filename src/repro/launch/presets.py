@@ -1,0 +1,64 @@
+"""Per-(arch × shape) RunConfig presets: the distribution knobs the platform
+operator picks for each cell (microbatching, FSDP, remat, cache sharding).
+
+These are the BASELINE settings recorded in EXPERIMENTS.md §Roofline; the
+hillclimb iterates on three cells from here.  Rationale per knob:
+
+* zero3 (FSDP over 'data'): on for training runs of >10B-param archs —
+  otherwise optimizer state per chip exceeds v5e HBM.  Off for serving
+  (per-layer param all-gathers are latency poison) except grok-1, whose
+  633 GB of bf16 experts cannot fit 16-way TP alone even for inference.
+* microbatches: sized so saved layer inputs (#layers × B_local × S × D × 2B)
+  stay under ~6 GB/chip with full remat.
+* remat: 'full' for train, 'none' for inference.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+
+_TRAIN_MICROBATCH = {
+    "qwen3-32b": 16,
+    "minitron-4b": 4,
+    "qwen3-14b": 16,
+    "granite-34b": 16,
+    "whisper-large-v3": 4,
+    "qwen2-vl-72b": 16,
+    "grok-1-314b": 16,
+    "granite-moe-3b-a800m": 4,
+    "mamba2-370m": 4,
+    "zamba2-2.7b": 8,
+}
+
+_ZERO3_TRAIN = {"qwen3-32b", "qwen3-14b", "granite-34b", "qwen2-vl-72b",
+                "grok-1-314b"}
+_ZERO3_SERVE = {"grok-1-314b"}
+
+
+def run_preset(cfg: ModelConfig, shape: ShapeConfig) -> RunConfig:
+    if shape.kind == "train":
+        return RunConfig(
+            microbatches=_TRAIN_MICROBATCH.get(cfg.name, 4),
+            remat="full",
+            zero3=cfg.name in _ZERO3_TRAIN,
+            attention_impl="chunked",
+            attention_chunk=1024,
+        )
+    if shape.kind == "prefill":
+        return RunConfig(
+            microbatches=1, remat="none",
+            zero3=cfg.name in _ZERO3_SERVE,
+            attention_impl="chunked", attention_chunk=1024,
+        )
+    # decode
+    return RunConfig(
+        microbatches=1, remat="none",
+        zero3=cfg.name in _ZERO3_SERVE,
+        seq_shard_kv=True,
+        attention_impl="chunked", attention_chunk=1024,
+    )
+
+
+def with_overrides(run: RunConfig, **kw) -> RunConfig:
+    return dataclasses.replace(run, **kw)

@@ -1,0 +1,6 @@
+"""Model zoo: composable layers + family assemblies (see transformer.py)."""
+from . import layers, mamba2, moe, transformer
+from .transformer import decode_step, forward, init, init_cache
+
+__all__ = ["layers", "mamba2", "moe", "transformer",
+           "init", "forward", "init_cache", "decode_step"]

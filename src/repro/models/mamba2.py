@@ -1,0 +1,280 @@
+"""Mamba2 — SSD (state-space duality) mixer layer (arXiv:2405.21060).
+
+The SSD chunked algorithm in pure JAX (the Pallas kernel in repro.kernels
+accelerates the intra-chunk part on TPU):
+
+  per head h, with per-step decay a_t = exp(dt_t * A_h):
+    intra-chunk:  Y_ij = C_i·B_j · exp(Σ_{j<r<=i} log a_r) · (dt_j x_j), i>=j
+    chunk state:  S_c  = Σ_j exp(Σ_{j<r<=last} log a_r) B_j ⊗ (dt_j x_j)
+    inter-chunk:  recurrence S <- decay(chunk) · S + S_c  (lax.scan over chunks)
+    output:       y_i += C_i · S_prev · exp(Σ_{r<=i} log a_r)
+
+Decode is the O(1) recurrent update:  S <- a·S + B⊗(dt·x);  y = C·S + D·x.
+
+Layer wiring follows the Mamba2 block: in_proj -> (z, xBC, dt); causal
+depthwise conv over xBC; SSD; gated RMSNorm; out_proj.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.distributed.act_sharding import constrain
+
+from .layers import cdiv, init_rmsnorm, rmsnorm_apply
+
+
+# ---------------------------------------------------------------------------
+# Dimensions
+# ---------------------------------------------------------------------------
+
+def ssm_dims(cfg: ModelConfig) -> dict:
+    s = cfg.ssm or SSMConfig()
+    d_in = s.expand * cfg.d_model
+    nheads = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.n_groups * s.state_dim
+    return {"d_inner": d_in, "nheads": nheads, "conv_dim": conv_dim,
+            "state": s.state_dim, "head_dim": s.head_dim,
+            "groups": s.n_groups, "conv_width": s.conv_width,
+            "chunk": s.chunk_size}
+
+
+def init_mamba2(key: jax.Array, cfg: ModelConfig, dtype) -> dict:
+    """Separate z / xBC / dt projections (instead of one fused in_proj) so
+    each output dim gets a clean tensor-parallel sharding — a fused matrix
+    sliced at non-shard boundaries would force collective-permutes."""
+    dm = ssm_dims(cfg)
+    d = cfg.d_model
+    d_in, nheads, conv_dim = dm["d_inner"], dm["nheads"], dm["conv_dim"]
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    s_in = 1.0 / math.sqrt(d)
+    return {
+        "w_z": (jax.random.normal(k1, (d, d_in)) * s_in).astype(dtype),
+        "w_xBC": (jax.random.normal(k2, (d, conv_dim)) * s_in).astype(dtype),
+        "w_dt": (jax.random.normal(k3, (d, nheads)) * s_in).astype(dtype),
+        "conv_w": (jax.random.normal(k5, (dm["conv_width"], conv_dim))
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads)).astype(jnp.float32),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "gate_norm": init_rmsnorm(d_in, dtype),
+        "out_proj": (jax.random.normal(k4, (d_in, d))
+                     / math.sqrt(d_in)).astype(dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv
+# ---------------------------------------------------------------------------
+
+def causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x: [B, L, C]; w: [W, C] depthwise; left-pad to keep causality."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(W):  # W is tiny (4); unrolled adds, no gather
+        out = out + xp[:, i:i + x.shape[1], :] * w[i]
+    return out + b
+
+
+def conv_step(x_t: jax.Array, conv_state: jax.Array, w: jax.Array,
+              b: jax.Array) -> tuple:
+    """Decode: x_t [B, C]; conv_state [B, W-1, C] (previous inputs)."""
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # [B,W,C]
+    out = jnp.einsum("bwc,wc->bc", window, w) + b
+    return out, window[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# SSD core (chunked, pure JAX)
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bmat: jax.Array,
+                Cmat: jax.Array, chunk: int, init_state: jax.Array | None = None):
+    """SSD scan.
+
+    x:    [B, L, H, P]  (head inputs)
+    dt:   [B, L, H]     (positive step sizes, post-softplus)
+    A:    [H]           (negative per-head decay rates)
+    Bmat: [B, L, G, N]
+    Cmat: [B, L, G, N]
+    Returns (y [B, L, H, P], final_state [B, H, P, N]).
+    """
+    Bsz, L, H, P = x.shape
+    G, N = Bmat.shape[2], Bmat.shape[3]
+    HperG = H // G
+    nchunks = cdiv(L, chunk)
+    pad = nchunks * chunk - L
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bmat = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Lp = nchunks * chunk
+
+    f32 = jnp.float32
+    # reshape to chunks: [B, nc, Q, ...]
+    xq = x.reshape(Bsz, nchunks, chunk, H, P).astype(f32)
+    dtq = dt.reshape(Bsz, nchunks, chunk, H).astype(f32)
+    Bq = Bmat.reshape(Bsz, nchunks, chunk, G, N).astype(f32)
+    Cq = Cmat.reshape(Bsz, nchunks, chunk, G, N).astype(f32)
+
+    dA = dtq * A.astype(f32)                         # [B,nc,Q,H] (negative)
+    cum = jnp.cumsum(dA, axis=2)                     # inclusive cumsum of log-decay
+    seg_total = cum[:, :, -1, :]                     # [B,nc,H]
+
+    xdt = xq * dtq[..., None]                        # dt-weighted inputs
+
+    # ---- intra-chunk (quadratic within chunk) --------------------------------
+    # decay from j to i (i>=j): exp(cum_i - cum_j)
+    li = cum[:, :, :, None, :]                       # [B,nc,Q,1,H]
+    lj = cum[:, :, None, :, :]                       # [B,nc,1,Q,H]
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))[None, None, :, :, None]
+    # clamp BEFORE exp: masked (i<j) entries have li-lj > 0 and can overflow;
+    # exp(inf) at masked positions turns the where-vjp into 0·inf = NaN.
+    # valid entries always have li-lj <= 0 (cum is non-increasing), so the
+    # clamp is exact for them.
+    decay = jnp.where(mask, jnp.exp(jnp.minimum(li - lj, 0.0)), 0.0)
+    # scores: C_i · B_j per group, broadcast to heads
+    cb = jnp.einsum("bcign,bcjgn->bcijg", Cq, Bq)    # [B,nc,Q,Q,G]
+    cb = jnp.repeat(cb, HperG, axis=-1)              # [B,nc,Q,Q,H]
+    M = cb * decay
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", M, xdt)
+
+    # ---- chunk states ----------------------------------------------------------
+    # S_c = Σ_j exp(seg_total - cum_j) B_j ⊗ xdt_j   -> [B,nc,H,N,P]
+    decay_to_end = jnp.exp(seg_total[:, :, None, :] - cum)          # [B,nc,Q,H]
+    Bh = jnp.repeat(Bq, HperG, axis=3) if G != H else Bq            # [B,nc,Q,H,N]
+    states = jnp.einsum("bcqhn,bcqhp,bcqh->bchnp", Bh, xdt, decay_to_end)
+
+    # ---- inter-chunk recurrence (sequential scan over chunks) -----------------
+    def body(S, inputs):
+        state_c, seg_c = inputs                      # [B,H,N,P], [B,H]
+        S_prev = S
+        S = S * jnp.exp(seg_c)[:, :, None, None] + state_c
+        return S, S_prev
+
+    S0 = (init_state.astype(f32) if init_state is not None
+          else jnp.zeros((Bsz, H, N, P), f32))
+    # scan over chunk axis: move nc first
+    states_t = jnp.moveaxis(states, 1, 0)            # [nc,B,H,N,P]
+    seg_t = jnp.moveaxis(seg_total, 1, 0)            # [nc,B,H]
+    final_state, S_prevs = jax.lax.scan(body, S0, (states_t, seg_t))
+    S_prevs = jnp.moveaxis(S_prevs, 0, 1)            # [B,nc,H,N,P]
+
+    # ---- inter-chunk contribution ---------------------------------------------
+    Ch = jnp.repeat(Cq, HperG, axis=3) if G != H else Cq            # [B,nc,Q,H,N]
+    y_inter = jnp.einsum("bcqhn,bchnp,bcqh->bcqhp", Ch, S_prevs,
+                         jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(Bsz, Lp, H, P)
+    if pad:
+        y = y[:, :L]
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode_step(state: jax.Array, x_t: jax.Array, dt_t: jax.Array,
+                    A: jax.Array, B_t: jax.Array, C_t: jax.Array):
+    """One-token recurrence.
+
+    state: [B, H, N, P]; x_t: [B, H, P]; dt_t: [B, H];
+    B_t/C_t: [B, G, N].  Returns (y [B, H, P], new_state).
+    """
+    Bsz, H, N, P = state.shape
+    G = B_t.shape[1]
+    HperG = H // G
+    f32 = jnp.float32
+    state = state.astype(f32)
+    a = jnp.exp(dt_t.astype(f32) * A.astype(f32))           # [B, H]
+    xdt = (x_t.astype(f32) * dt_t.astype(f32)[..., None])   # [B, H, P]
+    Bh = jnp.repeat(B_t.astype(f32), HperG, axis=1)         # [B, H, N]
+    Ch = jnp.repeat(C_t.astype(f32), HperG, axis=1)
+    new_state = state * a[:, :, None, None] + jnp.einsum(
+        "bhn,bhp->bhnp", Bh, xdt)
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, new_state)
+    return y.astype(x_t.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba2 block
+# ---------------------------------------------------------------------------
+
+def _project(params: dict, x: jax.Array):
+    """x: [..., D] -> (z, xBC, dt) via the three separate projections."""
+    return x @ params["w_z"], x @ params["w_xBC"], x @ params["w_dt"]
+
+
+def _split_xBC(xBC: jax.Array, dm: dict):
+    d_in, g, n = dm["d_inner"], dm["groups"], dm["state"]
+    x = xBC[..., :d_in]
+    B = xBC[..., d_in:d_in + g * n]
+    C = xBC[..., d_in + g * n:]
+    return x, B, C
+
+
+def mamba2_apply(params: dict, x: jax.Array, cfg: ModelConfig, *,
+                 impl: str = "chunked", return_state: bool = False):
+    """Full-sequence Mamba2 block.  x: [B, L, D] -> [B, L, D].
+
+    ``return_state=True`` also returns (ssm_state [B,H,N,P] f32,
+    conv_state [B,W-1,conv_dim]) so serving prefill can seed decode."""
+    dm = ssm_dims(cfg)
+    Bsz, L, D = x.shape
+    H, P, G, N = dm["nheads"], dm["head_dim"], dm["groups"], dm["state"]
+    W = dm["conv_width"]
+
+    z, xBC_raw, dt = _project(params, x)
+    z = constrain(z, "batch", "seq", "hidden")
+    xBC_raw = constrain(xBC_raw, "batch", "seq", "channels")
+    xBC = jax.nn.silu(causal_conv(xBC_raw, params["conv_w"], params["conv_b"]))
+    xs, Bm, Cm = _split_xBC(xBC, dm)
+    xs = constrain(xs.reshape(Bsz, L, H, P), "batch", "seq", "heads", None)
+    Bm = Bm.reshape(Bsz, L, G, N)
+    Cm = Cm.reshape(Bsz, L, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        y, final_state = kops.ssd_scan(xs, dt, A, Bm, Cm, chunk=dm["chunk"])
+    else:
+        y, final_state = ssd_chunked(xs, dt, A, Bm, Cm, chunk=dm["chunk"])
+    y = y + xs * params["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(Bsz, L, dm["d_inner"])
+    y = rmsnorm_apply(params["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ params["out_proj"]
+    if not return_state:
+        return out
+    # conv state = last W-1 RAW xBC inputs (pre-conv, pre-silu), left-padded
+    tail = xBC_raw[:, -(W - 1):, :]
+    if L < W - 1:
+        tail = jnp.pad(xBC_raw, ((0, 0), (W - 1 - L, 0), (0, 0)))
+    return out, (final_state, tail)
+
+
+def mamba2_decode(params: dict, x: jax.Array, cfg: ModelConfig,
+                  ssm_state: jax.Array, conv_state: jax.Array):
+    """One-token decode.  x: [B, 1, D]; returns (y [B,1,D], ssm', conv')."""
+    dm = ssm_dims(cfg)
+    Bsz = x.shape[0]
+    H, P, G, N = dm["nheads"], dm["head_dim"], dm["groups"], dm["state"]
+
+    z, xBC, dt = _project(params, x[:, 0, :])
+    xBC, conv_state = conv_step(xBC, conv_state, params["conv_w"],
+                                params["conv_b"])
+    xBC = jax.nn.silu(xBC)
+    xs, Bm, Cm = _split_xBC(xBC, dm)
+    xs = xs.reshape(Bsz, H, P)
+    Bm = Bm.reshape(Bsz, G, N)
+    Cm = Cm.reshape(Bsz, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+
+    y, ssm_state = ssd_decode_step(ssm_state, xs, dt, A, Bm, Cm)
+    y = y + xs * params["D"][None, :, None].astype(y.dtype)
+    y = y.reshape(Bsz, dm["d_inner"])
+    y = rmsnorm_apply(params["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return (y @ params["out_proj"])[:, None, :], ssm_state, conv_state

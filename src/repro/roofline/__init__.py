@@ -1,0 +1,4 @@
+"""Roofline analysis from compiled dry-run artifacts."""
+from . import analysis
+
+__all__ = ["analysis"]

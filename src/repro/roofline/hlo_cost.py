@@ -1,0 +1,401 @@
+"""HLO cost walker: loop-aware FLOPs / HBM-traffic / collective-bytes.
+
+``compiled.cost_analysis()`` counts each while-loop BODY ONCE (verified
+empirically: a 10-iteration scan reports 1/10 the flops of its unrolled
+form), which breaks roofline math for scan-over-layers models.  This module
+re-derives the three roofline inputs by walking the optimized HLO text:
+
+* parse every computation (ENTRY, while bodies/conditions, fusions);
+* walk from ENTRY, multiplying by `known_trip_count` at each while;
+* FLOPs: 2·prod(out_dims)·prod(contracting_dims) per `dot`;
+* HBM traffic: Σ (output + operand bytes) over *materializing* top-level
+  instructions (fusion internals excluded — they live in registers/VMEM;
+  parameter/constant/gte/tuple/bitcast excluded — views, not traffic);
+* collective wire bytes with ring-cost factors (see roofline.analysis).
+
+This is a static model: elementwise FLOPs are ignored (≪ matmul terms) and
+traffic is an upper-ish bound (fusion boundaries on TPU differ from CPU).
+Both caveats are recorded in EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s+([\w\-]+)\((.*)$")
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\((.*)\)\s*->")
+_TRIP_RE = re.compile(r'known_trip_count"?\s*:\s*\{"?n"?\s*:\s*"?(\d+)')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_GROUPS_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_DOT_DIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_dims(shape_str: str) -> list[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def _elem_count(shape_str: str) -> int:
+    n = 1
+    for d in _first_dims(shape_str):
+        n *= d
+    return n
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    op: str
+    operands: list[str]
+    tail: str            # attributes after the operand list
+    is_root: bool
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    params: dict         # name -> shape str
+    instrs: list
+    shapes: dict         # name -> shape str (params + instr outputs)
+
+
+def _split_top(s: str) -> list[str]:
+    """Split on commas at paren/brace depth 0."""
+    out, depth, cur = [], 0, []
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur))
+    return out
+
+
+def _split_call(rest: str) -> tuple[str, str]:
+    """rest = everything after 'op(' -> (operand_str, tail_after_close)."""
+    depth = 1
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return rest[:i], rest[i + 1:]
+    return rest, ""
+
+
+def parse_module(hlo: str) -> dict:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            h = _HEADER_RE.match(line)
+            if h and line.endswith("{"):
+                name = h.group(2)
+                params = {}
+                for part in _split_top(h.group(3)):
+                    part = part.strip()
+                    if not part:
+                        continue
+                    pname, _, pshape = part.partition(":")
+                    params[pname.strip().lstrip("%")] = pshape.strip()
+                cur = Computation(name, params, [], dict(params))
+            continue
+        if line == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        is_root, name, shape, op, rest = m.groups()
+        opers_str, tail = _split_call(rest)
+        opers = [o.strip().lstrip("%").split(" ")[-1].lstrip("%")
+                 for o in _split_top(opers_str) if o.strip()]
+        instr = Instr(name=name, shape=shape.strip(), op=op,
+                      operands=opers, tail=tail, is_root=bool(is_root))
+        cur.instrs.append(instr)
+        cur.shapes[name] = instr.shape
+    return comps
+
+
+_NO_TRAFFIC = {"parameter", "constant", "get-tuple-element", "tuple",
+               "bitcast", "after-all", "partition-id", "replica-id", "iota",
+               # control-flow ops themselves move nothing; their bodies'
+               # instructions account for per-iteration reads/writes
+               "while", "conditional", "call"}
+
+# Ops the TPU compiler reliably fuses into their producers/consumers.  The
+# CPU HLO we analyze leaves many of these at top level (weaker fusion), so
+# counting their operand+output bytes would overstate HBM traffic ~5-10x
+# versus the TPU target.  Their cost is attributed to the anchor ops
+# (dot/fusion/reduce/slice/DUS/copy/...) that bound real fusion clusters.
+_TPU_FUSABLE = {"add", "subtract", "multiply", "divide", "negate", "abs",
+                "exponential", "log", "rsqrt", "sqrt", "tanh", "maximum",
+                "minimum", "compare", "select", "and", "or", "not", "xor",
+                "convert", "broadcast", "reshape", "clamp", "sign",
+                "exponential-minus-one", "log-plus-one", "power", "floor",
+                "ceil", "round-nearest-afz", "is-finite", "reverse",
+                "concatenate", "pad", "logistic"}
+_COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute"}
+
+
+def _dot_flops(instr: Instr, comp: Computation) -> float:
+    out_elems = 1
+    for d in _first_dims(instr.shape):
+        out_elems *= d
+    lhs_shape = comp.shapes.get(instr.operands[0], "")
+    dims = _first_dims(lhs_shape)
+    m = _DOT_DIMS_RE.search(instr.tail)
+    contract = 1
+    if m and dims:
+        for idx in m.group(1).split(","):
+            if idx != "" and int(idx) < len(dims):
+                contract *= dims[int(idx)]
+    return 2.0 * out_elems * contract
+
+
+def _group_size(tail: str) -> int:
+    gm = _GROUPS_RE.search(tail)
+    if gm:
+        first = gm.group(1).split("}")[0].split("{")[-1]
+        n = len([t for t in first.split(",") if t.strip() != ""])
+        if n:
+            return n
+    gi = _GROUPS_IOTA_RE.search(tail)
+    if gi:
+        return int(gi.group(2))
+    return 2
+
+
+def _wire_bytes(instr: Instr, comp: Computation) -> float:
+    kind = instr.op.replace("-start", "")
+    n = _group_size(instr.tail)
+    nbytes = shape_bytes(instr.shape)
+    if kind == "all-reduce":
+        return 2.0 * (n - 1) / n * nbytes
+    if kind == "all-gather":
+        return (n - 1) / n * nbytes
+    if kind == "reduce-scatter":
+        # output is the scattered (small) shape; wire ≈ (n-1)·out
+        return float(n - 1) * nbytes
+    if kind == "all-to-all":
+        return (n - 1) / n * nbytes
+    return float(nbytes)  # collective-permute
+
+
+_SLICING = {"dynamic-slice", "slice", "gather"}
+
+
+def _instr_traffic(comps: dict, comp: Computation, instr: Instr) -> float:
+    """HBM bytes moved by one materializing instruction.
+
+    Slicing ops read only their output-sized window of the operand;
+    dynamic-update-slice rewrites only the update region (in-place);
+    fusions read, per parameter, either the full operand or — when every
+    in-fusion use is itself a slicing op — just the sliced windows.
+    """
+    out = shape_bytes(instr.shape)
+    op = instr.op
+    if op in _SLICING:
+        return 2.0 * out
+    if op == "dynamic-update-slice":
+        upd = shape_bytes(comp.shapes.get(instr.operands[1], "")) if \
+            len(instr.operands) > 1 else out
+        return 2.0 * upd
+    if op == "scatter":
+        # scatter(target, indices, updates): in-place — only the updated
+        # elements and the indices move
+        upd = shape_bytes(comp.shapes.get(instr.operands[2], "")) if \
+            len(instr.operands) > 2 else out
+        idx = shape_bytes(comp.shapes.get(instr.operands[1], "")) if \
+            len(instr.operands) > 1 else 0
+        return 2.0 * upd + idx
+    if op == "fusion":
+        cm = _CALLS_RE.search(instr.tail)
+        called = comps.get(cm.group(1)) if cm else None
+        if called is None:
+            total = float(out)
+            for o in instr.operands:
+                total += shape_bytes(comp.shapes.get(o, ""))
+            return total
+        # pure dtype-cast fusion ("wrapped_convert"): XLA:CPU materializes
+        # f32 copies of bf16 weights/activations around dots because the
+        # host has no native bf16 matmul; the TPU target computes bf16 on
+        # the MXU directly, so these fusions cost nothing there.
+        body_ops = {u.op for u in called.instrs} - {"parameter"}
+        if body_ops and body_ops <= {"convert", "bitcast", "copy",
+                                     "broadcast", "reshape"}:
+            return 0.0
+        # in-place-update fusion: root is a DUS/scatter whose target aliases
+        # the output — the write is the UPDATE region, not the whole buffer.
+        # XLA:CPU wraps bf16 DUS/scatter in f32 convert round-trips of the
+        # FULL buffer (no native bf16 scatter on CPU); the TPU target
+        # scatters bf16 in place, so the convert chain is unwrapped here.
+        root = next((u for u in reversed(called.instrs) if u.is_root), None)
+        target = root
+        while target is not None and target.op == "convert" and \
+                target.operands:
+            target = next((u for u in called.instrs
+                           if u.name == target.operands[0]), None)
+        if target is not None and target.op in ("dynamic-update-slice",
+                                                "scatter"):
+            upd_operand = target.operands[1 if target.op ==
+                                          "dynamic-update-slice" else 2]
+            upd = shape_bytes(called.shapes.get(upd_operand, ""))
+            total = 2.0 * upd
+            out_elems = _elem_count(instr.shape)
+            # reads of non-aliased operands (skip any with the output's
+            # element count — heuristic for the in-place target buffer)
+            for o in instr.operands:
+                oshape = comp.shapes.get(o, "")
+                if _elem_count(oshape) != out_elems:
+                    total += shape_bytes(oshape)
+            return total
+        pnames = list(called.params)
+        total = float(out)
+        for i, o in enumerate(instr.operands):
+            full = shape_bytes(comp.shapes.get(o, ""))
+            if i < len(pnames):
+                uses = [u for u in called.instrs
+                        if pnames[i] in u.operands]
+                if uses and all(u.op in _SLICING or
+                                (u.op in ("dynamic-update-slice", "scatter")
+                                 and u.operands[0] == pnames[i])
+                                for u in uses):
+                    accessed = 0
+                    for u in uses:
+                        if u.op in _SLICING:
+                            accessed += shape_bytes(u.shape)
+                        else:
+                            upd_o = u.operands[1 if u.op ==
+                                               "dynamic-update-slice" else 2]
+                            accessed += shape_bytes(
+                                called.shapes.get(upd_o, ""))
+                    total += min(full, accessed)
+                    continue
+            total += full
+        return total
+    total = float(out)
+    for o in instr.operands:
+        total += shape_bytes(comp.shapes.get(o, ""))
+    return total
+
+
+@dataclasses.dataclass
+class CostTotals:
+    flops: float = 0.0
+    traffic_bytes: float = 0.0
+    wire_bytes: float = 0.0
+    collective_bytes: dict = dataclasses.field(default_factory=dict)
+    collective_counts: dict = dataclasses.field(default_factory=dict)
+    dot_count: int = 0
+    while_count: int = 0
+    unknown_trip: int = 0
+
+
+def _walk(comps: dict, name: str, mult: float, in_fusion: bool,
+          totals: CostTotals, depth: int = 0) -> None:
+    comp = comps.get(name)
+    if comp is None or depth > 64:
+        return
+    for instr in comp.instrs:
+        op = instr.op
+        base = op.replace("-start", "").replace("-done", "")
+        if op.endswith("-done"):
+            continue
+        if base in _COLLECTIVES:
+            wb = _wire_bytes(instr, comp) * mult
+            totals.wire_bytes += wb
+            totals.collective_bytes[base] = (
+                totals.collective_bytes.get(base, 0.0) + wb)
+            totals.collective_counts[base] = (
+                totals.collective_counts.get(base, 0) + mult)
+        if op == "dot":
+            totals.flops += _dot_flops(instr, comp) * mult
+            totals.dot_count += 1
+        if not in_fusion and op not in _NO_TRAFFIC and \
+                op not in _TPU_FUSABLE and base not in _COLLECTIVES:
+            totals.traffic_bytes += _instr_traffic(comps, comp, instr) * mult
+        # recursion
+        if op == "while":
+            totals.while_count += 1
+            tm = _TRIP_RE.search(instr.tail)
+            trips = int(tm.group(1)) if tm else 1
+            if not tm:
+                totals.unknown_trip += 1
+            bm = _BODY_RE.search(instr.tail)
+            if bm:
+                _walk(comps, bm.group(1), mult * trips, in_fusion, totals,
+                      depth + 1)
+            cm = _COND_RE.search(instr.tail)
+            if cm:
+                _walk(comps, cm.group(1), mult * trips, True, totals,
+                      depth + 1)
+        elif op in ("fusion", "call", "custom-call", "map", "reduce",
+                    "reduce-window", "scatter", "select-and-scatter", "sort"):
+            cm = _CALLS_RE.search(instr.tail)
+            if cm:
+                _walk(comps, cm.group(1), mult, True, totals, depth + 1)
+            # calls={%a, %b} plural form
+            for mm in re.finditer(r"to_apply=%?([\w.\-]+)", instr.tail):
+                _walk(comps, mm.group(1), mult, True, totals, depth + 1)
+        elif op == "conditional":
+            bm = _BRANCHES_RE.search(instr.tail)
+            if bm:
+                for b in bm.group(1).split(","):
+                    _walk(comps, b.strip().lstrip("%"), mult, True, totals,
+                          depth + 1)
+
+
+def analyze_hlo(hlo: str) -> CostTotals:
+    comps = parse_module(hlo)
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = _HEADER_RE.match(line)
+            if m:
+                entry = m.group(2)
+            break
+    totals = CostTotals()
+    if entry is None:  # fall back: largest computation
+        entry = max(comps, key=lambda n: len(comps[n].instrs))
+    _walk(comps, entry, 1.0, False, totals)
+    return totals

@@ -1,0 +1,92 @@
+"""Roofline report generator: experiments/dryrun/*.json -> markdown tables.
+
+Usage:  PYTHONPATH=src python -m repro.roofline.report [--dir experiments/dryrun]
+Emits the §Dry-run and §Roofline tables consumed by EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs import ARCHS, skipped_shapes_for
+
+_SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+                "long_500k": 3}
+
+
+def load(dir_: str) -> list[dict]:
+    rows = []
+    for path in glob.glob(os.path.join(dir_, "*.json")):
+        with open(path) as f:
+            r = json.load(f)
+        r["_file"] = os.path.basename(path)
+        rows.append(r)
+    rows.sort(key=lambda r: (ARCHS.index(r["arch"]) if r["arch"] in ARCHS
+                             else 99, _SHAPE_ORDER.get(r["shape"], 9),
+                             r["mesh"]))
+    return rows
+
+
+def fmt_bytes(n: float) -> str:
+    return f"{n/2**30:.2f}"
+
+
+def dryrun_table(rows: list[dict], mesh_filter: str | None = None) -> str:
+    out = ["| arch | shape | mesh | FLOPs/dev | HBM bytes/dev | wire bytes/dev"
+           " | peak mem (GiB) | collectives (top) | compile s |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if mesh_filter and mesh_filter not in r["mesh"]:
+            continue
+        coll = r["collectives"]["op_bytes"]
+        top = sorted(coll.items(), key=lambda kv: -kv[1])[:2]
+        top_s = " ".join(f"{k}:{v:.1e}" for k, v in top) or "none"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['flops_per_device']:.2e} | {r['bytes_per_device']:.2e} "
+            f"| {r['wire_bytes_per_device']:.2e} "
+            f"| {fmt_bytes(r['peak_memory_bytes'])} | {top_s} "
+            f"| {r.get('compile_s', 0):.1f} |")
+    return "\n".join(out)
+
+
+def roofline_table(rows: list[dict]) -> str:
+    out = ["| arch | shape | compute s | memory s | collective s | bottleneck"
+           " | useful-FLOPs ratio | roofline frac | note |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if "pod=2" in r["mesh"] or "pod" in r["mesh"].split("x")[0]:
+            continue  # roofline table is single-pod per assignment
+        out.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+            f"| {r['collective_s']:.3f} | **{r['bottleneck']}** "
+            f"| {r['useful_flops_ratio']:.2f} "
+            f"| {r['roofline_fraction']*100:.1f}% | {r['notes']} |")
+    for arch in ARCHS:
+        for shape, reason in skipped_shapes_for(arch):
+            out.append(f"| {arch} | {shape} | — | — | — | — | — | — "
+                       f"| {reason} |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--table", choices=["dryrun", "roofline", "both"],
+                    default="both")
+    args = ap.parse_args()
+    rows = load(args.dir)
+    if args.table in ("dryrun", "both"):
+        print("## Dry-run (both meshes)\n")
+        print(dryrun_table(rows))
+        print()
+    if args.table in ("roofline", "both"):
+        print("## Roofline (single-pod, 256 chips)\n")
+        print(roofline_table(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Re-derive roofline terms from cached HLO (no recompilation).
+
+The dry-run caches every cell's optimized HLO under experiments/hlo/; when
+the cost MODEL improves (hlo_cost.py), this tool recomputes all three terms
+and rewrites the JSON records in place.
+
+Usage:  PYTHONPATH=src python -m repro.roofline.rescore [--dirs d1 d2 ...]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import gzip
+import json
+import os
+
+from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+
+from . import hlo_cost
+
+
+def rescore_one(json_path: str, hlo_dir: str) -> bool:
+    cell = os.path.basename(json_path)[:-5]
+    hlo_path = os.path.join(hlo_dir, f"{cell}.hlo.gz")
+    if not os.path.exists(hlo_path):
+        return False
+    with open(json_path) as f:
+        r = json.load(f)
+    with gzip.open(hlo_path, "rt") as f:
+        hlo = f.read()
+    t = hlo_cost.analyze_hlo(hlo)
+    r["flops_per_device"] = t.flops
+    r["bytes_per_device"] = t.traffic_bytes
+    r["wire_bytes_per_device"] = t.wire_bytes
+    r["compute_s"] = t.flops / PEAK_FLOPS_BF16
+    r["memory_s"] = t.traffic_bytes / HBM_BW
+    r["collective_s"] = t.wire_bytes / (ICI_BW_PER_LINK * 2)
+    r["collectives"] = {
+        "wire_bytes": t.wire_bytes,
+        "op_bytes": t.collective_bytes,
+        "op_counts": {k: int(v) for k, v in t.collective_counts.items()},
+    }
+    terms = {"compute": r["compute_s"], "memory": r["memory_s"],
+             "collective": r["collective_s"]}
+    r["bottleneck"] = max(terms, key=terms.get)
+    r["step_time_s"] = max(terms.values())
+    total = t.flops * r["chips"]
+    r["useful_flops_ratio"] = r["model_flops"] / total if total else 0.0
+    r["roofline_fraction"] = (
+        (r["model_flops"] / r["step_time_s"]) / (r["chips"] * PEAK_FLOPS_BF16)
+        if r["step_time_s"] > 0 else 0.0)
+    with open(json_path, "w") as f:
+        json.dump(r, f, indent=2)
+    return True
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dirs", nargs="*",
+                    default=["experiments/dryrun", "experiments/perf"])
+    args = ap.parse_args()
+    n = 0
+    for d in args.dirs:
+        hlo_dir = os.path.join(os.path.dirname(d.rstrip("/")), "hlo")
+        for jp in glob.glob(os.path.join(d, "*.json")):
+            if rescore_one(jp, hlo_dir):
+                n += 1
+    print(f"rescored {n} cells")
+
+
+if __name__ == "__main__":
+    main()

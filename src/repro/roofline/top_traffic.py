@@ -1,0 +1,63 @@
+"""Profiler view: top per-op traffic/wire contributors from cached HLO.
+
+Usage: PYTHONPATH=src python -m repro.roofline.top_traffic <cell.hlo.gz> [N]
+This is the dry-run 'profile' the hillclimb reads (no hardware timers).
+"""
+from __future__ import annotations
+
+import gzip
+import sys
+
+from . import hlo_cost as hc
+
+
+def top(path: str, topn: int = 16):
+    hlo = gzip.open(path, "rt").read()
+    comps = hc.parse_module(hlo)
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            entry = hc._HEADER_RE.match(line).group(2)
+            break
+    traffic, wire = [], []
+
+    def walk(name, mult, in_fusion, depth=0):
+        comp = comps.get(name)
+        if comp is None or depth > 64:
+            return
+        for i in comp.instrs:
+            base = i.op.replace("-start", "")
+            if i.op.endswith("-done"):
+                continue
+            if base in hc._COLLECTIVES:
+                wire.append((hc._wire_bytes(i, comp) * mult, base,
+                             i.shape[:70], mult))
+            elif not in_fusion and i.op not in hc._NO_TRAFFIC and \
+                    i.op not in hc._TPU_FUSABLE:
+                t = hc._instr_traffic(comps, comp, i) * mult
+                traffic.append((t, i.op, i.shape[:70], mult,
+                                i.tail[-60:] if "metadata" in i.tail else ""))
+            if i.op == "while":
+                tm = hc._TRIP_RE.search(i.tail)
+                trips = int(tm.group(1)) if tm else 1
+                bm = hc._BODY_RE.search(i.tail)
+                if bm:
+                    walk(bm.group(1), mult * trips, in_fusion, depth + 1)
+            elif i.op in ("fusion", "call"):
+                cm = hc._CALLS_RE.search(i.tail)
+                if cm:
+                    walk(cm.group(1), mult, True, depth + 1)
+
+    walk(entry, 1.0, False)
+    traffic.sort(reverse=True)
+    wire.sort(reverse=True)
+    print(f"== top HBM traffic ({path}) ==")
+    for t in traffic[:topn]:
+        print(f"{t[0]/2**30:9.2f} GiB  {t[1]:20s} {t[2]} x{t[3]:.0f}")
+    print("== top wire ==")
+    for t in wire[:min(topn, 8)]:
+        print(f"{t[0]/2**30:9.2f} GiB  {t[1]:20s} {t[2]} x{t[3]:.0f}")
+
+
+if __name__ == "__main__":
+    top(sys.argv[1], int(sys.argv[2]) if len(sys.argv) > 2 else 16)

@@ -1,0 +1,4 @@
+"""Training substrate: optimizer, steps, trainer, checkpoint, fault tolerance."""
+from . import optimizer, steps
+
+__all__ = ["optimizer", "steps"]

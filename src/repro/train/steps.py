@@ -1,0 +1,243 @@
+"""jit-able train / prefill / decode steps + their sharding assignments.
+
+These are the *device AUs* of the DataX platform (DESIGN.md §3): the operator
+registers them as analytics units whose stream edges lower to pjit shardings
+instead of bus hops.  ``make_*_step`` builds the pure function; ``*_shardings``
+derives every in/out sharding from the config + mesh — the paper's "automated
+data communication" applied to the TPU collective layer.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import models
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.distributed import sharding as shard
+from repro.distributed.act_sharding import activation_mesh
+
+from . import optimizer as opt
+
+
+def _with_act_mesh(fn, mesh: Mesh, run: RunConfig):
+    """Wrap a step so tracing happens under the activation-sharding context
+    (model-internal `constrain()` calls resolve against this mesh)."""
+    @functools.wraps(fn)
+    def wrapped(*args):
+        with activation_mesh(
+                mesh,
+                seq_axis="model" if run.seq_parallel else None,
+                expert_axis=run.expert_axis):
+            return fn(*args)
+    return wrapped
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """logits f32 [B, S, V]; labels i32 [B, S] (-1 = masked).
+
+    The label pick is a one-hot contraction, NOT take_along_axis: a gather
+    over the vocab-sharded logits would trigger involuntary replication of
+    the full [B, S, V] tensor; the einsum partitions cleanly (the sharded-V
+    contraction becomes a small all-reduce of [B, S])."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels.clip(0), logits.shape[-1],
+                            dtype=logits.dtype)
+    ll = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum((lse - ll) * mask) / jnp.maximum(mask.sum(), 1.0)
+
+
+def make_loss_fn(cfg: ModelConfig, run: RunConfig):
+    def loss_fn(params, batch):
+        logits, aux = models.forward(params, batch, cfg, run)
+        xent = softmax_xent(logits, batch["labels"])
+        loss = xent
+        for k in ("moe_load_balance", "moe_z_loss"):
+            if k in aux:
+                loss = loss + aux[k]
+        metrics = {"loss": loss, "xent": xent, **aux}
+        return loss, metrics
+    return loss_fn
+
+
+# ---------------------------------------------------------------------------
+# Train step (with microbatched gradient accumulation)
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, run: RunConfig,
+                    total_steps: int = 100_000, mesh: Mesh | None = None):
+    loss_fn = make_loss_fn(cfg, run)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def _constrain_mb(a):
+        """Re-pin each microbatch leaf's batch dim to the DP axes: the
+        [B]->[k, B/k] reshape otherwise leaves GSPMD free to scatter the
+        sharding across both dims (observed: involuntary replication)."""
+        if mesh is None:
+            return a
+        spec = shard.batch_spec_for(mesh, a.shape[1], a.ndim - 2)
+        full = P(None, *spec)
+        return jax.lax.with_sharding_constraint(a, NamedSharding(mesh, full))
+
+    def train_step(params, opt_state, batch):
+        k = run.microbatches
+        if k > 1:
+            # reshape [B, ...] -> [k, B/k, ...] and scan (grad accumulation)
+            mb = jax.tree.map(
+                lambda a: _constrain_mb(
+                    a.reshape((k, a.shape[0] // k) + a.shape[1:])), batch)
+
+            acc_dt = jnp.dtype(run.grad_accum_dtype)
+
+            def acc(carry, mbatch):
+                g_acc, loss_acc = carry
+                (loss, metrics), grads = grad_fn(params, mbatch)
+                # bf16 accumulation keeps the per-microbatch gradient
+                # all-reduce in bf16 (half the wire bytes); f32 is exact
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(acc_dt), g_acc, grads)
+                return (g_acc, loss_acc + loss), metrics
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+            (g_sum, loss_sum), metrics = jax.lax.scan(acc, (g0, 0.0), mb)
+            grads = jax.tree.map(lambda g: g / k, g_sum)
+            metrics = jax.tree.map(lambda a: a.mean(), metrics)
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+
+        params, opt_state, om = opt.adamw_update(grads, params, opt_state,
+                                                 run, total_steps)
+        return params, opt_state, {**metrics, **om}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, run: RunConfig):
+    """Inference prefill: forward pass producing next-token logits for the
+    last position only (serving never materializes [B, S, V]); the engine
+    variant also captures the KV cache (repro.serve.engine)."""
+    def prefill_step(params, batch):
+        logits, _ = models.forward(params, batch, cfg, run, last_only=True)
+        return logits[:, -1]
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, run: RunConfig):
+    def serve_step(params, cache, batch):
+        logits, cache = models.decode_step(params, cache, batch, cfg, run)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), logits, cache
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Shardings
+# ---------------------------------------------------------------------------
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(
+        functools.partial(models.init, cfg=cfg), jax.random.key(0))
+
+
+def abstract_opt_state(params_shape, run: RunConfig):
+    return jax.eval_shape(
+        functools.partial(opt.init_opt_state, run=run), params_shape)
+
+
+def train_shardings(cfg: ModelConfig, run: RunConfig, mesh: Mesh):
+    """Returns (params_shape, opt_shape, in_shardings, out_shardings)."""
+    params_shape = abstract_params(cfg)
+    pspecs = shard.param_specs(params_shape, cfg, run, mesh)
+    opt_shape = abstract_opt_state(params_shape, run)
+
+    def opt_spec(path, leaf):
+        names = shard._path_names(path)
+        if names[0] in ("m", "v", "err", "master"):
+            sub = names[1:]
+            pspec = _lookup(pspecs, sub)
+            return shard.opt_state_spec_from_param(pspec, tuple(leaf.shape),
+                                                   run, mesh)
+        return P()
+
+    ospecs = jax.tree_util.tree_map_with_path(opt_spec, opt_shape)
+    return params_shape, opt_shape, pspecs, ospecs
+
+
+def _lookup(tree, names):
+    node = tree
+    for n in names:
+        if isinstance(node, dict):
+            node = node[n]
+        else:
+            node = getattr(node, n)
+    return node
+
+
+def jit_train_step(cfg: ModelConfig, run: RunConfig, mesh: Mesh,
+                   batch_shape: Any, total_steps: int = 100_000):
+    """Fully-sharded jit of the train step; returns (fn, arg structs)."""
+    params_shape, opt_shape, pspecs, ospecs = train_shardings(cfg, run, mesh)
+    bspecs = shard.batch_specs(batch_shape, mesh)
+    fn = jax.jit(
+        _with_act_mesh(make_train_step(cfg, run, total_steps, mesh=mesh),
+                       mesh, run),
+        in_shardings=(shard.to_shardings(pspecs, mesh),
+                      shard.to_shardings(ospecs, mesh),
+                      shard.to_shardings(bspecs, mesh)),
+        out_shardings=(shard.to_shardings(pspecs, mesh),
+                       shard.to_shardings(ospecs, mesh),
+                       NamedSharding(mesh, P())),
+        donate_argnums=(0, 1),
+    )
+    return fn, (params_shape, opt_shape)
+
+
+def jit_prefill_step(cfg: ModelConfig, run: RunConfig, mesh: Mesh,
+                     batch_shape: Any):
+    params_shape = abstract_params(cfg)
+    pspecs = shard.param_specs(params_shape, cfg, run, mesh)
+    bspecs = shard.batch_specs(batch_shape, mesh)
+    # last-token logits [B, V]: batch follows the token batch, vocab on model
+    first = jax.tree.leaves(batch_shape)[0]
+    bspec = shard.batch_spec_for(mesh, first.shape[0], 0)
+    logits_spec = P(bspec[0],
+                    "model" if cfg.vocab % mesh.shape["model"] == 0 else None)
+    fn = jax.jit(
+        _with_act_mesh(make_prefill_step(cfg, run), mesh, run),
+        in_shardings=(shard.to_shardings(pspecs, mesh),
+                      shard.to_shardings(bspecs, mesh)),
+        out_shardings=NamedSharding(mesh, logits_spec),
+    )
+    return fn, params_shape
+
+
+def jit_decode_step(cfg: ModelConfig, run: RunConfig, mesh: Mesh,
+                    batch: int, max_seq: int, batch_shape: Any):
+    params_shape = abstract_params(cfg)
+    pspecs = shard.param_specs(params_shape, cfg, run, mesh)
+    cache_shape = jax.eval_shape(
+        functools.partial(models.init_cache, cfg, batch, max_seq))
+    cspecs = shard.cache_specs(cache_shape, cfg, run, mesh, batch)
+    bspecs = shard.batch_specs(batch_shape, mesh)
+    b_axis = shard.batch_spec_for(mesh, batch, 0)
+    tok_spec = P(b_axis[0]) if batch > 1 else P(None)
+    vocab_ok = cfg.vocab % mesh.shape["model"] == 0
+    fn = jax.jit(
+        _with_act_mesh(make_decode_step(cfg, run), mesh, run),
+        in_shardings=(shard.to_shardings(pspecs, mesh),
+                      shard.to_shardings(cspecs, mesh),
+                      shard.to_shardings(bspecs, mesh)),
+        out_shardings=(NamedSharding(mesh, tok_spec),
+                       NamedSharding(mesh, P(tok_spec[0] if batch > 1 else None,
+                                             "model" if vocab_ok else None)),
+                       shard.to_shardings(cspecs, mesh)),
+        donate_argnums=(1,),
+    )
+    return fn, (params_shape, cache_shape)

@@ -1,0 +1,113 @@
+"""Serverless autoscaling: backlog-driven scale decisions + operator loop."""
+import time
+
+import pytest
+
+from repro.core import (AnalyticsUnitSpec, AutoScaler, ConfigSchema,
+                        DriverSpec, FieldSpec, Operator, ScalePolicy,
+                        SensorSpec, StreamSchema, StreamSpec)
+
+INT_SCHEMA = StreamSchema.of(value=FieldSpec("int"))
+
+
+def burst_driver(ctx):
+    def gen():
+        for i in range(int(ctx.config.get("n", 400))):
+            if not ctx.running:
+                return
+            yield {"value": i}
+    return gen()
+
+
+def slow_au(ctx):
+    delay = float(ctx.config.get("delay", 0.02))
+
+    def process(stream, payload):
+        time.sleep(delay)
+        return {"value": payload["value"]}
+    return process
+
+
+def test_scale_up_on_backlog_and_down_when_idle():
+    op = Operator(reconcile_interval_s=0.05,
+                  scale_policy=ScalePolicy(backlog_high=16, backlog_low=1,
+                                           idle_s=0.5, cooldown_s=0.1))
+    op.register_driver(DriverSpec(name="burst", logic=burst_driver,
+                                  config_schema=ConfigSchema.of(n=("int", 400)),
+                                  output_schema=INT_SCHEMA))
+    op.register_analytics_unit(AnalyticsUnitSpec(
+        name="slow", logic=slow_au,
+        config_schema=ConfigSchema.of(delay=("float", 0.02)),
+        output_schema=INT_SCHEMA, min_instances=1, max_instances=6))
+    op.register_sensor(SensorSpec(name="src", driver="burst",
+                                  config={"n": 300}), start=False)
+    op.create_stream(StreamSpec(name="out", analytics_unit="slow",
+                                inputs=("src",)))
+    op.start()
+    op.start_pending_sensors()
+    try:
+        deadline = time.monotonic() + 20
+        scaled_up = False
+        while time.monotonic() < deadline:
+            n = len(op.executor.instances_of("out"))
+            if n > 1:
+                scaled_up = True
+                break
+            time.sleep(0.05)
+        assert scaled_up, f"never scaled up; events={op.events}"
+        # after the burst drains, instances come back down
+        deadline = time.monotonic() + 30
+        while time.monotonic() < deadline:
+            if len(op.executor.instances_of("out")) == 1 and \
+                    any(e[1] == "scale-down" for e in op.events):
+                break
+            time.sleep(0.1)
+        assert any(e[1] == "scale-up" for e in op.events)
+        assert any(e[1] == "scale-down" for e in op.events)
+    finally:
+        op.shutdown()
+
+
+def test_fixed_instances_never_scaled():
+    op = Operator(reconcile_interval_s=0.05,
+                  scale_policy=ScalePolicy(backlog_high=2, cooldown_s=0.05))
+    op.register_driver(DriverSpec(name="burst", logic=burst_driver,
+                                  config_schema=ConfigSchema.of(n=("int", 400)),
+                                  output_schema=INT_SCHEMA))
+    op.register_analytics_unit(AnalyticsUnitSpec(
+        name="slow", logic=slow_au,
+        config_schema=ConfigSchema.of(delay=("float", 0.01)),
+        output_schema=INT_SCHEMA, max_instances=8))
+    op.register_sensor(SensorSpec(name="src", driver="burst",
+                                  config={"n": 200}), start=False)
+    op.create_stream(StreamSpec(name="out", analytics_unit="slow",
+                                inputs=("src",), fixed_instances=2))
+    op.start()
+    op.start_pending_sensors()
+    try:
+        time.sleep(1.5)
+        assert len(op.executor.instances_of("out")) == 2
+        assert not any(e[1].startswith("scale") for e in op.events)
+    finally:
+        op.shutdown()
+
+
+def test_policy_unit():
+    scaler = AutoScaler(ScalePolicy(backlog_high=10, backlog_low=1,
+                                    idle_s=0.0, cooldown_s=0.0))
+
+    class FakeSidecar:
+        def __init__(self, backlog, idle):
+            self._m = {"backlog": backlog, "idle_s": idle}
+
+        def metrics(self):
+            return dict(self._m, received=0, dropped=0, published=0,
+                        processed=0, errors=0, latency_ewma_s=0, uptime_s=1)
+
+    class H:
+        def __init__(self, backlog, idle=0.0):
+            self.sidecar = FakeSidecar(backlog, idle)
+
+    assert scaler.decide("s", [H(50)], 1, 8) == 2          # overload -> x2
+    assert scaler.decide("s2", [H(0, 99), H(0, 99)], 1, 8) == 1  # idle -> -1
+    assert scaler.decide("s3", [H(5)], 1, 8) == 1          # steady

@@ -1,0 +1,107 @@
+"""MessageBus: registration, authz, schema enforcement, drop policy, wire."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (FieldSpec, MessageBus, StreamSchema, Unauthorized,
+                        UnknownSubject, drain)
+from repro.core.bus import decode_message, decode_payload, encode_message, \
+    encode_payload
+
+
+@pytest.fixture
+def bus():
+    b = MessageBus()
+    b.register_subject("s1", StreamSchema.of(x=FieldSpec("int")))
+    return b
+
+
+def test_publish_requires_registration(bus):
+    tok = bus.issue_token("t", ["s1"])
+    with pytest.raises(UnknownSubject):
+        bus.publish("nope", {"x": 1}, token=tok)
+
+
+def test_publish_requires_authorization(bus):
+    tok = bus.issue_token("t", ["other"])
+    bus.register_subject("other")
+    with pytest.raises(Unauthorized):
+        bus.publish("s1", {"x": 1}, token=tok)
+    with pytest.raises(Unauthorized):
+        bus.publish("s1", {"x": 1}, token="forged-token")
+
+
+def test_schema_enforced(bus):
+    tok = bus.issue_token("t", ["s1"])
+    with pytest.raises(TypeError):
+        bus.publish("s1", {"x": "not-an-int"}, token=tok)
+    with pytest.raises(KeyError):
+        bus.publish("s1", {}, token=tok)
+    bus.publish("s1", {"x": 3}, token=tok)  # ok
+
+
+def test_pubsub_roundtrip(bus):
+    tok = bus.issue_token("t", ["s1"])
+    sub = bus.subscribe("s1", token=tok)
+    for i in range(10):
+        bus.publish("s1", {"x": i}, token=tok)
+    msgs = drain(sub, 10)
+    assert [m.payload["x"] for m in msgs] == list(range(10))
+
+
+def test_drop_oldest_policy(bus):
+    tok = bus.issue_token("t", ["s1"])
+    sub = bus.subscribe("s1", token=tok, maxsize=4)
+    for i in range(10):
+        bus.publish("s1", {"x": i}, token=tok)
+    msgs = drain(sub, 4)
+    assert [m.payload["x"] for m in msgs] == [6, 7, 8, 9]  # newest kept
+    assert sub.dropped == 6
+
+
+def test_wire_serialization_ndarray():
+    payload = {"a": np.arange(12, dtype=np.int32).reshape(3, 4),
+               "b": "text", "c": 4.5, "d": b"raw"}
+    out = decode_payload(encode_payload(payload))
+    np.testing.assert_array_equal(out["a"], payload["a"])
+    assert out["b"] == "text" and out["c"] == 4.5 and out["d"] == b"raw"
+
+
+def test_wire_subscription(bus):
+    b = MessageBus()
+    b.register_subject("w", StreamSchema.of(
+        arr=FieldSpec("ndarray", shape=(-1,), dtype="float32")))
+    tok = b.issue_token("t", ["w"])
+    sub = b.subscribe("w", token=tok, wire=True)
+    arr = np.linspace(0, 1, 5, dtype=np.float32)
+    b.publish("w", {"arr": arr}, token=tok)
+    msg = sub.next(timeout=2)
+    np.testing.assert_array_equal(msg.payload["arr"], arr)
+
+
+def test_concurrent_publishers(bus):
+    tok = bus.issue_token("t", ["s1"])
+    sub = bus.subscribe("s1", token=tok, maxsize=4096)
+    n_threads, per = 8, 50
+
+    def work(base):
+        for i in range(per):
+            bus.publish("s1", {"x": base + i}, token=tok)
+
+    threads = [threading.Thread(target=work, args=(k * 1000,))
+               for k in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    msgs = drain(sub, n_threads * per)
+    assert len({m.seq for m in msgs}) == n_threads * per
+
+
+def test_unregister_closes_subscribers(bus):
+    tok = bus.issue_token("t", ["s1"])
+    sub = bus.subscribe("s1", token=tok)
+    bus.unregister_subject("s1")
+    assert sub.next(timeout=0.2) is None
+    assert sub.closed

@@ -1,0 +1,125 @@
+"""Per-architecture smoke tests: reduced same-family configs, one forward /
+train step on CPU, asserting output shapes + no NaNs (assignment req.)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import models
+from repro.configs import ARCHS, get_config, get_smoke_config
+from repro.configs.base import RunConfig
+from repro.train import optimizer as opt
+from repro.train import steps
+
+RUN = RunConfig(attention_impl="chunked", attention_chunk=16, remat="none",
+                microbatches=1,
+                # big enough that one update exceeds a bf16 ulp on every arch
+                learning_rate=1e-2, warmup_steps=1)
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 32
+
+
+def _batch(cfg):
+    batch = {"tokens": jax.random.randint(KEY, (B, S), 0, cfg.vocab),
+             "labels": jax.random.randint(KEY, (B, S), 0, cfg.vocab)}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            KEY, (B, cfg.encoder_seq, cfg.d_model)).astype(cfg.activation_dtype)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_no_nans(arch):
+    cfg = get_smoke_config(arch)
+    params = models.init(KEY, cfg)
+    logits, aux = models.forward(params, _batch(cfg), cfg, RUN)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert not np.any(np.isnan(np.asarray(logits, np.float32)))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_no_nans(arch):
+    cfg = get_smoke_config(arch)
+    params = models.init(KEY, cfg)
+    opt_state = opt.init_opt_state(params, RUN)
+    train_step = jax.jit(steps.make_train_step(cfg, RUN))
+    params2, opt_state2, metrics = train_step(params, opt_state, _batch(cfg))
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually moved
+    moved = jax.tree.map(
+        lambda a, b: float(jnp.abs(a.astype(jnp.float32)
+                                   - b.astype(jnp.float32)).max()),
+        params, params2)
+    assert max(jax.tree.leaves(moved)) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_step_shapes(arch):
+    cfg = get_smoke_config(arch)
+    params = models.init(KEY, cfg)
+    cache = models.init_cache(cfg, B, 64)
+    batch = {"tokens": jax.random.randint(KEY, (B, 1), 0, cfg.vocab),
+             "seq_lens": jnp.zeros((B,), jnp.int32)}
+    logits, cache2 = models.decode_step(params, cache, batch, cfg, RUN)
+    assert logits.shape == (B, cfg.vocab)
+    assert not np.any(np.isnan(np.asarray(logits, np.float32)))
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_param_count_sane(arch):
+    """FULL configs are exercised via the dry-run; here we only check the
+    analytic parameter count lands near the advertised size."""
+    cfg = get_config(arch)
+    n = cfg.param_count()
+    expected = {
+        "qwen3-32b": 32e9, "minitron-4b": 4e9, "qwen3-14b": 14e9,
+        "granite-34b": 34e9, "whisper-large-v3": 1.55e9,
+        "qwen2-vl-72b": 72e9, "grok-1-314b": 314e9,
+        "granite-moe-3b-a800m": 3.3e9, "mamba2-370m": 0.37e9,
+        "zamba2-2.7b": 2.7e9,
+    }[arch]
+    assert 0.75 * expected <= n <= 1.25 * expected, (arch, n, expected)
+
+
+def test_mrope_text_degrades_to_rope():
+    """M-RoPE with identical (t,h,w) ids == plain RoPE (paper 2409.12191)."""
+    from repro.models import layers as L
+    Dh = 32
+    pos = jnp.arange(16)[None, :]
+    a1 = L.rope_angles(pos, Dh, 1e4)
+    pos3 = jnp.broadcast_to(pos[:, None, :], (1, 3, 16))
+    a2 = L.mrope_angles(pos3, Dh, 1e4, (4, 6, 6))
+    # identical ids -> every section reads the same positions
+    x = jax.random.normal(KEY, (1, 16, 2, Dh))
+    np.testing.assert_allclose(L.apply_rope(x, a1), L.apply_rope(x, a2),
+                               atol=1e-6)
+
+
+def test_moe_capacity_drops_bounded():
+    cfg = get_smoke_config("granite-moe-3b-a800m")
+    params = models.init(KEY, cfg)
+    logits, aux = models.forward(params, _batch(cfg), cfg, RUN)
+    assert float(aux["moe_drop_fraction"]) < 0.3
+    assert float(aux["moe_load_balance"]) >= 0
+
+
+def test_prefill_decode_consistency_dense():
+    cfg = dataclasses.replace(get_smoke_config("qwen3-14b"),
+                              param_dtype="float32",
+                              activation_dtype="float32")
+    run = dataclasses.replace(RUN, attention_impl="naive")
+    params = models.init(KEY, cfg)
+    tokens = jax.random.randint(KEY, (B, 10), 0, cfg.vocab)
+    full, _ = models.forward(params, {"tokens": tokens}, cfg, run)
+    cache = models.init_cache(cfg, B, 32)
+    outs = []
+    for t in range(10):
+        batch = {"tokens": tokens[:, t:t + 1],
+                 "seq_lens": jnp.full((B,), t, jnp.int32)}
+        lg, cache = models.decode_step(params, cache, batch, cfg, run)
+        outs.append(lg)
+    np.testing.assert_allclose(jnp.stack(outs, 1), full, atol=2e-4, rtol=2e-3)

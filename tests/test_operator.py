@@ -1,0 +1,204 @@
+"""Operator coherence rules (paper §4) + lifecycle + reuse (§3)."""
+import time
+
+import pytest
+
+from repro.core import (AnalyticsUnitSpec, Application, CoherenceError,
+                        ConfigSchema, DriverSpec, FieldSpec, GadgetSpec,
+                        ActuatorSpec, Operator, OperatorError, SensorSpec,
+                        StreamSchema, StreamSpec, drain)
+
+
+def counter_driver(ctx):
+    delay = float(ctx.config.get("delay", 0.0))
+
+    def gen():
+        for i in range(int(ctx.config.get("n", 100))):
+            if not ctx.running:
+                return
+            if delay:
+                time.sleep(delay)
+            yield {"value": i}
+    return gen()
+
+
+def doubler(ctx):
+    scale = int(ctx.config.get("scale", 2))
+    return lambda stream, payload: {"value": payload["value"] * scale}
+
+
+INT_SCHEMA = StreamSchema.of(value=FieldSpec("int"))
+
+
+@pytest.fixture
+def op():
+    o = Operator(reconcile_interval_s=0.05)
+    o.register_driver(DriverSpec(
+        name="counter", logic=counter_driver,
+        config_schema=ConfigSchema.of(n=("int", 100), delay=("float", 0.0)),
+        output_schema=INT_SCHEMA))
+    o.register_analytics_unit(AnalyticsUnitSpec(
+        name="doubler", logic=doubler,
+        config_schema=ConfigSchema.of(scale=("int", 2)),
+        output_schema=INT_SCHEMA))
+    yield o
+    o.shutdown()
+
+
+def test_sensor_requires_installed_driver(op):
+    with pytest.raises(CoherenceError):
+        op.register_sensor(SensorSpec(name="s", driver="missing"))
+
+
+def test_sensor_config_validated(op):
+    with pytest.raises(TypeError):
+        op.register_sensor(SensorSpec(name="s", driver="counter",
+                                      config={"n": "many"}))
+    with pytest.raises(KeyError):
+        op.register_sensor(SensorSpec(name="s", driver="counter",
+                                      config={"unknown": 1}))
+
+
+def test_stream_requires_au_and_inputs(op):
+    with pytest.raises(CoherenceError):
+        op.create_stream(StreamSpec(name="d", analytics_unit="missing",
+                                    inputs=()))
+    with pytest.raises(CoherenceError):
+        op.create_stream(StreamSpec(name="d", analytics_unit="doubler",
+                                    inputs=("nope",)))
+
+
+def test_delete_in_use_refused(op):
+    op.register_sensor(SensorSpec(name="nums", driver="counter",
+                                  config={"n": 5}))
+    op.create_stream(StreamSpec(name="doubled", analytics_unit="doubler",
+                                inputs=("nums",)))
+    with pytest.raises(CoherenceError):
+        op.delete_driver("counter")          # sensor uses it
+    with pytest.raises(CoherenceError):
+        op.delete_analytics_unit("doubler")  # stream uses it
+    with pytest.raises(CoherenceError):
+        op.delete_sensor("nums")             # feeds 'doubled'
+    # correct teardown order succeeds
+    op.delete_stream("doubled")
+    op.delete_sensor("nums")
+    op.delete_analytics_unit("doubler")
+    op.delete_driver("counter")
+
+
+def test_pipeline_delivers(op):
+    op.register_sensor(SensorSpec(name="nums", driver="counter",
+                                  config={"n": 8}), start=False)
+    op.create_stream(StreamSpec(name="doubled", analytics_unit="doubler",
+                                inputs=("nums",), config={"scale": 3}))
+    sub = op.subscribe("doubled")
+    op.start_pending_sensors()
+    vals = sorted(m.payload["value"] for m in drain(sub, 8))
+    assert vals == [3 * i for i in range(8)]
+
+
+def test_upgrade_compatible_schema_cascades(op):
+    op.register_sensor(SensorSpec(name="nums", driver="counter",
+                                  config={"n": 50}))
+    op.create_stream(StreamSpec(name="doubled", analytics_unit="doubler",
+                                inputs=("nums",)))
+    # v2 adds an optional field -> compatible
+    op.upgrade_analytics_unit(AnalyticsUnitSpec(
+        name="doubler", logic=doubler, version=2,
+        config_schema=ConfigSchema.of(scale=("int", 2), bias=("int", 0)),
+        output_schema=INT_SCHEMA))
+    assert op.describe()["analytics_units"]["doubler"] == 2
+    assert any(e[1] == "upgrade" for e in op.events)
+
+
+def test_upgrade_incompatible_schema_refused(op):
+    op.register_sensor(SensorSpec(name="nums", driver="counter"))
+    op.create_stream(StreamSpec(name="doubled", analytics_unit="doubler",
+                                inputs=("nums",)))
+    bad = AnalyticsUnitSpec(
+        name="doubler", logic=doubler, version=2,
+        config_schema=ConfigSchema.of(
+            scale=("str", ConfigSchema.REQUIRED)),   # type change + required
+        output_schema=INT_SCHEMA)
+    with pytest.raises(CoherenceError):
+        op.upgrade_analytics_unit(bad)
+    assert op.describe()["analytics_units"]["doubler"] == 1
+
+
+def test_upgrade_with_converter(op):
+    op.register_sensor(SensorSpec(name="nums", driver="counter"))
+    op.create_stream(StreamSpec(name="doubled", analytics_unit="doubler",
+                                inputs=("nums",), config={"scale": 4}))
+    v2 = AnalyticsUnitSpec(
+        name="doubler", logic=doubler, version=2,
+        config_schema=ConfigSchema.of(factor=("int", ConfigSchema.REQUIRED)),
+        output_schema=INT_SCHEMA)
+    # converter fails -> refused (paper: accept only if it succeeds for ALL)
+    with pytest.raises(CoherenceError):
+        op.upgrade_analytics_unit(v2, converter=lambda c: 1 / 0)
+    # working converter -> accepted
+    op.upgrade_analytics_unit(
+        v2, converter=lambda c: {"factor": c.get("scale", 2)})
+    assert op.describe()["analytics_units"]["doubler"] == 2
+
+
+def test_version_must_increase(op):
+    with pytest.raises(OperatorError):
+        op.upgrade_analytics_unit(AnalyticsUnitSpec(
+            name="doubler", logic=doubler, version=1,
+            output_schema=INT_SCHEMA))
+
+
+def test_crash_restart(op):
+    crashes = {"n": 0}
+
+    def flaky(ctx):
+        def process(stream, payload):
+            if payload["value"] == 3 and crashes["n"] == 0:
+                crashes["n"] += 1
+                raise RuntimeError("boom")
+            return {"value": payload["value"]}
+        return process
+
+    op.register_analytics_unit(AnalyticsUnitSpec(
+        name="flaky", logic=flaky, output_schema=INT_SCHEMA))
+    # paced source: the restart happens mid-stream, so the pipeline keeps
+    # flowing after the crash (messages during the dead window are lossy)
+    op.register_sensor(SensorSpec(name="nums", driver="counter",
+                                  config={"n": 40, "delay": 0.05}),
+                       start=False)
+    op.create_stream(StreamSpec(name="out", analytics_unit="flaky",
+                                inputs=("nums",)))
+    op.start()
+    sub = op.subscribe("out")
+    op.start_pending_sensors()
+    got = []
+    deadline = time.monotonic() + 15
+    while len(got) < 20 and time.monotonic() < deadline:
+        m = sub.next(timeout=0.5)
+        if m:
+            got.append(m.payload["value"])
+    assert crashes["n"] == 1
+    assert len(got) >= 20                      # kept flowing after restart
+    assert any(e[1] in ("restart", "crash") for e in op.events)
+
+
+def test_stream_reuse_across_apps(op):
+    """§3: a second app subscribes to the first app's registered stream."""
+    op.register_sensor(SensorSpec(name="nums", driver="counter",
+                                  config={"n": 12}), start=False)
+    op.create_stream(StreamSpec(name="doubled", analytics_unit="doubler",
+                                inputs=("nums",)))
+    assert "doubled" in op.registered_streams()
+    # app 2 reuses 'doubled' without touching app 1
+    app2 = Application(name="reuser")
+    op.register_analytics_unit(AnalyticsUnitSpec(
+        name="plus1", logic=lambda ctx: (
+            lambda s, p: {"value": p["value"] + 1}),
+        output_schema=INT_SCHEMA))
+    op.create_stream(StreamSpec(name="plussed", analytics_unit="plus1",
+                                inputs=("doubled",)))
+    sub = op.subscribe("plussed")
+    op.start_pending_sensors()
+    vals = sorted(m.payload["value"] for m in drain(sub, 12))
+    assert vals == sorted(2 * i + 1 for i in range(12))

@@ -1,0 +1,145 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bus import decode_payload, encode_payload
+from repro.core.schema import ConfigSchema, FieldSpec, StreamSchema
+from repro.core.sdk import LogicContext
+from repro.data.pipeline import packer_au
+from repro.models.moe import moe_capacity, moe_group_shape
+from repro.configs import get_smoke_config
+
+
+# ---------------------------------------------------------------------------
+# Packer: token conservation + exact sequence lengths
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(min_value=1, max_value=200), min_size=1,
+                max_size=30),
+       st.integers(min_value=4, max_value=64))
+def test_packer_conserves_tokens(doc_lens, seq_len):
+    ctx = LogicContext({"seq_len": seq_len})
+    process = packer_au(ctx)
+    emitted = []
+    total_in = 0
+    counter = 0
+    for n in doc_lens:
+        doc = np.arange(counter, counter + n, dtype=np.int32)
+        counter += n
+        total_in += n
+        out = process("docs", {"tokens": doc}) or []
+        emitted.extend(out)
+    # every emitted sequence has exactly seq_len+1 tokens
+    for seq in emitted:
+        assert len(seq["tokens"]) == seq_len + 1
+    # conservation: emitted + leftover == input, in order, no duplication
+    flat = np.concatenate([s["tokens"] for s in emitted]) if emitted else \
+        np.array([], np.int32)
+    assert len(flat) == (total_in // (seq_len + 1)) * (seq_len + 1)
+    np.testing.assert_array_equal(flat, np.arange(len(flat), dtype=np.int32))
+
+
+# ---------------------------------------------------------------------------
+# Wire format: msgpack+numpy round-trip is the identity
+# ---------------------------------------------------------------------------
+
+_scalars = st.one_of(st.integers(min_value=-2**40, max_value=2**40),
+                     st.floats(allow_nan=False, allow_infinity=False,
+                               width=32),
+                     st.text(max_size=20), st.booleans(),
+                     st.binary(max_size=40))
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.dictionaries(st.text(min_size=1, max_size=8), _scalars,
+                       max_size=6),
+       st.integers(min_value=0, max_value=3))
+def test_wire_roundtrip_identity(payload, arr_rank):
+    if arr_rank:
+        shape = tuple(np.random.randint(1, 4, arr_rank))
+        payload["__arr"] = np.random.randn(*shape).astype(np.float32)
+    out = decode_payload(encode_payload(payload))
+    assert set(out) == set(payload)
+    for k, v in payload.items():
+        if isinstance(v, np.ndarray):
+            np.testing.assert_array_equal(out[k], v)
+        elif isinstance(v, float):
+            assert out[k] == v or abs(out[k] - v) < 1e-6
+        else:
+            assert out[k] == v
+
+
+# ---------------------------------------------------------------------------
+# ConfigSchema: accepts_configs_of is consistent with validate
+# ---------------------------------------------------------------------------
+
+_type_names = st.sampled_from(["int", "float", "str", "bool"])
+_sample_values = {"int": 3, "float": 1.5, "str": "x", "bool": True}
+
+
+@st.composite
+def _schema(draw):
+    fields = {}
+    for name in draw(st.lists(st.sampled_from("abcde"), unique=True,
+                              max_size=4)):
+        t = draw(_type_names)
+        required = draw(st.booleans())
+        fields[name] = (t, ConfigSchema.REQUIRED if required
+                        else _sample_values[t])
+    return ConfigSchema(fields=fields)
+
+
+@settings(max_examples=60, deadline=None)
+@given(_schema(), _schema())
+def test_schema_compat_soundness(old, new):
+    """If new.accepts_configs_of(old), every old-valid config (built from
+    old's required fields + any optional subset) must validate under new,
+    up to unknown-field pruning (the operator prunes on upgrade)."""
+    if not new.accepts_configs_of(old):
+        return
+    # minimal old config: required fields only
+    cfg = {name: _sample_values[t] for name, (t, d) in old.fields.items()
+           if d is ConfigSchema.REQUIRED}
+    pruned = {k: v for k, v in cfg.items() if k in new.fields}
+    new.validate(pruned)  # must not raise
+
+
+# ---------------------------------------------------------------------------
+# StreamSchema.accepts: reflexive; accepted payloads validate
+# ---------------------------------------------------------------------------
+
+@st.composite
+def _stream_schema(draw):
+    fields = {}
+    for name in draw(st.lists(st.sampled_from("xyz"), unique=True,
+                              min_size=1, max_size=3)):
+        kind = draw(st.sampled_from(["int", "float", "str", "ndarray"]))
+        fields[name] = FieldSpec(kind=kind)
+    return StreamSchema(fields=fields)
+
+
+@settings(max_examples=40, deadline=None)
+@given(_stream_schema())
+def test_stream_schema_reflexive(schema):
+    assert schema.accepts(schema)
+
+
+# ---------------------------------------------------------------------------
+# MoE grouping: group shape divides tokens; capacity >= perfect balance
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(min_value=1, max_value=1 << 20))
+def test_moe_group_shape_divides(T):
+    g, s = moe_group_shape(T)
+    assert g * s == T and s >= 1
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(min_value=8, max_value=4096))
+def test_moe_capacity_sufficient(group):
+    cfg = get_smoke_config("grok-1-314b")
+    c = moe_capacity(group, cfg)
+    m = cfg.moe
+    assert c * m.num_experts >= group * m.top_k  # >= perfectly-balanced load

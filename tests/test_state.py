@@ -1,0 +1,78 @@
+"""Platform state management: StateStore engines, persistence, DB-in-AU."""
+import os
+
+import pytest
+
+from repro.core import (AnalyticsUnitSpec, ConfigSchema, DatabaseSpec,
+                        DriverSpec, FieldSpec, Operator, SensorSpec,
+                        StateError, StateStore, StreamSchema, StreamSpec,
+                        drain)
+
+
+def test_memkv_tables():
+    store = StateStore()
+    db = store.create("app", tables={"users": ["name", "score"]})
+    t = db.table("users")
+    t.put(1, {"name": "a", "score": 10})
+    t.put(2, {"name": "b", "score": 20})
+    assert t.get(1)["name"] == "a"
+    t.update(1, score=15)
+    assert t.get(1)["score"] == 15
+    assert len(t.scan(lambda k, v: v["score"] > 12)) == 2
+    with pytest.raises(StateError):
+        t.put(3, {"bogus_column": 1})
+    t.delete(2)
+    assert t.get(2) is None
+
+
+def test_filekv_persistence(tmp_path):
+    store = StateStore(root=str(tmp_path))
+    db = store.create("p", engine="filekv", tables={"kv": None})
+    db.table("kv").put("alpha", {"v": 42})
+    db.flush()
+    # simulate restart
+    store2 = StateStore(root=str(tmp_path))
+    db2 = store2.create("p", engine="filekv")
+    assert db2.table("kv").get("alpha")["v"] == 42
+
+
+def test_duplicate_database_refused():
+    store = StateStore()
+    store.create("x")
+    with pytest.raises(StateError):
+        store.create("x")
+
+
+def test_stateful_au_gets_platform_db():
+    """Paper §2: platform installs the DB; the app manages content."""
+    op = Operator(reconcile_interval_s=0.05)
+
+    def src(ctx):
+        def gen():
+            for i in range(10):
+                yield {"value": i}
+        return gen()
+
+    def accumulating_au(ctx):
+        table = ctx.db.ensure_table("seen")
+
+        def process(stream, payload):
+            table.put(payload["value"], {"seen": True})
+            return {"value": len(table)}
+        return process
+
+    schema = StreamSchema.of(value=FieldSpec("int"))
+    op.register_driver(DriverSpec(name="src", logic=src,
+                                  output_schema=schema))
+    op.register_analytics_unit(AnalyticsUnitSpec(
+        name="acc", logic=accumulating_au, output_schema=schema,
+        stateful=True))
+    op.register_sensor(SensorSpec(name="nums", driver="src"), start=False)
+    op.create_stream(StreamSpec(name="counts", analytics_unit="acc",
+                                inputs=("nums",)))
+    sub = op.subscribe("counts")
+    op.start_pending_sensors()
+    vals = [m.payload["value"] for m in drain(sub, 10)]
+    assert max(vals) == 10                      # all rows landed in the DB
+    assert op.store.exists("au-counts")         # platform-installed database
+    op.shutdown()
