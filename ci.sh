@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# CI entrypoint: deps + tier-1 tests + headless runs of the shipped examples,
+# so example drift fails the build fast.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# Best-effort dependency install; the repo degrades gracefully without the
+# optional ones (zstandard -> zlib fallback, hypothesis -> skipped tests).
+if [ "${CI_SKIP_INSTALL:-0}" != "1" ]; then
+    python -m pip install --quiet pytest msgpack numpy jax zstandard hypothesis \
+        || echo "ci.sh: pip install failed (offline?); using preinstalled deps"
+fi
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== examples (headless) =="
+python examples/quickstart.py
+python examples/fever_screening.py
+
+echo "== benchmarks: productivity claim =="
+python -m benchmarks.run --only loc
+
+echo "ci.sh: OK"

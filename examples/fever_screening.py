@@ -1,12 +1,13 @@
 """The paper's flagship application (Fig. 3): Free-Flow Fever Screening,
-rebuilt 1:1 on the platform with ML-flavoured payloads.
+rebuilt on the v2 fluent API with ML-flavoured payloads.
 
 Topology (exactly the paper's): 2 sensors (thermal + RGB cameras), 2 driver
 instances, 5 analytics units (detect -> track -> align -> fuse -> screen),
 1 platform database (track state), 1 actuator driving the entry-gate gadget.
 
 Every box is pure business logic — the operator wires the streams, scales
-instances, restarts crashes, and owns the database.
+instances, restarts crashes, and owns the database.  Compare with the v1
+spec-style build of this same topology in tests/test_system.py.
 
 Run:  PYTHONPATH=src python examples/fever_screening.py
 """
@@ -14,36 +15,37 @@ import time
 
 import numpy as np
 
-from repro.core import (ActuatorSpec, AnalyticsUnitSpec, Application,
-                        ConfigSchema, DatabaseSpec, DriverSpec, FieldSpec,
-                        GadgetSpec, Operator, SensorSpec, StreamSchema,
-                        StreamSpec)
+from repro.core import (App, FieldSpec, StreamHandle, StreamSchema, connect)
 
 FRAME = StreamSchema.of(frame_id=FieldSpec("int"), data=FieldSpec("ndarray"))
 VERDICT = StreamSchema.of(frame_id=FieldSpec("int"), fever=FieldSpec("bool"),
                           temp_c=FieldSpec("float"))
 
+app = App("fever-screening")
 
-def camera_driver(ctx):
-    rng = np.random.default_rng(ctx.config["seed"])
-    period = 1.0 / ctx.config["fps"]
+
+@app.driver(emits=FRAME)
+def camera(ctx, seed=0, frames=40, fps=40.0, gain=1.0):
+    rng = np.random.default_rng(seed)
+    period = 1.0 / fps
 
     def gen():
-        for i in range(ctx.config["frames"]):
+        for i in range(frames):
             if not ctx.running:
                 return
             time.sleep(period)
             yield {"frame_id": i,
-                   "data": rng.random((16, 16)).astype(np.float32)
-                   * ctx.config["gain"]}
+                   "data": rng.random((16, 16)).astype(np.float32) * gain}
     return gen()
 
 
-def face_detector(ctx):
+@app.analytics_unit(expects=(FRAME,), emits=FRAME)
+def detector(ctx):
     return lambda s, p: {"frame_id": p["frame_id"],
                          "data": p["data"][4:12, 4:12]}  # "face crop"
 
 
+@app.analytics_unit(expects=(FRAME,), emits=FRAME, stateful=True)
 def tracker(ctx):
     table = ctx.db.ensure_table("tracks", ["first_seen"]) if ctx.db else None
 
@@ -54,6 +56,7 @@ def tracker(ctx):
     return process
 
 
+@app.analytics_unit(expects=(FRAME,), emits=FRAME)
 def alignment(ctx):
     return lambda s, p: {"frame_id": p["frame_id"],
                          "data": p["data"][4:12, 4:12]}
@@ -62,6 +65,7 @@ def alignment(ctx):
 _pending: dict = {}
 
 
+@app.analytics_unit(expects=(FRAME, FRAME), emits=FRAME)
 def fusion(ctx):
     def process(stream, p):
         other = _pending.pop(p["frame_id"], None)
@@ -73,17 +77,17 @@ def fusion(ctx):
     return process
 
 
-def screening(ctx):
-    thr = ctx.config["fever_c"]
-
+@app.analytics_unit(expects=(FRAME,), emits=VERDICT)
+def screening(ctx, fever_c=37.6):
     def process(s, p):
         temp = 36.0 + float(p["data"].mean()) * 3.0
-        return {"frame_id": p["frame_id"], "fever": bool(temp > thr),
+        return {"frame_id": p["frame_id"], "fever": bool(temp > fever_c),
                 "temp_c": temp}
     return process
 
 
-def gate_actuator(ctx):
+@app.actuator(expects=(VERDICT,))
+def gate(ctx):
     def process(s, p):
         action = "HOLD + alert" if p["fever"] else "open"
         print(f"frame {p['frame_id']:3d}: {p['temp_c']:.1f}C -> gate {action}")
@@ -91,55 +95,27 @@ def gate_actuator(ctx):
 
 
 def main() -> None:
-    app = Application(name="fever-screening")
-    app.driver(DriverSpec(
-        name="camera", logic=camera_driver,
-        config_schema=ConfigSchema.of(seed=("int", 0), frames=("int", 40),
-                                      fps=("float", 40.0),
-                                      gain=("float", 1.0)),
-        output_schema=FRAME))
-    for name, logic in [("detector", face_detector), ("tracker", tracker),
-                        ("alignment", alignment), ("fusion", fusion)]:
-        app.analytics_unit(AnalyticsUnitSpec(
-            name=name, logic=logic, output_schema=FRAME,
-            stateful=(name == "tracker")))
-    app.analytics_unit(AnalyticsUnitSpec(
-        name="screening", logic=screening,
-        config_schema=ConfigSchema.of(fever_c=("float", 37.6)),
-        output_schema=VERDICT))
-    app.actuator(ActuatorSpec(name="gate", logic=gate_actuator))
-    app.database(DatabaseSpec(name="track-db",
-                              tables={"tracks": ["first_seen"]}))
-    app.sensor(SensorSpec(name="thermal", driver="camera",
-                          config={"seed": 1, "gain": 1.1}))
-    app.sensor(SensorSpec(name="rgb", driver="camera",
-                          config={"seed": 2}))
-    app.stream(StreamSpec(name="detections", analytics_unit="detector",
-                          inputs=("rgb",)))
-    app.stream(StreamSpec(name="tracks", analytics_unit="tracker",
-                          inputs=("detections",), fixed_instances=1))
-    app.stream(StreamSpec(name="aligned-thermal", analytics_unit="alignment",
-                          inputs=("thermal",)))
-    app.stream(StreamSpec(name="fused", analytics_unit="fusion",
-                          inputs=("tracks", "aligned-thermal"),
-                          fixed_instances=1))
-    app.stream(StreamSpec(name="screenings", analytics_unit="screening",
-                          inputs=("fused",)))
-    app.gadget(GadgetSpec(name="entry-gate", actuator="gate",
-                          inputs=("screenings",)))
+    app.database("track-db", tables={"tracks": ["first_seen"]})
+    thermal = app.sense("thermal", camera, seed=1, gain=1.1)
+    rgb = app.sense("rgb", camera, seed=2)
+    tracks = (rgb.via(detector, name="detections")
+                 .via(tracker, name="tracks", fixed_instances=1))
+    aligned = thermal.via(alignment, name="aligned-thermal")
+    fused = StreamHandle.fuse(tracks, aligned, with_=fusion, name="fused",
+                              fixed_instances=1)
+    verdicts = fused.via(screening, name="screenings")
+    verdicts >> app.gadget("entry-gate", gate)
 
-    op = Operator()
-    app.deploy(op)
-    op.start()
-    print(f"deployed: {app.loc_footprint()} entities; streams:",
-          op.registered_streams())
-    time.sleep(3.0)
-    print("\nsidecar metrics (the numbers that drive autoscaling):")
-    for iid, m in sorted(op.metrics().items()):
-        print(f"  {iid:38s} recv={m['received']:3d} pub={m['published']:3d} "
-              f"lat={m['latency_ewma_s']*1e6:5.0f}us")
-    print("\ntrack DB rows:", len(op.store.get("au-tracks").table("tracks")))
-    op.shutdown()
+    with connect() as op:
+        app.deploy(op)
+        print(f"deployed: {app.loc_footprint()} entities; streams:",
+              op.registered_streams())
+        time.sleep(3.0)
+        print("\nsidecar metrics (the numbers that drive autoscaling):")
+        for iid, m in sorted(op.metrics().items()):
+            print(f"  {iid:38s} recv={m['received']:3d} pub={m['published']:3d} "
+                  f"lat={m['latency_ewma_s']*1e6:5.0f}us")
+        print("\ntrack DB rows:", len(op.store.get("au-tracks").table("tracks")))
 
 
 if __name__ == "__main__":

@@ -7,6 +7,8 @@ from .app import Application, AppValidationError
 from .bus import (BusError, MessageBus, Subscription, Unauthorized,
                   UnknownSubject, decode_message, decode_payload,
                   encode_message, encode_payload, drain)
+from .compression import CompressionError, codec_name
+from .dsl import App, DSLError, GadgetHandle, SchemaMismatch, StreamHandle, connect
 from .entities import (ActuatorSpec, AnalyticsUnitSpec, DatabaseSpec,
                        DriverSpec, EntityKind, GadgetSpec, Placement,
                        SensorSpec, StreamSpec)
@@ -18,7 +20,10 @@ from .sidecar import Sidecar
 from .state import Database, StateError, StateStore, Table
 
 __all__ = [
+    "App", "DSLError", "GadgetHandle", "SchemaMismatch", "StreamHandle",
+    "connect",
     "Application", "AppValidationError",
+    "CompressionError", "codec_name",
     "BusError", "MessageBus", "Subscription", "Unauthorized", "UnknownSubject",
     "decode_message", "decode_payload", "encode_message", "encode_payload",
     "drain",

@@ -116,8 +116,13 @@ class Application:
         return order
 
     # -- deployment ---------------------------------------------------------------
-    def deploy(self, op: Operator) -> None:
-        """Validate, then register everything in dependency order."""
+    def deploy(self, op: Operator, *, start_sensors: bool = True) -> None:
+        """Validate, then register everything in dependency order.
+
+        ``start_sensors=False`` leaves the sensors registered but idle so the
+        caller can attach external subscriptions first (streams are lossy —
+        there is no replay); fire them with ``op.start_pending_sensors()``.
+        """
         order = self.validate(external_streams=op.registered_streams())
         for db in self.databases:
             op.create_database(db)
@@ -135,7 +140,8 @@ class Application:
             op.create_stream(by_name[name])
         for g in self.gadgets:
             op.register_gadget(g)
-        op.start_pending_sensors()
+        if start_sensors:
+            op.start_pending_sensors()
 
     def undeploy(self, op: Operator) -> None:
         """Tear down in reverse dependency order (coherence-safe)."""

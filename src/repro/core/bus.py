@@ -148,10 +148,19 @@ class Subscription:
     def close(self) -> None:
         with self._lock:
             self.closed = True
-        try:
-            self._q.put_nowait(None)  # wake blocked readers
-        except queue.Full:
-            pass
+            # Wake blocked readers.  If the mailbox is full, evict one item so
+            # the sentinel always lands — otherwise a reader blocked in next()
+            # would never observe the close.
+            while True:
+                try:
+                    self._q.put_nowait(None)
+                    return
+                except queue.Full:
+                    try:
+                        self._q.get_nowait()
+                        self.dropped += 1
+                    except queue.Empty:  # pragma: no cover - race guard
+                        pass
 
 
 # ---------------------------------------------------------------------------
@@ -227,12 +236,9 @@ class MessageBus:
         with self._lock:
             if subject not in self._subjects:
                 raise UnknownSubject(subject)
-        self._authorize(token, subject)
-        with self._lock:
-            if subject not in self._subjects:
-                raise UnknownSubject(subject)
             schema = self._subjects[subject]
             subs = list(self._subs[subject])
+        self._authorize(token, subject)
         schema.validate(payload)
         msg = Message(subject=subject, payload=payload, headers=headers or {})
         self._deliver(msg, subs)

@@ -1,0 +1,64 @@
+"""Codec-tagged blob compression with graceful degradation.
+
+The platform persists state (``state.py`` filekv databases) and training
+checkpoints (``train/checkpoint.py``) as compressed msgpack blobs.  zstd is
+the preferred codec, but it is a third-party dependency; on clean
+environments the hard import used to break *all* of ``repro.core`` at
+collection time.  This module makes ``zstandard`` optional:
+
+* every blob is prefixed with a 4-byte codec tag (``b"DXZ1"`` = zstd,
+  ``b"DXL1"`` = stdlib zlib) so readers dispatch on what was actually
+  written, regardless of what is importable today;
+* writers pick zstd when available, else zlib — both are self-describing;
+* legacy untagged blobs (raw zstd frames, magic ``28 B5 2F FD``) written
+  before tagging existed are still readable when zstd is installed.
+"""
+from __future__ import annotations
+
+import zlib
+
+try:
+    import zstandard
+    HAS_ZSTD = True
+except ImportError:  # clean environment: fall back to stdlib
+    zstandard = None  # type: ignore[assignment]
+    HAS_ZSTD = False
+
+TAG_ZSTD = b"DXZ1"
+TAG_ZLIB = b"DXL1"
+_ZSTD_FRAME_MAGIC = b"\x28\xb5\x2f\xfd"  # legacy untagged blobs
+
+
+class CompressionError(RuntimeError):
+    pass
+
+
+def compress(data: bytes, *, level: int = 3) -> bytes:
+    """Compress ``data`` with the best available codec; returns a tagged blob."""
+    if HAS_ZSTD:
+        return TAG_ZSTD + zstandard.ZstdCompressor(level=level).compress(data)
+    return TAG_ZLIB + zlib.compress(data, level)
+
+
+def decompress(blob: bytes) -> bytes:
+    """Inverse of :func:`compress`; dispatches on the codec tag."""
+    tag = blob[:4]
+    if tag == TAG_ZLIB:
+        return zlib.decompress(blob[4:])
+    if tag == TAG_ZSTD:
+        if not HAS_ZSTD:
+            raise CompressionError(
+                "blob was written with zstd but the 'zstandard' module is "
+                "not installed; install it to read this data")
+        return zstandard.ZstdDecompressor().decompress(blob[4:])
+    if tag == _ZSTD_FRAME_MAGIC:  # pre-tagging blob
+        if not HAS_ZSTD:
+            raise CompressionError(
+                "legacy zstd blob requires the 'zstandard' module")
+        return zstandard.ZstdDecompressor().decompress(blob)
+    raise CompressionError(f"unrecognized blob header {tag!r}")
+
+
+def codec_name() -> str:
+    """The codec new blobs will be written with ('zstd' or 'zlib')."""
+    return "zstd" if HAS_ZSTD else "zlib"

@@ -1,0 +1,587 @@
+"""Fluent typed Stream API (v2) — decorators + combinators over the v1 specs.
+
+The v1 surface (``entities.py`` + ``app.py``) is faithful to the paper's CRDs
+but verbose: seven parallel ``*Spec`` dataclasses and imperative
+``op.register_*`` calls.  This module is the productivity layer on top:
+
+* **entity declaration by decorator** — ``@app.driver``, ``@app.analytics_unit``,
+  ``@app.actuator``.  The config schema is inferred from the factory's keyword
+  defaults (``def thermometer(ctx, n=200)`` ⇒ ``n: int = 200``); the output
+  stream schema comes from a ``StreamSchema`` return annotation or an explicit
+  ``emits=`` argument.
+* **topology by combinator** — ``app.sense(...)`` returns a typed
+  :class:`StreamHandle` supporting ``.map`` / ``.filter`` / ``.window`` /
+  ``.via`` / :meth:`StreamHandle.fuse` and ``>> gadget``.  Combinator lambdas
+  are wrapped into synthetic :class:`~.entities.AnalyticsUnitSpec`\\ s, so a
+  v2 app is observable/upgradeable exactly like a v1 app.
+* **eager schema checking** — every edge is checked at composition time
+  (consumer's declared input schema must *accept* the producer's schema), so
+  a type error surfaces at the line that wires the streams, not at deploy.
+
+Everything compiles deterministically into the existing
+:class:`~.app.Application` spec graph and deploys via ``Application.deploy``;
+coherence rules, autoscaling, upgrades and the bus are untouched.
+
+Quickstart::
+
+    app = App("quickstart")
+
+    @app.driver(emits=READING)
+    def thermometer(ctx, n=200):
+        ...
+
+    @app.analytics_unit(expects=(READING,), emits=SCORE)
+    def anomaly(ctx):
+        ...
+
+    @app.actuator(expects=(SCORE,))
+    def alarm(ctx, threshold=4.0):
+        ...
+
+    scores = app.sense("lab-temp", thermometer, n=200).via(anomaly,
+                                                           name="anomalies")
+    scores >> app.gadget("siren", alarm)
+
+    with connect() as op:
+        app.deploy(op)
+"""
+from __future__ import annotations
+
+import contextlib
+import inspect
+from collections import deque
+from typing import Any, Callable, Iterator, Mapping, Sequence
+
+from .app import Application, AppValidationError
+from .entities import (ActuatorSpec, AnalyticsUnitSpec, DatabaseSpec,
+                       DriverSpec, GadgetSpec, Placement, SensorSpec,
+                       StreamSpec)
+from .operator import Operator
+from .schema import ConfigSchema, StreamSchema
+
+
+class DSLError(AppValidationError):
+    """Bad v2 composition (unknown entity, name clash, wrong argument)."""
+
+
+class SchemaMismatch(DSLError):
+    """An edge's producer schema violates the consumer's declared schema."""
+
+
+# ---------------------------------------------------------------------------
+# Inference helpers
+# ---------------------------------------------------------------------------
+
+_TYPE_NAMES = {bool: "bool", int: "int", float: "float", str: "str",
+               bytes: "bytes", dict: "dict", list: "list"}
+
+
+def _type_name(value: Any) -> str:
+    # bool first: bool is a subclass of int
+    for pytype, name in _TYPE_NAMES.items():
+        if type(value) is pytype:
+            return name
+    return "any"
+
+
+def _annotation_type_name(annotation: Any) -> str:
+    if annotation in _TYPE_NAMES:
+        return _TYPE_NAMES[annotation]
+    if isinstance(annotation, str) and annotation in _TYPE_NAMES.values():
+        return annotation
+    return "any"
+
+
+def _infer_config_schema(fn: Callable) -> tuple[ConfigSchema, tuple[str, ...]]:
+    """Config schema from the factory's parameters after ``ctx``.
+
+    ``def thermometer(ctx, n=200)`` ⇒ ``{n: ("int", 200)}``; a parameter with
+    no default becomes a REQUIRED field (type taken from its annotation).
+    Returns (schema, parameter-names) so the runtime wrapper knows which
+    resolved config keys to pass back as keyword arguments.
+    """
+    params = list(inspect.signature(fn).parameters.values())
+    if not params:
+        raise DSLError(f"{fn.__name__}: entity factories take (ctx, ...)")
+    fields: dict[str, tuple] = {}
+    names: list[str] = []
+    for p in params[1:]:
+        if p.kind in (inspect.Parameter.VAR_POSITIONAL,
+                      inspect.Parameter.VAR_KEYWORD):
+            continue
+        names.append(p.name)
+        if p.default is inspect.Parameter.empty:
+            fields[p.name] = (_annotation_type_name(p.annotation),
+                              ConfigSchema.REQUIRED)
+        else:
+            fields[p.name] = (_type_name(p.default), p.default)
+    return ConfigSchema(fields=fields), tuple(names)
+
+
+def _infer_output_schema(fn: Callable, emits: StreamSchema | None) -> StreamSchema:
+    if emits is not None:
+        return emits
+    ann = getattr(fn, "__annotations__", {}).get("return")
+    if isinstance(ann, StreamSchema):
+        return ann
+    return StreamSchema.untyped()
+
+
+def _wrap_factory(fn: Callable, config_params: Sequence[str]) -> Callable:
+    """Adapt ``fn(ctx, **config)`` to the runtime's ``logic(ctx)`` contract."""
+    def logic(ctx):
+        cfg = {k: v for k, v in ctx.config.items() if k in config_params}
+        return fn(ctx, **cfg)
+    logic.__name__ = fn.__name__
+    logic.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
+    return logic
+
+
+def _logic_and_schema(fn: Callable,
+                      config: ConfigSchema | None) -> tuple[Callable, ConfigSchema]:
+    """Runtime logic + config schema for a decorated factory.
+
+    SDK-style entrypoints (``@sdk_entrypoint``) own their loop and read config
+    via ``dx.get_configuration()`` — they pass through unwrapped (declare their
+    schema with ``config=`` if any).
+    """
+    if getattr(fn, "datax_sdk_style", False):
+        return fn, config or ConfigSchema.empty()
+    inferred, params = _infer_config_schema(fn)
+    return _wrap_factory(fn, params), config or inferred
+
+
+def _check_edge(consumer: str, declared: Sequence[StreamSchema], index: int,
+                producer: "StreamHandle") -> None:
+    if index < len(declared) and not declared[index].accepts(producer.schema):
+        raise SchemaMismatch(
+            f"{consumer!r} input {index} cannot accept stream "
+            f"{producer.name!r}: producer schema "
+            f"{sorted(producer.schema.fields) or '<untyped>'} does not satisfy "
+            f"the declared input schema {sorted(declared[index].fields)}")
+
+
+def _entity_name(ref: Any) -> str:
+    """Resolve a decorated function (or plain string) to its entity name."""
+    if isinstance(ref, str):
+        return ref
+    name = getattr(ref, "_datax_entity", None)
+    if name is None:
+        raise DSLError(f"{ref!r} is not a registered entity; decorate it with "
+                       f"@app.driver / @app.analytics_unit / @app.actuator "
+                       f"or pass the entity name")
+    return name
+
+
+# ---------------------------------------------------------------------------
+# Stream handles
+# ---------------------------------------------------------------------------
+
+class StreamHandle:
+    """A typed reference to one registered stream inside an :class:`App`.
+
+    Handles are cheap, immutable descriptors: every combinator appends specs
+    to the owning app and returns a *new* handle for the derived stream.
+    """
+
+    def __init__(self, app: "App", name: str, schema: StreamSchema):
+        self.app = app
+        self.name = name
+        self.schema = schema
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"StreamHandle({self.name!r})"
+
+    # -- routing through declared AUs ---------------------------------------
+    def via(self, au: Any, *, name: str | None = None,
+            fixed_instances: int | None = None, **config: Any) -> "StreamHandle":
+        """Route this stream through a decorator-registered analytics unit."""
+        return self.app._compose_stream((self,), au, name=name,
+                                        fixed_instances=fixed_instances,
+                                        config=config)
+
+    # -- combinators (synthetic AUs) ----------------------------------------
+    def map(self, fn: Callable[[dict], Any], *, name: str | None = None,
+            emits: StreamSchema | None = None) -> "StreamHandle":
+        """Transform each payload with ``fn(payload) -> payload | None``.
+
+        The output schema is ``emits`` if given (checked against downstream
+        consumers), else untyped — an untyped stream cannot feed a consumer
+        that declares a typed input schema, so supply ``emits=`` at the last
+        combinator before a typed edge.
+        """
+        def factory(ctx):
+            return lambda stream, payload: fn(payload)
+        factory.__name__ = getattr(fn, "__name__", "map")
+        return self.app._synthetic_stream(
+            (self,), factory, kind="map", name=name,
+            emits=_infer_output_schema(fn, emits))
+
+    def filter(self, pred: Callable[[dict], bool], *,
+               name: str | None = None) -> "StreamHandle":
+        """Keep only payloads where ``pred(payload)`` is truthy.
+
+        Filtering never changes the message type, so the output schema is the
+        input schema (the one combinator with exact schema propagation).
+        """
+        def factory(ctx):
+            return lambda stream, payload: payload if pred(payload) else None
+        factory.__name__ = getattr(pred, "__name__", "filter")
+        return self.app._synthetic_stream(
+            (self,), factory, kind="filter", name=name, emits=self.schema)
+
+    def window(self, n: int, *, name: str | None = None,
+               emits: StreamSchema | None = None) -> "StreamHandle":
+        """Tumbling count window: every ``n`` payloads emit
+        ``{"window": [...], "count": n}``."""
+        if n < 1:
+            raise DSLError(f"window size must be >= 1, got {n}")
+
+        def factory(ctx):
+            buf: list[dict] = []
+
+            def process(stream, payload):
+                buf.append(payload)
+                if len(buf) < n:
+                    return None
+                out = {"window": list(buf), "count": len(buf)}
+                buf.clear()
+                return out
+            return process
+        factory.__name__ = f"window{n}"
+        return self.app._synthetic_stream(
+            (self,), factory, kind="window", name=name,
+            emits=emits or StreamSchema.untyped())
+
+    @staticmethod
+    def fuse(*handles: "StreamHandle", with_: Any, name: str | None = None,
+             emits: StreamSchema | None = None,
+             fixed_instances: int | None = None,
+             **config: Any) -> "StreamHandle":
+        """Fuse two or more streams into one.
+
+        ``with_`` is either a decorator-registered analytics unit (the stream
+        is routed through it, v1-style multi-input) or a plain callable
+        ``fn(payload_a, payload_b, ...) -> payload`` that is called with one
+        aligned payload per input stream (FIFO pairing).
+        """
+        if len(handles) < 2:
+            raise DSLError("fuse() needs at least two streams")
+        apps = {h.app for h in handles}
+        if len(apps) != 1:
+            raise DSLError("fuse() streams must belong to the same App")
+        app = handles[0].app
+        if getattr(with_, "_datax_entity", None) or isinstance(with_, str):
+            if emits is not None:
+                raise DSLError(
+                    "fuse(emits=...) only applies to a plain callable; a "
+                    "registered AU's output schema comes from its declaration")
+            return app._compose_stream(handles, with_, name=name,
+                                       fixed_instances=fixed_instances,
+                                       config=config)
+        if not callable(with_):
+            raise DSLError("with_ must be a registered AU or a callable")
+        if config:
+            raise DSLError(
+                f"fuse() config kwargs {sorted(config)} only apply when "
+                f"with_ is a registered AU; a plain callable takes no config")
+        if fixed_instances not in (None, 1):
+            raise DSLError(
+                "a plain-callable fuse runs single-instance (its pairing "
+                "buffer is per-instance); fixed_instances must be 1")
+
+        inputs = tuple(h.name for h in handles)
+
+        def factory(ctx):
+            buf: dict[str, deque] = {s: deque() for s in inputs}
+
+            def process(stream, payload):
+                buf[stream].append(payload)
+                if all(buf.values()):
+                    return with_(*(buf[s].popleft() for s in inputs))
+                return None
+            return process
+        factory.__name__ = getattr(with_, "__name__", "fuse")
+        return app._synthetic_stream(
+            handles, factory, kind="fuse", name=name,
+            emits=_infer_output_schema(with_, emits))
+
+    # -- sinks ---------------------------------------------------------------
+    def __rshift__(self, gadget: "GadgetHandle") -> "GadgetHandle":
+        """``stream >> gadget`` — feed this stream into a gadget."""
+        if not isinstance(gadget, GadgetHandle):
+            raise DSLError(f"stream >> expects a GadgetHandle "
+                           f"(from app.gadget(...)), got {type(gadget).__name__}")
+        gadget._attach(self)
+        return gadget
+
+    def subscribe(self, op: Operator, *, maxsize: int = 256):
+        """Third-party subscription to this stream on a live operator (§3)."""
+        return op.subscribe(self.name, maxsize=maxsize)
+
+
+class GadgetHandle:
+    """A declared gadget accumulating input streams via ``stream >> gadget``."""
+
+    def __init__(self, app: "App", name: str, actuator: str,
+                 config: Mapping[str, Any]):
+        self.app = app
+        self.name = name
+        self.actuator = actuator
+        self.config = dict(config)
+        self.inputs: list[str] = []
+
+    def _attach(self, handle: StreamHandle) -> None:
+        decl = self.app._actuators[self.actuator]
+        _check_edge(f"gadget {self.name!r} (actuator {self.actuator!r})",
+                    decl.input_schemas, len(self.inputs), handle)
+        self.inputs.append(handle.name)
+
+
+# ---------------------------------------------------------------------------
+# The App
+# ---------------------------------------------------------------------------
+
+class App:
+    """The v2 application builder: decorators + stream combinators.
+
+    Compiles (deterministically, in declaration/composition order) into a v1
+    :class:`~.app.Application` via :meth:`build`; :meth:`deploy` is
+    ``build().deploy(op)`` — the Operator, coherence rules and bus are
+    exactly the v1 ones.
+    """
+
+    def __init__(self, name: str):
+        self.name = name
+        self._drivers: dict[str, DriverSpec] = {}
+        self._aus: dict[str, AnalyticsUnitSpec] = {}
+        self._actuators: dict[str, ActuatorSpec] = {}
+        self._sensors: list[SensorSpec] = []
+        self._streams: list[StreamSpec] = []
+        self._gadgets: list[GadgetHandle] = []
+        self._databases: list[DatabaseSpec] = []
+        self._stream_names: set[str] = set()
+        self._synthetic_aus = 0
+
+    # ================================================================ decl
+    def driver(self, fn: Callable | None = None, *, name: str | None = None,
+               emits: StreamSchema | None = None,
+               config: ConfigSchema | None = None, version: int = 1,
+               node_affinity: str | None = None):
+        """Declare a driver.  The factory is ``fn(ctx, **config)`` returning
+        an iterator (or poll callable) of payload dicts."""
+        def deco(f: Callable) -> Callable:
+            ename = name or f.__name__
+            logic, schema = _logic_and_schema(f, config)
+            spec = DriverSpec(
+                name=ename, logic=logic, config_schema=schema,
+                output_schema=_infer_output_schema(f, emits),
+                version=version, node_affinity=node_affinity)
+            self._register(self._drivers, spec, "driver")
+            f._datax_entity = ename
+            return f
+        return deco(fn) if callable(fn) else deco
+
+    def analytics_unit(self, fn: Callable | None = None, *,
+                       name: str | None = None,
+                       expects: Sequence[StreamSchema] = (),
+                       emits: StreamSchema | None = None,
+                       config: ConfigSchema | None = None, version: int = 1,
+                       placement: Placement = Placement.HOST,
+                       stateful: bool = False, min_instances: int = 1,
+                       max_instances: int = 8):
+        """Declare an analytics unit.  The factory is ``fn(ctx, **config)``
+        returning ``process(stream, payload) -> payload | list | None``."""
+        def deco(f: Callable) -> Callable:
+            ename = name or f.__name__
+            logic, schema = _logic_and_schema(f, config)
+            spec = AnalyticsUnitSpec(
+                name=ename, logic=logic, config_schema=schema,
+                input_schemas=tuple(expects),
+                output_schema=_infer_output_schema(f, emits),
+                version=version, placement=placement, stateful=stateful,
+                min_instances=min_instances, max_instances=max_instances)
+            self._register(self._aus, spec, "analytics unit")
+            f._datax_entity = ename
+            return f
+        return deco(fn) if callable(fn) else deco
+
+    def actuator(self, fn: Callable | None = None, *, name: str | None = None,
+                 expects: Sequence[StreamSchema] = (),
+                 config: ConfigSchema | None = None, version: int = 1):
+        """Declare an actuator.  The factory is ``fn(ctx, **config)``
+        returning a sink ``process(stream, payload)``."""
+        def deco(f: Callable) -> Callable:
+            ename = name or f.__name__
+            logic, schema = _logic_and_schema(f, config)
+            spec = ActuatorSpec(
+                name=ename, logic=logic, config_schema=schema,
+                input_schemas=tuple(expects), version=version)
+            self._register(self._actuators, spec, "actuator")
+            f._datax_entity = ename
+            return f
+        return deco(fn) if callable(fn) else deco
+
+    def _register(self, registry: dict, spec: Any, kind: str) -> None:
+        if spec.name in registry:
+            raise DSLError(f"{kind} {spec.name!r} already declared "
+                           f"in app {self.name!r}")
+        registry[spec.name] = spec
+
+    # ================================================================ topo
+    def sense(self, name: str, driver: Any, **config: Any) -> StreamHandle:
+        """Register a sensor; returns the handle of its output stream."""
+        dname = _entity_name(driver)
+        if dname not in self._drivers:
+            raise DSLError(f"driver {dname!r} is not declared in app "
+                           f"{self.name!r}")
+        spec = self._drivers[dname]
+        spec.config_schema.validate(config)  # fail at the wiring line
+        self._claim_stream_name(name)
+        self._sensors.append(SensorSpec(name=name, driver=dname,
+                                        config=config))
+        return StreamHandle(self, name, spec.output_schema)
+
+    def external(self, name: str,
+                 schema: StreamSchema | None = None) -> StreamHandle:
+        """Handle for a stream registered by *another* app on the target
+        operator (the paper's §3 stream reuse).  ``schema`` is the caller's
+        assumption about the producer; untyped if omitted."""
+        return StreamHandle(self, name, schema or StreamSchema.untyped())
+
+    def gadget(self, name: str, actuator: Any, **config: Any) -> GadgetHandle:
+        """Declare a gadget; feed it streams with ``stream >> gadget``."""
+        aname = _entity_name(actuator)
+        if aname not in self._actuators:
+            raise DSLError(f"actuator {aname!r} is not declared in app "
+                           f"{self.name!r}")
+        self._actuators[aname].config_schema.validate(config)
+        if any(g.name == name for g in self._gadgets):
+            raise DSLError(f"gadget {name!r} already declared")
+        handle = GadgetHandle(self, name, aname, config)
+        self._gadgets.append(handle)
+        return handle
+
+    def database(self, name: str, *, engine: str = "memkv",
+                 tables: Mapping[str, Sequence[str]] | None = None) -> "App":
+        if any(d.name == name for d in self._databases):
+            raise DSLError(f"database {name!r} already declared "
+                           f"in app {self.name!r}")
+        self._databases.append(DatabaseSpec(name=name, engine=engine,
+                                            tables=dict(tables or {})))
+        return self
+
+    # -- stream creation (shared by .via / fuse / combinators) ---------------
+    def _compose_stream(self, inputs: Sequence[StreamHandle], au: Any, *,
+                        name: str | None = None,
+                        fixed_instances: int | None = None,
+                        config: Mapping[str, Any] | None = None) -> StreamHandle:
+        aname = _entity_name(au)
+        if aname not in self._aus:
+            raise DSLError(f"analytics unit {aname!r} is not declared in app "
+                           f"{self.name!r}")
+        spec = self._aus[aname]
+        for i, h in enumerate(inputs):
+            _check_edge(f"analytics unit {aname!r}", spec.input_schemas, i, h)
+        spec.config_schema.validate(dict(config or {}))
+        sname = name or self._auto_name(inputs[0].name, aname)
+        self._claim_stream_name(sname)
+        self._streams.append(StreamSpec(
+            name=sname, analytics_unit=aname,
+            inputs=tuple(h.name for h in inputs),
+            config=dict(config or {}), fixed_instances=fixed_instances))
+        return StreamHandle(self, sname, spec.output_schema)
+
+    def _synthetic_stream(self, inputs: Sequence[StreamHandle],
+                          factory: Callable, *, kind: str, name: str | None,
+                          emits: StreamSchema) -> StreamHandle:
+        """Wrap a combinator lambda into a synthetic single-instance AU."""
+        sname = name or self._auto_name(inputs[0].name, kind)
+        self._claim_stream_name(sname)
+        au_name = f"{sname}.{kind}"
+        au = AnalyticsUnitSpec(
+            name=au_name, logic=factory,
+            input_schemas=tuple(h.schema for h in inputs),
+            output_schema=emits,
+            # exactly-once per message: the bus fans out to every instance,
+            # so combinators (often stateful closures) must run single-instance
+            min_instances=1, max_instances=1)
+        self._register(self._aus, au, "analytics unit")
+        self._synthetic_aus += 1
+        self._streams.append(StreamSpec(
+            name=sname, analytics_unit=au_name,
+            inputs=tuple(h.name for h in inputs), fixed_instances=1))
+        return StreamHandle(self, sname, emits)
+
+    def _auto_name(self, base: str, kind: str) -> str:
+        i = 0
+        while f"{base}.{kind}{i}" in self._stream_names:
+            i += 1
+        return f"{base}.{kind}{i}"
+
+    def _claim_stream_name(self, name: str) -> None:
+        if name in self._stream_names:
+            raise DSLError(f"stream/sensor name {name!r} already used "
+                           f"in app {self.name!r}")
+        self._stream_names.add(name)
+
+    # ================================================================ build
+    def build(self) -> Application:
+        """Compile to the v1 spec graph (deterministic: declaration order)."""
+        return Application(
+            name=self.name,
+            drivers=list(self._drivers.values()),
+            analytics_units=list(self._aus.values()),
+            actuators=list(self._actuators.values()),
+            sensors=list(self._sensors),
+            streams=list(self._streams),
+            gadgets=[GadgetSpec(name=g.name, actuator=g.actuator,
+                                inputs=tuple(g.inputs), config=g.config)
+                     for g in self._gadgets],
+            databases=list(self._databases),
+        )
+
+    def deploy(self, op: Operator, *, start_sensors: bool = True) -> Application:
+        """Compile + validate + deploy onto a live operator; returns the
+        compiled :class:`Application` (handy for undeploy/introspection).
+
+        ``start_sensors=False`` defers the sources so external subscribers
+        can attach first; fire them with ``op.start_pending_sensors()``.
+        """
+        application = self.build()
+        application.deploy(op, start_sensors=start_sensors)
+        return application
+
+    def loc_footprint(self) -> int:
+        """#entities in the compiled graph (v1-comparable productivity proxy)."""
+        return self.build().loc_footprint()
+
+    def declared_footprint(self) -> int:
+        """#entities the *developer* wrote (synthetic combinator AUs excluded)
+        — the number to quote for the paper's productivity claim."""
+        return self.loc_footprint() - self._synthetic_aus
+
+
+# ---------------------------------------------------------------------------
+# Operator lifecycle
+# ---------------------------------------------------------------------------
+
+@contextlib.contextmanager
+def connect(*, start: bool = True, **operator_kwargs: Any) -> Iterator[Operator]:
+    """Context manager owning an Operator's lifecycle::
+
+        with connect() as op:
+            app.deploy(op)
+            ...
+        # reconciler stopped, instances torn down, bus closed
+
+    ``start=False`` skips the reconcile loop (unit-test topologies that only
+    need deploy + bus flow).  Extra kwargs go to :class:`Operator`.
+    """
+    op = Operator(**operator_kwargs)
+    if start:
+        op.start()
+    try:
+        yield op
+    finally:
+        op.shutdown()

@@ -8,8 +8,9 @@ content/state."
 Two engines:
 
 * ``memkv``  — in-memory, thread-safe table store (row dicts, per-table locks)
-* ``filekv`` — same API, persisted to zstd-compressed msgpack files so state
-               survives restarts (used by checkpoint metadata + fault tests)
+* ``filekv`` — same API, persisted to compressed msgpack files (zstd when
+               available, stdlib zlib otherwise; see ``compression.py``) so
+               state survives restarts (checkpoint metadata + fault tests)
 
 The training/serving substrates reuse this as their state backbone: optimizer
 state manifests, KV-cache registries and serving session tables are all DataX
@@ -23,9 +24,9 @@ import time
 from typing import Any, Iterable, Mapping
 
 import msgpack
-import zstandard
 
 from .bus import _default, _ext_hook  # reuse the numpy-aware wire format
+from .compression import codec_name, compress, decompress
 
 
 class StateError(RuntimeError):
@@ -140,10 +141,10 @@ class Database:
         if self.engine != "filekv":
             return
         with self._lock:
-            obj = {"name": self.name, "ts": time.time(),
+            obj = {"name": self.name, "ts": time.time(), "codec": codec_name(),
                    "tables": [t.to_obj() for t in self._tables.values()]}
-        blob = zstandard.ZstdCompressor(level=3).compress(
-            msgpack.packb(obj, default=_default, use_bin_type=True))
+        blob = compress(
+            msgpack.packb(obj, default=_default, use_bin_type=True), level=3)
         tmp = f"{self.path}.tmp"
         with open(tmp, "wb") as f:
             f.write(blob)
@@ -152,7 +153,7 @@ class Database:
     def _load(self) -> None:
         with open(self.path, "rb") as f:
             blob = f.read()
-        obj = msgpack.unpackb(zstandard.ZstdDecompressor().decompress(blob),
+        obj = msgpack.unpackb(decompress(blob),
                               ext_hook=_ext_hook, raw=False, strict_map_key=False)
         for tobj in obj["tables"]:
             t = Table.from_obj(tobj)

@@ -2,7 +2,8 @@
 
 Design (1000-node story, DESIGN.md §7):
 
-* **Sharded**: each host writes one zstd-compressed msgpack shard containing
+* **Sharded**: each host writes one compressed msgpack shard (zstd when
+  available, zlib fallback — see ``core/compression.py``) containing
   only the param/optimizer slices it owns (`PartitionSpec`-addressable), so
   checkpoint bandwidth scales with hosts.  In this single-host container the
   shard set has one member, but the layout/manifest format is multi-shard.
@@ -34,9 +35,9 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
 
 from repro.core.bus import _default, _ext_hook
+from repro.core.compression import codec_name, compress, decompress
 
 
 class CheckpointError(RuntimeError):
@@ -98,8 +99,8 @@ class CheckpointManager:
         for name, arr in zip(names, host_leaves):
             shard[name] = {"dtype": str(arr.dtype), "shape": list(arr.shape),
                            "data": arr.tobytes()}
-        blob = zstandard.ZstdCompressor(level=1).compress(
-            msgpack.packb(shard, default=_default, use_bin_type=True))
+        blob = compress(
+            msgpack.packb(shard, default=_default, use_bin_type=True), level=1)
         shard_name = f"shard_{self.host_id:05d}.dxckpt"
         with open(os.path.join(tmp, shard_name), "wb") as f:
             f.write(blob)
@@ -110,6 +111,7 @@ class CheckpointManager:
             "time": time.time(),
             "n_hosts": self.n_hosts,
             "leaves": names,
+            "codec": codec_name(),
             "shards": {shard_name: {"sha256": digest, "bytes": len(blob)}},
             "meta": meta,
         }
@@ -186,7 +188,7 @@ class CheckpointManager:
             if hashlib.sha256(blob).hexdigest() != info["sha256"]:
                 raise CheckpointError(f"checksum mismatch in {shard_name}")
             shard = msgpack.unpackb(
-                zstandard.ZstdDecompressor().decompress(blob),
+                decompress(blob),
                 ext_hook=_ext_hook, raw=False, strict_map_key=False)
             for name, rec in shard.items():
                 merged[name] = np.frombuffer(

@@ -1,0 +1,348 @@
+"""The v2 fluent API: decorator registration + stream combinators.
+
+Three contracts:
+(a) a topology built with decorators/combinators compiles to the *same*
+    Application spec graph as the v1 spec-style build (modulo logic callables);
+(b) combinator payloads (.map/.filter/.fuse/.window) flow end-to-end on a
+    live Operator;
+(c) schema inference rejects, at composition time, a combinator whose output
+    violates the declared downstream schema.
+"""
+import dataclasses
+import time
+
+import pytest
+
+from repro.core import (ActuatorSpec, AnalyticsUnitSpec, App, Application,
+                        ConfigSchema, DriverSpec, DSLError, FieldSpec,
+                        GadgetSpec, Operator, SchemaMismatch, SensorSpec,
+                        StreamHandle, StreamSchema, StreamSpec, connect,
+                        drain)
+
+READING = StreamSchema.of(t=FieldSpec("float"))
+SCORE = StreamSchema.of(t=FieldSpec("float"), score=FieldSpec("float"))
+
+
+# ---------------------------------------------------------------------------
+# Shared business logic (identical callables for v1 and v2 builds)
+# ---------------------------------------------------------------------------
+
+def _thermometer_gen(n):
+    return ({"t": 20.0 + i} for i in range(n))
+
+
+def _scorer(ctx):
+    return lambda s, p: {"t": p["t"], "score": p["t"] - 20.0}
+
+
+def _quickstart_v2() -> App:
+    """The examples/quickstart.py topology, v2 style."""
+    app = App("quickstart")
+
+    @app.driver(emits=READING, name="thermometer")
+    def thermometer(ctx, n=200):
+        return _thermometer_gen(n)
+
+    @app.analytics_unit(expects=(READING,), emits=SCORE, name="anomaly")
+    def anomaly(ctx):
+        return _scorer(ctx)
+
+    @app.actuator(expects=(SCORE,), name="alarm")
+    def alarm(ctx, threshold=4.0):
+        return lambda s, p: None
+
+    scores = app.sense("lab-temp", thermometer, n=200).via(anomaly,
+                                                           name="anomalies")
+    scores >> app.gadget("siren", alarm)
+    return app
+
+
+def _quickstart_v1() -> Application:
+    """The same topology, v1 spec-style (what v2 must compile down to)."""
+    app = Application(name="quickstart")
+    app.driver(DriverSpec(
+        name="thermometer", logic=lambda ctx: _thermometer_gen(ctx.config["n"]),
+        config_schema=ConfigSchema.of(n=("int", 200)), output_schema=READING))
+    app.analytics_unit(AnalyticsUnitSpec(
+        name="anomaly", logic=_scorer, input_schemas=(READING,),
+        output_schema=SCORE))
+    app.actuator(ActuatorSpec(
+        name="alarm", logic=lambda ctx: (lambda s, p: None),
+        config_schema=ConfigSchema.of(threshold=("float", 4.0)),
+        input_schemas=(SCORE,)))
+    app.sensor(SensorSpec(name="lab-temp", driver="thermometer",
+                          config={"n": 200}))
+    app.stream(StreamSpec(name="anomalies", analytics_unit="anomaly",
+                          inputs=("lab-temp",)))
+    app.gadget(GadgetSpec(name="siren", actuator="alarm",
+                          inputs=("anomalies",)))
+    return app
+
+
+def _comparable(a: Application) -> dict:
+    """Project an Application to its logic-free spec graph."""
+    def proj(spec):
+        d = dataclasses.asdict(spec)
+        d.pop("logic", None)
+        return d
+    return {field: [proj(s) for s in getattr(a, field)]
+            for field in ("drivers", "analytics_units", "actuators",
+                          "sensors", "streams", "gadgets", "databases")}
+
+
+# ---------------------------------------------------------------------------
+# (a) compile equivalence
+# ---------------------------------------------------------------------------
+
+def test_v2_compiles_to_v1_spec_graph():
+    v1, v2 = _quickstart_v1(), _quickstart_v2().build()
+    assert _comparable(v1) == _comparable(v2)
+    # both graphs validate to the same topo order
+    assert v1.validate() == v2.validate() == ["anomalies"]
+    assert v1.loc_footprint() == v2.loc_footprint() == 6
+
+
+def test_config_schema_inferred_from_keyword_defaults():
+    app = App("infer")
+
+    @app.driver
+    def src(ctx, rate=2.5, url: str = "nats://x", verbose=False, n=3):
+        return iter(())
+
+    schema = app.build().drivers[0].config_schema
+    assert schema.fields == {"rate": ("float", 2.5), "url": ("str", "nats://x"),
+                             "verbose": ("bool", False), "n": ("int", 3)}
+    # a parameter without a default compiles to a REQUIRED field
+    @app.analytics_unit
+    def au(ctx, mode: str):
+        return lambda s, p: p
+
+    au_schema = app.build().analytics_units[0].config_schema
+    assert au_schema.fields == {"mode": ("str", ConfigSchema.REQUIRED)}
+    with pytest.raises(KeyError):
+        au_schema.validate({})
+
+
+def test_output_schema_from_return_annotation():
+    app = App("ann")
+
+    @app.driver
+    def src(ctx) -> READING:  # type: ignore[valid-type]
+        return iter(())
+
+    assert app.build().drivers[0].output_schema == READING
+
+
+def test_duplicate_names_rejected():
+    app = App("dups")
+
+    @app.driver(emits=READING)
+    def src(ctx):
+        return iter(())
+
+    with pytest.raises(DSLError):
+        @app.driver(name="src")
+        def src2(ctx):
+            return iter(())
+
+    app.sense("s", src)
+    with pytest.raises(DSLError):
+        app.sense("s", src)
+
+
+# ---------------------------------------------------------------------------
+# (b) combinators flow end-to-end on a live Operator
+# ---------------------------------------------------------------------------
+
+def test_map_filter_fuse_window_end_to_end():
+    app = App("combo")
+
+    @app.driver(emits=READING)
+    def src(ctx, n=10):
+        return iter([{"t": float(i)} for i in range(n)])
+
+    raw = app.sense("raw", src)
+    doubled = raw.map(lambda p: {"t": p["t"] * 2}, emits=READING,
+                      name="doubled")
+    big = doubled.filter(lambda p: p["t"] >= 10.0, name="big")
+    pairs = big.window(2, name="pairs")
+    summed = StreamHandle.fuse(
+        doubled, big, with_=lambda a, b: {"t": a["t"] + b["t"]},
+        emits=READING, name="summed")
+
+    with connect(start=False) as op:
+        app.deploy(op, start_sensors=False)
+        sub_pairs = op.subscribe("pairs")
+        sub_sum = op.subscribe("summed")
+        sub_big = op.subscribe("big")
+        op.start_pending_sensors()
+        # doubled = 0,2,...,18 ; big = 10,...,18 (5 msgs)
+        assert [m.payload["t"] for m in drain(sub_big, 5)] == \
+            [10.0, 12.0, 14.0, 16.0, 18.0]
+        # tumbling window of 2 over big -> 2 full windows
+        wins = drain(sub_pairs, 2)
+        assert [m.payload["count"] for m in wins] == [2, 2]
+        assert [p["t"] for p in wins[0].payload["window"]] == [10.0, 12.0]
+        # FIFO pairing of doubled with big
+        assert [m.payload["t"] for m in drain(sub_sum, 3)] == \
+            [10.0, 14.0, 18.0]
+
+
+def test_via_decorated_au_and_gadget_sink_live():
+    app = App("live")
+    hits: list[dict] = []
+
+    @app.driver(emits=READING)
+    def src(ctx, n=5):
+        return iter([{"t": 20.0 + i} for i in range(n)])
+
+    @app.analytics_unit(expects=(READING,), emits=SCORE)
+    def scorer(ctx):
+        return _scorer(ctx)
+
+    @app.actuator(expects=(SCORE,))
+    def sink(ctx, threshold=2.0):
+        return lambda s, p: hits.append(p) if p["score"] > threshold else None
+
+    app.sense("in", src).via(scorer, name="scores") >> app.gadget("g", sink)
+    with connect(start=False) as op:
+        app.deploy(op, start_sensors=False)
+        sub = op.subscribe("scores")
+        op.start_pending_sensors()
+        assert len(drain(sub, 5)) == 5
+        deadline = time.monotonic() + 5
+        while len(hits) < 2 and time.monotonic() < deadline:
+            time.sleep(0.02)
+    assert sorted(p["score"] for p in hits) == [3.0, 4.0]
+
+
+def test_synthetic_aus_are_observable_entities():
+    """Combinator lambdas become real (upgradeable/observable) AU specs."""
+    app = App("syn")
+
+    @app.driver(emits=READING)
+    def src(ctx):
+        return iter(())
+
+    app.sense("s", src).map(lambda p: p, name="s2")
+    built = app.build()
+    assert [a.name for a in built.analytics_units] == ["s2.map"]
+    spec = built.analytics_units[0]
+    assert (spec.min_instances, spec.max_instances) == (1, 1)
+    assert built.streams[0].fixed_instances == 1
+    assert app.declared_footprint() == app.loc_footprint() - 1
+
+
+# ---------------------------------------------------------------------------
+# (c) eager schema rejection at composition time
+# ---------------------------------------------------------------------------
+
+def test_map_output_violating_downstream_schema_rejected():
+    app = App("reject")
+
+    @app.driver(emits=READING)
+    def src(ctx):
+        return iter(())
+
+    @app.analytics_unit(expects=(SCORE,), emits=SCORE)
+    def needs_scores(ctx):
+        return lambda s, p: p
+
+    raw = app.sense("s", src)
+    # READING lacks the required 'score' field demanded by the AU
+    with pytest.raises(SchemaMismatch):
+        raw.map(lambda p: p, emits=READING, name="still-readings") \
+           .via(needs_scores)
+    # an untyped map makes no guarantees -> also rejected by a typed consumer
+    with pytest.raises(SchemaMismatch):
+        raw.map(lambda p: p, name="untyped").via(needs_scores)
+
+
+def test_gadget_edge_schema_rejected():
+    app = App("reject-gadget")
+
+    @app.driver(emits=READING)
+    def src(ctx):
+        return iter(())
+
+    @app.actuator(expects=(SCORE,))
+    def sink(ctx):
+        return lambda s, p: None
+
+    with pytest.raises(SchemaMismatch):
+        app.sense("s", src) >> app.gadget("g", sink)
+
+
+def test_sense_validates_config_eagerly():
+    app = App("cfg")
+
+    @app.driver(emits=READING)
+    def src(ctx, n=5):
+        return iter(())
+
+    with pytest.raises(KeyError):
+        app.sense("s", src, bogus=1)
+    with pytest.raises(TypeError):
+        app.sense("s", src, n="not-an-int")
+
+
+def test_fuse_requires_two_streams_same_app():
+    app_a, app_b = App("a"), App("b")
+
+    @app_a.driver(emits=READING)
+    def src_a(ctx):
+        return iter(())
+
+    @app_b.driver(emits=READING)
+    def src_b(ctx):
+        return iter(())
+
+    ha, hb = app_a.sense("sa", src_a), app_b.sense("sb", src_b)
+    with pytest.raises(DSLError):
+        StreamHandle.fuse(ha, with_=lambda a: a)
+    with pytest.raises(DSLError):
+        StreamHandle.fuse(ha, hb, with_=lambda a, b: a)
+
+
+def test_fuse_rejects_misdirected_kwargs():
+    app = App("fuse-kwargs")
+
+    @app.driver(emits=READING)
+    def src(ctx):
+        return iter(())
+
+    @app.analytics_unit(expects=(READING, READING), emits=READING)
+    def joiner(ctx):
+        return lambda s, p: p
+
+    ha, hb = app.sense("a", src), app.sense("b", src)
+    # config kwargs can't reach a plain callable — loud, not silent
+    with pytest.raises(DSLError):
+        StreamHandle.fuse(ha, hb, with_=lambda x, y: x, gain=2.0)
+    # a callable fuse's pairing buffer is per-instance: single-instance only
+    with pytest.raises(DSLError):
+        StreamHandle.fuse(ha, hb, with_=lambda x, y: x, fixed_instances=2)
+    # a registered AU's output schema is declared, not overridden by emits=
+    with pytest.raises(DSLError):
+        StreamHandle.fuse(ha, hb, with_=joiner, emits=SCORE)
+
+
+def test_duplicate_database_rejected_at_declaration():
+    app = App("dbs")
+    app.database("x")
+    with pytest.raises(DSLError):
+        app.database("x")
+
+
+# ---------------------------------------------------------------------------
+# connect() lifecycle
+# ---------------------------------------------------------------------------
+
+def test_connect_owns_operator_lifecycle():
+    with connect(reconcile_interval_s=0.05) as op:
+        assert isinstance(op, Operator)
+        assert op._reconciler is not None and op._reconciler.is_alive()
+        bus = op.bus
+    assert op._reconciler is None          # reconciler joined on exit
+    with pytest.raises(Exception):
+        bus.publish("x", {}, token="t")    # bus closed
