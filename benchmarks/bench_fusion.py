@@ -1,0 +1,107 @@
+"""Claim (tentpole PR 2): device-fused stream chains beat per-hop bus routing.
+
+The same 4-stage ``.map`` pipeline is deployed twice on a live Operator:
+
+* **bus** — ``build(fuse=False)``: every stage is its own microservice; each
+  hop is a bus subject with queue hand-off, schema validation and a thread
+  wake-up per message (the v1 execution model).
+* **fused** — ``build(fuse=True)``: the chain-fusion pass collapses the four
+  stages into ONE unit — interior hops are in-program values.  The executor
+  is backend-aware (``fusion.JIT_MODE == "auto"``): a single jitted program
+  on accelerators, the host-composed chain on CPU.
+
+When jax is importable, a third informational variant forces the jitted
+program on whatever backend is present (``fused_jit``) — on CPU it documents
+the XLA per-message dispatch cost that "auto" mode avoids.
+
+Metric: end-to-end messages/s from sensor start to the last exit message.
+``run()`` returns the machine-readable variant->metric dict that
+``benchmarks.run`` writes to ``BENCH_fusion.json``; CI gates on
+``speedup`` (fused-default over bus) > 1.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import App, StreamSchema, connect, drain
+from repro.core import fusion
+
+from .common import emit
+
+TENSOR = StreamSchema.device(x=((64, 64), "float32"))
+# streams are lossy (drop-oldest mailboxes, capacity 256): keep the burst
+# strictly under the per-instance queue size so both variants are lossless
+# and the drain count is exact
+FRAMES = 200
+RUNS = 3  # best-of, to keep the CI gate robust to scheduler noise
+
+
+def _app(frames: int) -> App:
+    app = App("fusion-bench")
+
+    @app.driver(emits=TENSOR)
+    def source(ctx, frames=FRAMES):
+        base = np.ones((64, 64), np.float32)
+        return ({"x": base * (i % 7)} for i in range(frames))
+
+    (app.sense("frames", source, frames=frames)
+        .map(lambda p: {"x": p["x"] * 2.0}, emits=TENSOR, device=True,
+             name="scaled")
+        .map(lambda p: {"x": p["x"] + 1.0}, emits=TENSOR, device=True,
+             name="shifted")
+        .map(lambda p: {"x": p["x"].clip(0.0)}, emits=TENSOR,
+             device=True, name="rectified")
+        .map(lambda p: {"x": p["x"] - 3.0}, emits=TENSOR, device=True,
+             name="normed"))
+    return app
+
+
+def _measure(fuse: bool, frames: int = FRAMES) -> float:
+    """Deploy, push ``frames`` messages through, return messages/s."""
+    app = _app(frames)
+    with connect(start=False) as op:
+        app.deploy(op, start_sensors=False, fuse=fuse)
+        sub = op.subscribe("normed", maxsize=frames + 8)
+        time.sleep(0.3)  # let instances boot (and the fused unit jit-warm)
+        t0 = time.perf_counter()
+        op.start_pending_sensors()
+        got = len(drain(sub, frames, timeout=120))
+        dt = time.perf_counter() - t0
+    return got / dt
+
+
+def run() -> dict:
+    fused = max(_measure(True) for _ in range(RUNS))
+    bus = max(_measure(False) for _ in range(RUNS))
+    speedup = fused / bus
+    emit("fusion_fused_chain", 1e6 / fused, f"msgs_per_s={fused:.0f}")
+    emit("fusion_bus_chain", 1e6 / bus, f"msgs_per_s={bus:.0f}")
+    emit("fusion_speedup", 0.0, f"fused_over_bus={speedup:.2f}x")
+    data = {
+        "fused_msgs_per_s": round(fused, 1),
+        "bus_msgs_per_s": round(bus, 1),
+        "speedup": round(speedup, 3),
+        "frames": FRAMES,
+        "stages": 4,
+    }
+    if fusion.jax_available():
+        import jax
+        import os
+        # env var, not JIT_MODE: DATAX_FUSION_JIT takes precedence over the
+        # module knob, so only the env var reliably forces the jitted path
+        old = os.environ.get("DATAX_FUSION_JIT")
+        os.environ["DATAX_FUSION_JIT"] = "always"
+        try:
+            fused_jit = max(_measure(True) for _ in range(RUNS))
+        finally:
+            if old is None:
+                del os.environ["DATAX_FUSION_JIT"]
+            else:
+                os.environ["DATAX_FUSION_JIT"] = old
+        emit("fusion_fused_jit_chain", 1e6 / fused_jit,
+             f"msgs_per_s={fused_jit:.0f} backend={jax.default_backend()}")
+        data["fused_jit_msgs_per_s"] = round(fused_jit, 1)
+        data["jit_backend"] = jax.default_backend()
+    return data

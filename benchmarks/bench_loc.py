@@ -161,7 +161,7 @@ def _loc(obj) -> int:
                 if l.strip() and not l.strip().startswith("#")])
 
 
-def run() -> None:
+def run() -> dict:
     import sys
     sys.path.insert(0, "tests")
     from test_system import _fever_app
@@ -178,3 +178,10 @@ def run() -> None:
          f"v1_entities={v1_app.loc_footprint()} "
          f"v2_entities={v2_app.declared_footprint()} "
          f"note=raw version has no restart/autoscale/schema/authz")
+    return {
+        "raw_loc": raw_loc,
+        "datax_v1_loc": v1_loc,
+        "datax_v2_loc": v2_loc,
+        "v1_entities": v1_app.loc_footprint(),
+        "v2_entities": v2_app.declared_footprint(),
+    }

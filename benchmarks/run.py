@@ -1,46 +1,84 @@
 """Benchmark harness — one entry per paper claim/figure (DESIGN.md §9).
 
-Prints ``name,us_per_call,derived`` CSV.  Run:
-    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+Prints ``name,us_per_call,derived`` CSV.  Benchmarks whose ``run()`` returns a
+dict also get a machine-readable artifact ``BENCH_<name>.json`` (variant ->
+metric) for CI trending and gating.  Run:
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--gate] [--out-dir D]
+
+``--gate`` turns known regression checks into hard failures — today: the
+fused device chain must beat per-hop bus execution (BENCH_fusion.json
+``speedup`` > 1).  Modules are imported lazily so a minimal-deps environment
+(no jax) can still run the core benchmarks.
 """
 from __future__ import annotations
 
 import argparse
+import importlib
+import json
+import pathlib
 import sys
 import traceback
 
-from . import (bench_autoscale, bench_bus, bench_compression, bench_kernels,
-               bench_loc, bench_pipeline, bench_reuse, bench_serve,
-               bench_train)
-
 ALL = {
-    "bus": bench_bus,
-    "pipeline": bench_pipeline,
-    "autoscale": bench_autoscale,
-    "loc": bench_loc,
-    "reuse": bench_reuse,
-    "kernels": bench_kernels,
-    "compression": bench_compression,
-    "serve": bench_serve,
-    "train": bench_train,
+    "bus": "bench_bus",
+    "pipeline": "bench_pipeline",
+    "autoscale": "bench_autoscale",
+    "loc": "bench_loc",
+    "reuse": "bench_reuse",
+    "fusion": "bench_fusion",
+    "kernels": "bench_kernels",
+    "compression": "bench_compression",
+    "serve": "bench_serve",
+    "train": "bench_train",
 }
+
+
+def _gate(results: dict[str, dict]) -> list[str]:
+    """Regression checks over the collected metric dicts."""
+    failures = []
+    fusion = results.get("fusion")
+    if fusion is not None and fusion.get("speedup", 0.0) <= 1.0:
+        failures.append(
+            f"fusion: fused chain not faster than per-hop bus "
+            f"(fused={fusion.get('fused_msgs_per_s')} msgs/s, "
+            f"bus={fusion.get('bus_msgs_per_s')} msgs/s)")
+    return failures
 
 
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", choices=sorted(ALL), default=None)
+    ap.add_argument("--gate", action="store_true",
+                    help="fail on known benchmark regressions (CI)")
+    ap.add_argument("--out-dir", default=".",
+                    help="where BENCH_<name>.json artifacts are written")
     args = ap.parse_args()
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
     print("name,us_per_call,derived")
     failed = 0
-    for name, mod in ALL.items():
+    results: dict[str, dict] = {}
+    for name, modname in ALL.items():
         if args.only and name != args.only:
             continue
         try:
-            mod.run()
+            mod = importlib.import_module(f".{modname}", package=__package__)
+            data = mod.run()
+            if isinstance(data, dict):
+                results[name] = data
+                path = out_dir / f"BENCH_{name}.json"
+                path.write_text(json.dumps(data, indent=2, sort_keys=True)
+                                + "\n")
+                print(f"{name},0.0,artifact={path}")
         except Exception:
             failed += 1
             print(f"{name},-1,FAILED")
             traceback.print_exc()
+    if args.gate:
+        for failure in _gate(results):
+            failed += 1
+            print(f"GATE FAILED: {failure}", file=sys.stderr)
     return 1 if failed else 0
 
 

@@ -1,15 +1,19 @@
 #!/usr/bin/env bash
-# CI entrypoint: deps + tier-1 tests + headless runs of the shipped examples,
-# so example drift fails the build fast.
+# CI entrypoint: deps + tier-1 tests + headless runs of the shipped examples
+# + benchmark artifacts with the fusion regression gate.  Runs on two matrix
+# legs (.github/workflows/ci.yml): full deps, and minimal deps via
+# CI_SKIP_INSTALL=1 (no jax/zstandard/hypothesis) to exercise every
+# graceful-degradation path.
 set -euo pipefail
 cd "$(dirname "$0")"
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 # Best-effort dependency install; the repo degrades gracefully without the
-# optional ones (zstandard -> zlib fallback, hypothesis -> skipped tests).
+# optional ones (jax -> host-composed fusion, zstandard -> zlib fallback,
+# hypothesis -> skipped tests).
 if [ "${CI_SKIP_INSTALL:-0}" != "1" ]; then
-    python -m pip install --quiet pytest msgpack numpy jax zstandard hypothesis \
+    python -m pip install --quiet -r requirements.txt \
         || echo "ci.sh: pip install failed (offline?); using preinstalled deps"
 fi
 
@@ -19,8 +23,15 @@ python -m pytest -x -q
 echo "== examples (headless) =="
 python examples/quickstart.py
 python examples/fever_screening.py
+python examples/stream_reuse.py
+
+echo "== benchmarks: fusion regression gate =="
+# writes BENCH_fusion.json; fails if the fused device chain is not faster
+# than per-hop bus execution on the 4-stage benchmark topology
+python -m benchmarks.run --only fusion --gate
 
 echo "== benchmarks: productivity claim =="
+# writes BENCH_loc.json
 python -m benchmarks.run --only loc
 
 echo "ci.sh: OK"

@@ -1,10 +1,13 @@
 """Claim §3 "Effortless data streams reuse": a second application subscribes
 to a stream registered by the first — no producer changes, no new plumbing.
 
-App 1: security camera -> object detections.
-App 2 (deployed later, by a different team): subscribes to `detections`
-and builds a people-counter dashboard, reusing both the stream AND the
-registered AU catalog.
+App 1: security camera -> object detections (v2 fluent DSL).
+App 2 (deployed later, by a different team): picks up `detections` with
+``app.external(...)`` and builds a people-counter dashboard, reusing both the
+stream AND the live operator — the producer app is never modified.
+
+(The spec-style v1 surface is still covered by examples/serve_lm.py and
+examples/train_lm.py.)
 
 Run:  PYTHONPATH=src python examples/stream_reuse.py
 """
@@ -12,48 +15,43 @@ import time
 
 import numpy as np
 
-from repro.core import (AnalyticsUnitSpec, ConfigSchema, DriverSpec,
-                        FieldSpec, Operator, SensorSpec, StreamSchema,
-                        StreamSpec)
+from repro.core import App, FieldSpec, StreamSchema, connect
 
 FRAME = StreamSchema.of(frame_id=FieldSpec("int"), n_people=FieldSpec("int"))
 
 
-def main() -> None:
-    op = Operator()
+def camera_app() -> App:
+    app = App("camera-app")
 
-    # ----- app 1: camera -> detector ---------------------------------------
-    def camera(ctx):
+    @app.driver(emits=FRAME)
+    def camera(ctx, frames=150):
         rng = np.random.default_rng(0)
 
         def gen():
-            for i in range(ctx.config["frames"]):
+            for i in range(frames):
                 if not ctx.running:
                     return
                 time.sleep(0.01)
                 yield {"frame_id": i, "n_people": int(rng.integers(0, 5))}
         return gen()
 
+    @app.analytics_unit(expects=(FRAME,), emits=FRAME)
     def detector(ctx):
         return lambda s, p: {"frame_id": p["frame_id"],
                              "n_people": p["n_people"]}
 
-    op.register_driver(DriverSpec(
-        name="camera", logic=camera,
-        config_schema=ConfigSchema.of(frames=("int", 150)),
-        output_schema=FRAME))
-    op.register_analytics_unit(AnalyticsUnitSpec(
-        name="detector", logic=detector, output_schema=FRAME))
-    op.register_sensor(SensorSpec(name="lobby-cam", driver="camera"),
-                       start=False)
-    op.create_stream(StreamSpec(name="detections", analytics_unit="detector",
-                                inputs=("lobby-cam",)))
-    op.start()
+    # .tap(): promise `detections` to external subscribers — it always stays
+    # a bus subject, even if this chain later gains device stages that fuse
+    app.sense("lobby-cam", camera).via(detector, name="detections").tap()
+    return app
 
-    # ----- app 2: a different team reuses 'detections' ----------------------
-    print("app2 discovers registered streams:", op.registered_streams())
 
-    def counter(ctx):
+def dashboard_app() -> App:
+    """A different team's app: consumes `detections` without owning it."""
+    app = App("dashboard-app")
+
+    @app.analytics_unit(expects=(FRAME,), emits=FRAME)
+    def people_counter(ctx):
         total = {"n": 0}
 
         def process(s, p):
@@ -61,25 +59,33 @@ def main() -> None:
             return {"frame_id": p["frame_id"], "n_people": total["n"]}
         return process
 
-    op.register_analytics_unit(AnalyticsUnitSpec(
-        name="people-counter", logic=counter, output_schema=FRAME))
-    op.create_stream(StreamSpec(name="occupancy", analytics_unit="people-counter",
-                                inputs=("detections",), fixed_instances=1))
-    dashboard = op.subscribe("occupancy", name="dashboard")
-    op.start_pending_sensors()
+    app.external("detections", FRAME).via(people_counter, name="occupancy",
+                                          fixed_instances=1)
+    return app
 
-    seen = 0
-    last = None
-    deadline = time.monotonic() + 20
-    while seen < 100 and time.monotonic() < deadline:
-        m = dashboard.next(timeout=0.5)
-        if m:
-            seen += 1
-            last = m.payload
-    print(f"dashboard consumed {seen} occupancy updates; "
-          f"cumulative count = {last['n_people'] if last else '?'}")
-    print("producer app was never modified: reuse cost = 1 StreamSpec")
-    op.shutdown()
+
+def main() -> None:
+    with connect() as op:
+        camera_app().deploy(op, start_sensors=False)
+
+        # ----- app 2: a different team reuses 'detections' ------------------
+        print("app2 discovers registered streams:", op.registered_streams())
+        dashboard_app().deploy(op, start_sensors=False)
+        dashboard = op.subscribe("occupancy", name="dashboard")
+        op.start_pending_sensors()
+
+        seen = 0
+        last = None
+        deadline = time.monotonic() + 20
+        while seen < 100 and time.monotonic() < deadline:
+            m = dashboard.next(timeout=0.5)
+            if m:
+                seen += 1
+                last = m.payload
+        print(f"dashboard consumed {seen} occupancy updates; "
+              f"cumulative count = {last['n_people'] if last else '?'}")
+        print("producer app was never modified: reuse cost = 1 external() + "
+              "1 .via()")
 
 
 if __name__ == "__main__":

@@ -12,6 +12,7 @@ from .dsl import App, DSLError, GadgetHandle, SchemaMismatch, StreamHandle, conn
 from .entities import (ActuatorSpec, AnalyticsUnitSpec, DatabaseSpec,
                        DriverSpec, EntityKind, GadgetSpec, Placement,
                        SensorSpec, StreamSpec)
+from .fusion import FusedStage, fuse_application, plan_segments
 from .operator import CoherenceError, Operator, OperatorError
 from .schema import ConfigSchema, FieldSpec, Message, StreamSchema
 from .sdk import DataX, LogicContext, sdk_entrypoint
@@ -29,6 +30,7 @@ __all__ = [
     "drain",
     "ActuatorSpec", "AnalyticsUnitSpec", "DatabaseSpec", "DriverSpec",
     "EntityKind", "GadgetSpec", "Placement", "SensorSpec", "StreamSpec",
+    "FusedStage", "fuse_application", "plan_segments",
     "CoherenceError", "Operator", "OperatorError",
     "ConfigSchema", "FieldSpec", "Message", "StreamSchema",
     "DataX", "LogicContext", "sdk_entrypoint",

@@ -13,7 +13,7 @@ the coherence guarantees.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable
+from typing import Callable, Iterable, Mapping
 
 from .entities import (ActuatorSpec, AnalyticsUnitSpec, DatabaseSpec,
                        DriverSpec, GadgetSpec, SensorSpec, StreamSpec)
@@ -36,6 +36,10 @@ class Application:
     streams: list[StreamSpec] = dataclasses.field(default_factory=list)
     gadgets: list[GadgetSpec] = dataclasses.field(default_factory=list)
     databases: list[DatabaseSpec] = dataclasses.field(default_factory=list)
+    #: AU names opted into upgrade-in-place at deploy time (value: optional
+    #: config converter, §4) — populated by the v2 DSL's ``.via(upgrade=...)``.
+    upgrades: Mapping[str, Callable[[dict], dict] | None] = \
+        dataclasses.field(default_factory=dict)
 
     # -- fluent builders ------------------------------------------------------
     def driver(self, spec: DriverSpec) -> "Application":
@@ -128,8 +132,14 @@ class Application:
             op.create_database(db)
         for d in self.drivers:
             op.register_driver(d)
+        installed = op.describe()["analytics_units"] if self.upgrades else {}
         for a in self.analytics_units:
-            op.register_analytics_unit(a)
+            if a.name in self.upgrades and a.name in installed:
+                # re-compose to the Operator's §4 upgrade path: cascades to
+                # running streams, refused unless schema/converter-compatible
+                op.upgrade_analytics_unit(a, converter=self.upgrades[a.name])
+            else:
+                op.register_analytics_unit(a)
         for a in self.actuators:
             op.register_actuator(a)
         for s in self.sensors:

@@ -17,6 +17,13 @@ but verbose: seven parallel ``*Spec`` dataclasses and imperative
 * **eager schema checking** — every edge is checked at composition time
   (consumer's declared input schema must *accept* the producer's schema), so
   a type error surfaces at the line that wires the streams, not at deploy.
+* **device placement + chain fusion** — ``.map(fn, device=True)`` /
+  ``.filter(pred, device=True)`` declare pure array stages; at :meth:`App.build`
+  the chain-fusion pass (:mod:`~.fusion`) collapses maximal linear DEVICE
+  chains into one fused unit (a single jitted program on accelerator
+  backends) with zero interior bus hops.  ``.tap()`` pins a stream to the
+  bus; ``.via(au, upgrade=...)`` re-composes config upgrades to
+  ``op.upgrade_analytics_unit`` at deploy.
 
 Everything compiles deterministically into the existing
 :class:`~.app.Application` spec graph and deploys via ``Application.deploy``;
@@ -56,6 +63,7 @@ from .app import Application, AppValidationError
 from .entities import (ActuatorSpec, AnalyticsUnitSpec, DatabaseSpec,
                        DriverSpec, GadgetSpec, Placement, SensorSpec,
                        StreamSpec)
+from .fusion import fuse_application
 from .operator import Operator
 from .schema import ConfigSchema, StreamSchema
 
@@ -122,6 +130,13 @@ def _infer_output_schema(fn: Callable, emits: StreamSchema | None) -> StreamSche
     if emits is not None:
         return emits
     ann = getattr(fn, "__annotations__", {}).get("return")
+    if isinstance(ann, str):
+        # PEP 563 (`from __future__ import annotations` in the user's module)
+        # stringifies the annotation; resolve it against the factory's globals
+        try:
+            ann = eval(ann, getattr(fn, "__globals__", {}))  # noqa: S307
+        except Exception:
+            ann = None
     if isinstance(ann, StreamSchema):
         return ann
     return StreamSchema.untyped()
@@ -194,41 +209,78 @@ class StreamHandle:
 
     # -- routing through declared AUs ---------------------------------------
     def via(self, au: Any, *, name: str | None = None,
-            fixed_instances: int | None = None, **config: Any) -> "StreamHandle":
-        """Route this stream through a decorator-registered analytics unit."""
-        return self.app._compose_stream((self,), au, name=name,
-                                        fixed_instances=fixed_instances,
-                                        config=config)
+            fixed_instances: int | None = None,
+            upgrade: bool | Callable[[dict], dict] | None = None,
+            **config: Any) -> "StreamHandle":
+        """Route this stream through a decorator-registered analytics unit.
+
+        ``upgrade`` opts this AU into upgrade-in-place at deploy time: if the
+        target operator already runs an older version of the AU, the deploy
+        re-composes to ``op.upgrade_analytics_unit`` (cascading to running
+        streams, §4) instead of failing the registration.  Pass ``True`` for a
+        schema-compatible upgrade, or a converter ``old_config -> new_config``
+        for incompatible ones (accepted only if it succeeds for every running
+        instance).
+        """
+        handle = self.app._compose_stream((self,), au, name=name,
+                                          fixed_instances=fixed_instances,
+                                          config=config)
+        if upgrade:
+            self.app._upgrades[_entity_name(au)] = \
+                None if upgrade is True else upgrade
+        return handle
+
+    def tap(self) -> "StreamHandle":
+        """Promise this stream to external subscribers (§3 reuse).
+
+        A tapped stream always stays a bus subject: the fusion pass treats it
+        as a segment barrier instead of folding it into a device program.
+        """
+        self.app._taps.add(self.name)
+        return self
 
     # -- combinators (synthetic AUs) ----------------------------------------
     def map(self, fn: Callable[[dict], Any], *, name: str | None = None,
-            emits: StreamSchema | None = None) -> "StreamHandle":
+            emits: StreamSchema | None = None,
+            device: bool = False) -> "StreamHandle":
         """Transform each payload with ``fn(payload) -> payload | None``.
 
         The output schema is ``emits`` if given (checked against downstream
         consumers), else untyped — an untyped stream cannot feed a consumer
         that declares a typed input schema, so supply ``emits=`` at the last
         combinator before a typed edge.
+
+        ``device=True`` declares ``fn`` a *pure array transform* and places
+        the stage on the mesh: at build time, maximal chains of device stages
+        are fused into a single jitted program with no interior bus hops
+        (``fn`` must be traceable — numeric payload fields, no side effects;
+        untraceable stages fall back to per-stage host execution).
         """
         def factory(ctx):
             return lambda stream, payload: fn(payload)
         factory.__name__ = getattr(fn, "__name__", "map")
         return self.app._synthetic_stream(
             (self,), factory, kind="map", name=name,
-            emits=_infer_output_schema(fn, emits))
+            emits=_infer_output_schema(fn, emits),
+            placement=Placement.DEVICE if device else Placement.HOST,
+            pure_fn=fn if device else None)
 
     def filter(self, pred: Callable[[dict], bool], *,
-               name: str | None = None) -> "StreamHandle":
+               name: str | None = None, device: bool = False) -> "StreamHandle":
         """Keep only payloads where ``pred(payload)`` is truthy.
 
         Filtering never changes the message type, so the output schema is the
         input schema (the one combinator with exact schema propagation).
+        ``device=True`` fuses the predicate into the surrounding device chain
+        (predicated execution: stages still run, the keep flag gates emission).
         """
         def factory(ctx):
             return lambda stream, payload: payload if pred(payload) else None
         factory.__name__ = getattr(pred, "__name__", "filter")
         return self.app._synthetic_stream(
-            (self,), factory, kind="filter", name=name, emits=self.schema)
+            (self,), factory, kind="filter", name=name, emits=self.schema,
+            placement=Placement.DEVICE if device else Placement.HOST,
+            pure_fn=pred if device else None)
 
     def window(self, n: int, *, name: str | None = None,
                emits: StreamSchema | None = None) -> "StreamHandle":
@@ -267,6 +319,12 @@ class StreamHandle:
         """
         if len(handles) < 2:
             raise DSLError("fuse() needs at least two streams")
+        names = [h.name for h in handles]
+        if len(set(names)) != len(names):
+            # the pairing buffer is keyed by stream name; a self-join would
+            # collapse to one deque and crash on the first aligned pop
+            raise DSLError(f"fuse() streams must be distinct, got {names}; "
+                           f"self-joins need an intermediate .map/.via stream")
         apps = {h.app for h in handles}
         if len(apps) != 1:
             raise DSLError("fuse() streams must belong to the same App")
@@ -293,7 +351,10 @@ class StreamHandle:
         inputs = tuple(h.name for h in handles)
 
         def factory(ctx):
-            buf: dict[str, deque] = {s: deque() for s in inputs}
+            # bounded like every other platform queue: if one input stalls or
+            # lags, the other's backlog drops oldest instead of growing
+            # without limit (streams are lossy real-time flows)
+            buf: dict[str, deque] = {s: deque(maxlen=256) for s in inputs}
 
             def process(stream, payload):
                 buf[stream].append(payload)
@@ -362,6 +423,8 @@ class App:
         self._databases: list[DatabaseSpec] = []
         self._stream_names: set[str] = set()
         self._synthetic_aus = 0
+        self._taps: set[str] = set()
+        self._upgrades: dict[str, Callable[[dict], dict] | None] = {}
 
     # ================================================================ decl
     def driver(self, fn: Callable | None = None, *, name: str | None = None,
@@ -494,7 +557,9 @@ class App:
 
     def _synthetic_stream(self, inputs: Sequence[StreamHandle],
                           factory: Callable, *, kind: str, name: str | None,
-                          emits: StreamSchema) -> StreamHandle:
+                          emits: StreamSchema,
+                          placement: Placement = Placement.HOST,
+                          pure_fn: Callable | None = None) -> StreamHandle:
         """Wrap a combinator lambda into a synthetic single-instance AU."""
         sname = name or self._auto_name(inputs[0].name, kind)
         self._claim_stream_name(sname)
@@ -505,7 +570,8 @@ class App:
             output_schema=emits,
             # exactly-once per message: the bus fans out to every instance,
             # so combinators (often stateful closures) must run single-instance
-            min_instances=1, max_instances=1)
+            min_instances=1, max_instances=1,
+            placement=placement, pure_fn=pure_fn, combinator=kind)
         self._register(self._aus, au, "analytics unit")
         self._synthetic_aus += 1
         self._streams.append(StreamSpec(
@@ -526,9 +592,15 @@ class App:
         self._stream_names.add(name)
 
     # ================================================================ build
-    def build(self) -> Application:
-        """Compile to the v1 spec graph (deterministic: declaration order)."""
-        return Application(
+    def build(self, *, fuse: bool = True) -> Application:
+        """Compile to the v1 spec graph (deterministic: declaration order).
+
+        With ``fuse=True`` (default) the chain-fusion pass runs: maximal
+        linear chains of DEVICE-placement stages collapse into single jitted
+        units and their interior streams never reach the bus.  ``fuse=False``
+        keeps every hop a bus subject (debugging / A-B benchmarking).
+        """
+        application = Application(
             name=self.name,
             drivers=list(self._drivers.values()),
             analytics_units=list(self._aus.values()),
@@ -539,22 +611,28 @@ class App:
                                 inputs=tuple(g.inputs), config=g.config)
                      for g in self._gadgets],
             databases=list(self._databases),
+            upgrades=dict(self._upgrades),
         )
+        if fuse:
+            application = fuse_application(application,
+                                           taps=frozenset(self._taps))
+        return application
 
-    def deploy(self, op: Operator, *, start_sensors: bool = True) -> Application:
+    def deploy(self, op: Operator, *, start_sensors: bool = True,
+               fuse: bool = True) -> Application:
         """Compile + validate + deploy onto a live operator; returns the
         compiled :class:`Application` (handy for undeploy/introspection).
 
         ``start_sensors=False`` defers the sources so external subscribers
         can attach first; fire them with ``op.start_pending_sensors()``.
         """
-        application = self.build()
+        application = self.build(fuse=fuse)
         application.deploy(op, start_sensors=start_sensors)
         return application
 
     def loc_footprint(self) -> int:
         """#entities in the compiled graph (v1-comparable productivity proxy)."""
-        return self.build().loc_footprint()
+        return self.build(fuse=False).loc_footprint()
 
     def declared_footprint(self) -> int:
         """#entities the *developer* wrote (synthetic combinator AUs excluded)

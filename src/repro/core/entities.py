@@ -59,7 +59,22 @@ class DriverSpec:
 
 @dataclasses.dataclass(frozen=True)
 class AnalyticsUnitSpec:
-    """Transforms/fuses input streams into an output stream (paper §2)."""
+    """Transforms/fuses input streams into an output stream (paper §2).
+
+    Device lowering fields:
+
+    * ``pure_fn`` — the raw, side-effect-free payload function behind a DSL
+      combinator (``.map(fn, device=True)`` sets it to ``fn``).  The fusion
+      pass composes consecutive pure_fns into one ``jax.jit`` program; an AU
+      without one still fuses, but the segment executes host-composed.
+    * ``combinator`` — non-empty for synthetic DSL combinator AUs
+      ("map"/"filter"/"window"/"fuse"); the fusion pass may garbage-collect
+      synthetic AUs whose only stream was folded into a fused segment.
+    * ``fused_stages`` — non-empty marks a *fused* AU produced by the chain
+      fusion pass; it lists the stage AU names folded in, in chain order.
+      The Operator autoscales a fused unit as a whole (one microservice for
+      the whole segment) instead of skipping DEVICE placements.
+    """
 
     name: str
     logic: Callable[..., Any]            # factory: (ctx) -> process(payloads)->payload
@@ -71,6 +86,9 @@ class AnalyticsUnitSpec:
     stateful: bool = False               # wants a platform database attached
     min_instances: int = 1
     max_instances: int = 8
+    pure_fn: Callable[..., Any] | None = None
+    combinator: str = ""
+    fused_stages: Sequence[str] = ()
 
     kind = EntityKind.ANALYTICS_UNIT
 

@@ -1,0 +1,355 @@
+"""Chain-fusion compiler pass + device executor (TPU adaptation).
+
+DataX's promise is that the runtime "automatically sets up appropriate data
+communication mechanisms" for the declared graph.  For HOST analytics units the
+right mechanism is the message bus; for a *linear chain* of DEVICE-placement
+AUs the right mechanism is no communication at all — the chain should be one
+jitted program on the mesh, with interior hops as in-program values.
+
+This module is the first real compiler pass between the fluent API and the
+runtime.  It operates on the compiled v1 :class:`~.app.Application` spec graph
+(so v1 spec-style apps benefit too):
+
+1. **Segment detection** (:func:`plan_segments`) — maximal linear runs of
+   streams whose AU is ``Placement.DEVICE``, single-input, stateless, and
+   whose interior streams have exactly one consumer.  Fusion barriers:
+
+   * ``.window`` / ``fuse`` combinators (stateful / multi-input — never
+     DEVICE, so they stop a chain structurally);
+   * multi-subscriber taps — an interior stream consumed by a second stream
+     or a gadget must stay on the bus, so the segment splits there;
+   * explicit taps (:meth:`StreamHandle.tap` / the ``taps`` argument) — the
+     stream is promised to external subscribers and must remain a bus subject;
+   * fixed instance counts > 1 (fusing would change scaling semantics).
+
+2. **Collapse** (:func:`fuse_application`) — each segment of length >= 2 is
+   replaced by one synthetic fused AU + one stream named after the segment
+   exit.  Only the entry and exit edges touch the bus; interior subjects are
+   never registered.  Synthetic combinator AUs orphaned by the collapse are
+   garbage-collected; declared AUs stay in the catalog.
+
+3. **Execution** (:func:`make_fused_logic`) — the fused AU's factory
+   instantiates every stage factory (stage configs resolved at fusion time)
+   and chains them in-process.  When jax is importable, *every* stage
+   carries a ``pure_fn``, and the backend warrants it (:data:`JIT_MODE` —
+   accelerators by default), the stages are composed into a single
+   ``jax.jit`` program (:func:`repro.kernels.ops.jit_chain`); payloads move
+   to the device once at segment entry and back once at exit.  The device
+   path degrades transparently: no jax, a CPU-only backend, a stage without
+   a pure_fn, or a payload/stage that fails to trace (impure, non-numeric
+   fields) → the same chain runs host-composed, bit-identical to per-hop bus
+   execution, still with zero interior bus hops.
+
+Upgrading an individual stage AU after fusion does not cascade into already-
+deployed fused units (the fused AU snapshots stage logic at build time);
+redeploy the app to pick up new stage versions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Iterable, Mapping, Sequence
+
+import numpy as np
+
+from .app import Application
+from .entities import AnalyticsUnitSpec, Placement, StreamSpec
+from .schema import StreamSchema
+from .sdk import LogicContext, is_sdk_style
+
+try:  # the pass (host-composed path) must work without jax installed
+    import jax  # noqa: F401
+    _HAS_JAX = True
+except Exception:  # pragma: no cover - exercised via monkeypatch in tests
+    _HAS_JAX = False
+
+#: When the fused unit uses the jitted device program vs the host-composed
+#: chain (both are single-microservice, zero interior bus hops):
+#:
+#: * ``"auto"``   — jit only on accelerator backends (tpu/gpu).  On CPU the
+#:   per-message XLA dispatch + host<->device sync costs more than the numpy
+#:   math it replaces (same reasoning as kernels/ops.py interpret mode), so
+#:   the host chain IS the optimal lowering there.
+#: * ``"always"`` — jit whenever jax + pure stages allow (tests use this to
+#:   prove jit/host bit-identity on CPU).
+#: * ``"never"``  — host-composed chain only.
+#:
+#: Overridable via the DATAX_FUSION_JIT environment variable.
+JIT_MODE = "auto"
+
+
+def jax_available() -> bool:
+    """Gate for the jitted path (module-level so tests can monkeypatch)."""
+    return _HAS_JAX
+
+
+def _want_jit() -> bool:
+    import os
+    mode = os.environ.get("DATAX_FUSION_JIT", JIT_MODE)
+    if mode == "always":
+        return True
+    if mode == "never":
+        return False
+    import jax
+    return jax.default_backend() not in ("cpu",)
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedStage:
+    """One folded-in hop of a fused segment."""
+
+    au_name: str                  # stage AU (code entity) name
+    stream_name: str              # the stream this stage produced pre-fusion
+    factory: Callable             # the stage AU's logic factory
+    config: Mapping[str, Any]     # resolved (schema-validated) stage config
+    kind: str                     # "map" | "filter" | "au"
+    pure_fn: Callable | None      # payload fn for jit composition, if pure
+
+
+# ---------------------------------------------------------------------------
+# Segment detection
+# ---------------------------------------------------------------------------
+
+def _consumers(app: Application) -> dict[str, int]:
+    counts: dict[str, int] = {}
+    for s in app.streams:
+        for i in s.inputs:
+            counts[i] = counts.get(i, 0) + 1
+    for g in app.gadgets:
+        for i in g.inputs:
+            counts[i] = counts.get(i, 0) + 1
+    return counts
+
+
+def _fusible(spec: StreamSpec, aus: Mapping[str, AnalyticsUnitSpec]) -> bool:
+    au = aus.get(spec.analytics_unit)
+    return (au is not None
+            and au.placement is Placement.DEVICE
+            and not au.stateful
+            and not au.fused_stages          # never re-fuse a fused unit
+            and not is_sdk_style(au.logic)   # owns its own loop — can't chain
+            and len(spec.inputs) == 1
+            and spec.fixed_instances in (None, 1))
+
+
+def plan_segments(app: Application,
+                  taps: Iterable[str] = ()) -> list[list[StreamSpec]]:
+    """Maximal linear DEVICE segments, in topological order of their entries.
+
+    Every returned segment has length >= 2 (a single DEVICE stream gains
+    nothing from fusion — it already is one microservice).
+    """
+    taps = set(taps)
+    aus = {a.name: a for a in app.analytics_units}
+    streams = {s.name: s for s in app.streams}
+    consumers = _consumers(app)
+
+    def extendable(upstream: StreamSpec) -> StreamSpec | None:
+        """The unique fusible successor of ``upstream``, or None (barrier)."""
+        if consumers.get(upstream.name, 0) != 1 or upstream.name in taps:
+            return None  # multi-subscriber tap / promised bus subject
+        nxt = next((s for s in app.streams if upstream.name in s.inputs), None)
+        if nxt is not None and _fusible(nxt, aus):
+            return nxt
+        return None
+
+    segments: list[list[StreamSpec]] = []
+    in_segment: set[str] = set()
+    for spec in app.streams:  # declaration order is topological per validate()
+        if spec.name in in_segment or not _fusible(spec, aus):
+            continue
+        # head check: the producer of our input must not absorb us
+        prev = streams.get(spec.inputs[0])
+        if prev is not None and _fusible(prev, aus) \
+                and extendable(prev) is spec:
+            continue  # interior of a segment headed earlier
+        segment = [spec]
+        while True:
+            nxt = extendable(segment[-1])
+            if nxt is None:
+                break
+            segment.append(nxt)
+        if len(segment) >= 2:
+            segments.append(segment)
+            in_segment.update(s.name for s in segment)
+    return segments
+
+
+# ---------------------------------------------------------------------------
+# Device / host chain execution
+# ---------------------------------------------------------------------------
+
+def _to_device(payload: Mapping[str, Any]) -> dict:
+    """Payload -> jax arrays.  Raises on non-numeric fields (caller falls
+    back to the host chain)."""
+    import jax.numpy as jnp
+    out = {}
+    for k, v in payload.items():
+        if isinstance(v, (str, bytes, dict, list, tuple)):
+            raise TypeError(f"field {k!r} ({type(v).__name__}) is not "
+                            f"device-representable")
+        out[k] = jnp.asarray(v)
+    return out
+
+
+def _from_device(payload: Mapping[str, Any],
+                 like: Mapping[str, Any]) -> dict:
+    """Device arrays -> host values, mirroring what the same stage fns
+    produce on numpy inputs (the host/unfused path is ground truth, and the
+    two must stay interchangeable):
+
+    * 0-d results of a field that entered as a python scalar -> python
+      scalar (pass-through/arithmetic identity);
+    * any other 0-d result (reductions, new fields) -> numpy scalar, exactly
+      like a numpy reduction — NOT ``.item()``, which would let the jitted
+      path accept payloads (e.g. against a ``FieldSpec("float")``) that the
+      host path and per-hop bus execution reject;
+    * everything else -> ndarray.
+    """
+    out = {}
+    for k, v in payload.items():
+        arr = np.asarray(v)
+        if arr.ndim == 0:
+            src = like.get(k)
+            if src is not None and not isinstance(src, (np.ndarray, np.generic)):
+                out[k] = arr.item()
+            else:
+                out[k] = arr[()]
+        else:
+            out[k] = arr
+    return out
+
+
+def make_fused_logic(stages: Sequence[FusedStage],
+                     entry_schema: StreamSchema | None) -> Callable:
+    """Factory for the fused AU: chain every stage in one instance.
+
+    The returned factory honours the normal AU contract
+    (``factory(ctx) -> process(stream, payload)``) so the Executor runs a
+    fused unit exactly like any other microservice.
+    """
+
+    def fused_factory(ctx):
+        procs = []
+        for st in stages:
+            sctx = LogicContext(dict(st.config), db=ctx.db,
+                                instance_id=ctx.instance_id,
+                                stop_event=getattr(ctx, "_stop", None))
+            procs.append(st.factory(sctx))
+
+        def host_chain(i: int, stream: str, payload: dict) -> list:
+            if i == len(procs):
+                return [payload]
+            out = procs[i](stream, payload)
+            if out is None:
+                return []
+            results = []
+            for p in (out if isinstance(out, list) else [out]):
+                results.extend(host_chain(i + 1, stages[i].stream_name, p))
+            return results
+
+        program = None
+        if jax_available() and _want_jit() \
+                and all(st.pure_fn is not None for st in stages):
+            from ..kernels.ops import jit_chain
+            program = jit_chain([(st.kind, st.pure_fn) for st in stages])
+        mode = {"device": program is not None}
+
+        def run_device(payload: dict) -> dict | None:
+            dev, keep = program(_to_device(payload))
+            if not bool(keep):
+                return None
+            return _from_device(dev, payload)
+
+        def process(stream: str, payload: dict):
+            if mode["device"]:
+                try:
+                    return run_device(payload)
+                except Exception:
+                    # untraceable stage / non-numeric payload: permanently
+                    # drop to the host-composed chain (still zero bus hops)
+                    mode["device"] = False
+            out = host_chain(0, stream, payload)
+            if not out:
+                return None
+            return out if len(out) > 1 else out[0]
+
+        if program is not None and entry_schema is not None:
+            zeros = entry_schema.zero_payload()
+            if zeros is not None:
+                # compile before the first real message; the Executor calls
+                # this ahead of the pump loop and keeps it out of latency EWMA
+                process.warmup = lambda: run_device(zeros)
+        return process
+
+    return fused_factory
+
+
+# ---------------------------------------------------------------------------
+# The pass
+# ---------------------------------------------------------------------------
+
+def _stage_kind(au: AnalyticsUnitSpec) -> str:
+    return au.combinator if au.combinator in ("map", "filter") else "au"
+
+
+def fuse_application(app: Application, *,
+                     taps: Iterable[str] = ()) -> Application:
+    """Collapse every DEVICE segment of ``app`` into one fused AU + stream.
+
+    Pure: returns a new Application (or ``app`` unchanged when nothing fuses).
+    """
+    segments = plan_segments(app, taps)
+    if not segments:
+        return app
+
+    aus = {a.name: a for a in app.analytics_units}
+    producer_schema: dict[str, StreamSchema] = {}
+    for sensor in app.sensors:
+        drv = next((d for d in app.drivers if d.name == sensor.driver), None)
+        if drv is not None:
+            producer_schema[sensor.name] = drv.output_schema
+    for s in app.streams:
+        au = aus.get(s.analytics_unit)
+        if au is not None:
+            producer_schema[s.name] = au.output_schema
+
+    fused_streams: list[StreamSpec] = []
+    fused_aus: list[AnalyticsUnitSpec] = []
+    folded: set[str] = set()
+    au_names = set(aus)
+    for segment in segments:
+        entry, exit_ = segment[0], segment[-1]
+        stage_aus = [aus[s.analytics_unit] for s in segment]
+        stages = tuple(
+            FusedStage(au_name=au.name, stream_name=s.name, factory=au.logic,
+                       config=au.config_schema.validate(dict(s.config)),
+                       kind=_stage_kind(au), pure_fn=au.pure_fn)
+            for s, au in zip(segment, stage_aus))
+        name = f"{exit_.name}.fused"
+        while name in au_names:
+            name += "+"
+        au_names.add(name)
+        entry_schema = producer_schema.get(entry.inputs[0])
+        # the segment's envelope: never exceed ANY stage's declared ceiling;
+        # a contradictory pair (one stage's floor above another's ceiling)
+        # clamps the floor down rather than violating the ceiling
+        hi = max(1, min(au.max_instances for au in stage_aus))
+        lo = min(max(au.min_instances for au in stage_aus), hi)
+        fused_aus.append(AnalyticsUnitSpec(
+            name=name, logic=make_fused_logic(stages, entry_schema),
+            input_schemas=tuple(stage_aus[0].input_schemas),
+            output_schema=stage_aus[-1].output_schema,
+            placement=Placement.DEVICE,
+            min_instances=lo, max_instances=hi,
+            fused_stages=tuple(st.au_name for st in stages)))
+        fused_streams.append(StreamSpec(
+            name=exit_.name, analytics_unit=name, inputs=tuple(entry.inputs),
+            fixed_instances=1 if any(s.fixed_instances == 1 for s in segment)
+            else None))
+        folded.update(s.name for s in segment)
+
+    streams = [s for s in app.streams if s.name not in folded] + fused_streams
+    referenced = {s.analytics_unit for s in streams}
+    units = [a for a in app.analytics_units
+             if a.name in referenced or not a.combinator] + fused_aus
+    return dataclasses.replace(app, streams=streams, analytics_units=units)

@@ -288,8 +288,9 @@ class Operator:
         n = spec.fixed_instances if spec.fixed_instances is not None else au.min_instances
         for _ in range(max(1, n)):
             self._spawn_au(spec, au, resolved)
+        fused = (f", fused={list(au.fused_stages)}" if au.fused_stages else "")
         self._event("register", f"stream/{spec.name} (au={spec.analytics_unit}, "
-                                f"inputs={list(spec.inputs)})")
+                                f"inputs={list(spec.inputs)}{fused})")
 
     def _spawn_au(self, spec: StreamSpec, au: AnalyticsUnitSpec,
                   resolved: Mapping[str, Any]) -> InstanceHandle:
@@ -457,8 +458,17 @@ class Operator:
             with self._lock:
                 au = self._aus.get(spec.analytics_unit)
                 resolved = self._resolved.get(spec.name, {})
-            if au is None or au.placement is Placement.DEVICE:
+            if au is None:
                 continue
+            if au.placement is Placement.DEVICE and not au.fused_stages:
+                continue  # bare device AUs are mesh-managed, not thread-scaled
+            # a fused unit autoscales as a WHOLE: one decision for the whole
+            # segment (its min/max were folded from the stage specs), never
+            # per interior hop — those hops no longer exist on the bus.
+            # NB: scaled instances are replicas — the bus fans every message
+            # out to each of them, exactly as for scaled HOST streams (and as
+            # create_stream's min_instances spawns always have); single-
+            # delivery worker pools need bus queue groups (see ROADMAP)
             handles = self.executor.instances_of(spec.name)
             desired = self.autoscaler.decide(spec.name, handles,
                                              au.min_instances, au.max_instances)

@@ -54,6 +54,11 @@ class FieldSpec:
     dtype: str | None = None
     required: bool = True
     default: Any = None
+    #: Sharding hint for device fields: one mesh-axis name (or None) per dim,
+    #: e.g. ("data", None).  A *hint*, not a constraint — `accepts` ignores it;
+    #: the fusion pass forwards it so fused programs can be partitioned when a
+    #: multi-device mesh is available.
+    sharding: tuple | None = None
 
     def __post_init__(self) -> None:
         allowed = SCALAR_TYPES + ("ndarray", "device", "any")
@@ -131,12 +136,19 @@ class StreamSchema:
         return StreamSchema(fields=dict(fields))
 
     @staticmethod
-    def device(**arrays: "tuple[tuple, str]") -> "StreamSchema":
-        """Shorthand: StreamSchema.device(tokens=((B, S), 'int32'))."""
-        return StreamSchema(fields={
-            k: FieldSpec(kind="device", shape=tuple(shape), dtype=dtype)
-            for k, (shape, dtype) in arrays.items()
-        })
+    def device(**arrays: tuple) -> "StreamSchema":
+        """Shorthand: StreamSchema.device(tokens=((B, S), 'int32')).
+
+        An optional third tuple element is the sharding hint:
+        ``StreamSchema.device(x=((B, D), 'float32', ('data', None)))``.
+        """
+        fields = {}
+        for k, spec in arrays.items():
+            shape, dtype = spec[0], spec[1]
+            sharding = tuple(spec[2]) if len(spec) > 2 and spec[2] else None
+            fields[k] = FieldSpec(kind="device", shape=tuple(shape),
+                                  dtype=dtype, sharding=sharding)
+        return StreamSchema(fields=fields)
 
     @staticmethod
     def untyped() -> "StreamSchema":
@@ -174,6 +186,27 @@ class StreamSchema:
         """ShapeDtypeStructs for all device fields (dry-run stand-ins)."""
         return {k: f.to_shape_dtype_struct()
                 for k, f in self.fields.items() if f.kind == "device"}
+
+    def sharding_hints(self) -> dict:
+        """Per-field mesh-axis hints for device fields (None = replicate)."""
+        return {k: f.sharding for k, f in self.fields.items()
+                if f.kind == "device"}
+
+    def zero_payload(self) -> dict | None:
+        """An all-zeros concrete payload matching this schema, or None.
+
+        Only available when every field is a device field with fully-concrete
+        shape/dtype — used by fused device units to trigger jit compilation
+        *before* the first real message arrives (warmup)."""
+        if not self.fields:
+            return None
+        out = {}
+        for name, f in self.fields.items():
+            if f.kind != "device" or f.shape is None or f.dtype is None \
+                    or any(d == -1 for d in f.shape):
+                return None
+            out[name] = np.zeros(f.shape, dtype=f.dtype)
+        return out
 
 
 # ---------------------------------------------------------------------------

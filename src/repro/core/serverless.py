@@ -140,6 +140,19 @@ class Executor:
         """AUs/actuators: pull → business logic → (emit)."""
         if not callable(process):
             raise TypeError("AU/actuator factory must return a callable process fn")
+        warm = getattr(process, "warmup", None)
+        if warm is not None and not stop_event.is_set():
+            # fused device units expose .warmup to jit-compile ahead of the
+            # first real message; best-effort (a failure just means the first
+            # message pays the compile or falls back to the host chain), and
+            # recorded separately so compile time never skews the latency
+            # EWMA that drives straggler replacement
+            t0 = time.monotonic()
+            try:
+                warm()
+            except Exception:
+                pass
+            sidecar.record_warmup(time.monotonic() - t0)
         while not stop_event.is_set():
             item = sidecar.next(timeout=0.1)
             if item is None:

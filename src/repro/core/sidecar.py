@@ -45,6 +45,7 @@ class Sidecar:
         self.processed = 0
         self.errors = 0
         self.latency_ewma_s = 0.0     # business-logic processing latency
+        self.warmup_s = 0.0           # one-off setup (jit compile) cost
         self.started_at = time.monotonic()
         self.last_activity = self.started_at
         self._ewma_alpha = 0.2
@@ -97,6 +98,14 @@ class Sidecar:
             a = self._ewma_alpha
             self.latency_ewma_s = (1 - a) * self.latency_ewma_s + a * latency_s
 
+    def record_warmup(self, seconds: float) -> None:
+        """One-off setup cost (e.g. jit compile of a fused device chain) —
+        surfaced as its own metric, excluded from the latency EWMA so the
+        reconciler never mistakes compilation for straggling."""
+        with self._lock:
+            self.warmup_s = seconds
+            self.last_activity = time.monotonic()
+
     # -- the REST-analog metrics endpoint (paper: sidecar exposes REST API) ---
     def metrics(self) -> dict:
         received = sum(s.received for s in self._subs)
@@ -112,6 +121,7 @@ class Sidecar:
                 "errors": self.errors,
                 "backlog": backlog,
                 "latency_ewma_s": self.latency_ewma_s,
+                "warmup_s": self.warmup_s,
                 "uptime_s": time.monotonic() - self.started_at,
                 "idle_s": time.monotonic() - self.last_activity,
             }

@@ -42,3 +42,28 @@ def rmsnorm(x, w, *, eps: float = 1e-6, block_rows: int = 256,
             interpret: bool | None = None):
     return _rn.rmsnorm(x, w, eps=eps, block_rows=block_rows,
                        interpret=_auto(interpret))
+
+
+def jit_chain(stages):
+    """Compose stream-combinator stages into ONE jitted program.
+
+    ``stages`` is a sequence of ``(kind, fn)`` where ``kind`` is ``"map"``
+    (``fn(payload) -> payload``) or ``"filter"`` (``fn(payload) -> bool``).
+    Returns a jitted ``program(payload) -> (payload, keep)``: interior hops
+    become in-program values (no bus traffic, no per-hop dispatch), and filter
+    predicates are *predicated* — every stage runs, the combined keep flag
+    decides on the host whether the exit message is emitted.  This is the
+    device executor behind the chain-fusion pass (core/fusion.py).
+    """
+    import jax.numpy as jnp
+
+    def program(payload):
+        keep = jnp.asarray(True)
+        for kind, fn in stages:
+            if kind == "filter":
+                keep = jnp.logical_and(keep, jnp.asarray(fn(payload)))
+            else:
+                payload = fn(payload)
+        return payload, keep
+
+    return jax.jit(program)

@@ -133,6 +133,24 @@ def test_output_schema_from_return_annotation():
     assert app.build().drivers[0].output_schema == READING
 
 
+def test_output_schema_from_stringified_annotation():
+    """PEP 563 (`from __future__ import annotations`) stringifies return
+    annotations; inference must resolve them against the factory's globals."""
+    app = App("ann-str")
+
+    @app.driver
+    def src(ctx) -> "READING":  # what PEP 563 turns `-> READING` into
+        return iter(())
+
+    @app.driver
+    def unresolvable(ctx) -> "NOT_A_NAME":  # noqa: F821
+        return iter(())
+
+    built = app.build()
+    assert built.drivers[0].output_schema == READING
+    assert built.drivers[1].output_schema == StreamSchema.untyped()
+
+
 def test_duplicate_names_rejected():
     app = App("dups")
 
@@ -302,6 +320,9 @@ def test_fuse_requires_two_streams_same_app():
         StreamHandle.fuse(ha, with_=lambda a: a)
     with pytest.raises(DSLError):
         StreamHandle.fuse(ha, hb, with_=lambda a, b: a)
+    # a self-join would collapse the per-stream pairing buffers — rejected
+    with pytest.raises(DSLError):
+        StreamHandle.fuse(ha, ha, with_=lambda a, b: a)
 
 
 def test_fuse_rejects_misdirected_kwargs():
@@ -332,6 +353,88 @@ def test_duplicate_database_rejected_at_declaration():
     app.database("x")
     with pytest.raises(DSLError):
         app.database("x")
+
+
+# ---------------------------------------------------------------------------
+# .via(upgrade=...) — §4 config upgrades through the DSL
+# ---------------------------------------------------------------------------
+
+def _deploy_v1_scorer(op):
+    app1 = App("team-a")
+
+    @app1.driver(emits=READING, name="src")
+    def src(ctx, n=6):
+        return iter([{"t": float(i)} for i in range(n)])
+
+    @app1.analytics_unit(expects=(READING,), emits=SCORE, name="scorer")
+    def scorer(ctx):
+        return lambda s, p: {"t": p["t"], "score": p["t"]}
+
+    app1.sense("raw", src).via(scorer, name="scores")
+    app1.deploy(op, start_sensors=False)
+
+
+def test_via_upgrade_recomposes_to_operator_upgrade():
+    with connect(start=False) as op:
+        _deploy_v1_scorer(op)
+
+        app2 = App("team-b")
+
+        @app2.analytics_unit(expects=(READING,), emits=SCORE, name="scorer",
+                             version=2)
+        def scorer2(ctx, gain=2.0):
+            return lambda s, p: {"t": p["t"], "score": p["t"] * gain}
+
+        app2.external("raw", READING).via(scorer2, name="scores2",
+                                          upgrade=True, gain=3.0)
+        app2.deploy(op, start_sensors=False)
+        # the running AU was upgraded in place (cascade), not re-registered
+        assert op.describe()["analytics_units"]["scorer"] == 2
+        assert any(e[1] == "upgrade" for e in op.events)
+        sub_old = op.subscribe("scores")
+        sub_new = op.subscribe("scores2")
+        op.start_pending_sensors()
+        # the pre-existing stream now runs v2 logic (default gain=2.0) ...
+        assert [m.payload["score"] for m in drain(sub_old, 6)] == \
+            [0.0, 2.0, 4.0, 6.0, 8.0, 10.0]
+        # ... and the new stream uses its wiring-line config (gain=3.0)
+        assert [m.payload["score"] for m in drain(sub_new, 6)] == \
+            [0.0, 3.0, 6.0, 9.0, 12.0, 15.0]
+
+
+def test_via_upgrade_with_converter():
+    with connect(start=False) as op:
+        _deploy_v1_scorer(op)
+
+        app2 = App("team-b")
+
+        @app2.analytics_unit(expects=(READING,), emits=SCORE, name="scorer",
+                             version=2)
+        def scorer2(ctx, gain: float):      # new REQUIRED field: incompatible
+            return lambda s, p: {"t": p["t"], "score": p["t"] * gain}
+
+        app2.external("raw", READING).via(
+            scorer2, name="scores2", gain=3.0,
+            upgrade=lambda cfg: {**cfg, "gain": 2.0})
+        app2.deploy(op, start_sensors=False)
+        assert op.describe()["analytics_units"]["scorer"] == 2
+
+
+def test_via_without_upgrade_still_refuses_redeclared_au():
+    from repro.core import OperatorError
+    with connect(start=False) as op:
+        _deploy_v1_scorer(op)
+
+        app2 = App("team-b")
+
+        @app2.analytics_unit(expects=(READING,), emits=SCORE, name="scorer",
+                             version=2)
+        def scorer2(ctx):
+            return lambda s, p: p
+
+        app2.external("raw", READING).via(scorer2, name="scores2")
+        with pytest.raises(OperatorError):
+            app2.deploy(op, start_sensors=False)
 
 
 # ---------------------------------------------------------------------------

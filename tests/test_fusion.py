@@ -1,0 +1,358 @@
+"""Chain fusion: the compiler pass between the fluent API and the runtime.
+
+Contracts:
+(a) build-time: maximal linear DEVICE segments collapse into ONE fused AU +
+    stream; interior streams never become bus subjects; declared AUs stay in
+    the catalog while orphaned synthetic combinator AUs are collected;
+(b) results are bit-identical to per-hop bus execution — on the jitted
+    device program AND on the host-composed fallback (no jax / untraceable
+    stage / JIT_MODE never);
+(c) fusion barriers: window combinators, multi-input fuse, multi-subscriber
+    taps, explicit .tap(), fixed_instances > 1;
+(d) `.via(..., upgrade=...)` re-composes to the Operator's §4 upgrade path.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (AnalyticsUnitSpec, App, Application, DriverSpec,
+                        Placement, SensorSpec, StreamSchema, StreamSpec,
+                        connect, drain, fuse_application, plan_segments)
+from repro.core import fusion
+
+TEN = StreamSchema.device(x=((8, 8), "float32"))
+
+
+def _frames(n):
+    return [{"x": np.full((8, 8), float(i), np.float32)} for i in range(n)]
+
+
+def _chain_app(n=10) -> App:
+    """sensor -> x*2 -> keep x[0,0] < 16 -> x+1 -> -x   (all exact in f32)."""
+    app = App("chain")
+
+    @app.driver(emits=TEN)
+    def src(ctx, n=10):
+        return iter(_frames(n))
+
+    (app.sense("raw", src, n=n)
+        .map(lambda p: {"x": p["x"] * 2}, emits=TEN, device=True, name="m1")
+        .filter(lambda p: p["x"][0, 0] < 16.0, device=True, name="f1")
+        .map(lambda p: {"x": p["x"] + 1}, emits=TEN, device=True, name="m2")
+        .map(lambda p: {"x": -p["x"]}, emits=TEN, device=True, name="exit"))
+    return app
+
+
+def _run(app: App, stream: str, n: int, *, fuse: bool = True) -> list:
+    with connect(start=False) as op:
+        app.deploy(op, start_sensors=False, fuse=fuse)
+        sub = op.subscribe(stream)
+        op.start_pending_sensors()
+        return [m.payload for m in drain(sub, n, timeout=30)]
+
+
+# ---------------------------------------------------------------------------
+# (a) build-time collapse
+# ---------------------------------------------------------------------------
+
+def test_device_chain_collapses_to_one_fused_unit():
+    built = _chain_app().build()
+    assert [s.name for s in built.streams] == ["exit"]
+    assert built.streams[0].inputs == ("raw",)      # entry edge on the bus
+    fused = [a for a in built.analytics_units if a.fused_stages]
+    assert len(fused) == 1
+    assert fused[0].name == "exit.fused"
+    assert fused[0].placement is Placement.DEVICE
+    assert fused[0].fused_stages == ("m1.map", "f1.filter", "m2.map",
+                                     "exit.map")
+    # orphaned synthetic combinator AUs are collected
+    assert [a.name for a in built.analytics_units] == ["exit.fused"]
+    # the unfused build keeps every hop
+    unfused = _chain_app().build(fuse=False)
+    assert [s.name for s in unfused.streams] == ["m1", "f1", "m2", "exit"]
+
+
+def test_single_device_stage_is_not_fused():
+    app = App("single")
+
+    @app.driver(emits=TEN)
+    def src(ctx):
+        return iter(())
+
+    app.sense("raw", src).map(lambda p: p, emits=TEN, device=True, name="m1")
+    built = app.build()
+    assert [s.name for s in built.streams] == ["m1"]
+    assert not any(a.fused_stages for a in built.analytics_units)
+
+
+def test_fusion_works_on_v1_spec_graphs():
+    """The pass runs on the compiled Application, so v1 apps benefit too."""
+    app = Application(name="v1")
+    app.driver(DriverSpec(name="d", logic=lambda ctx: iter(()),
+                          output_schema=TEN))
+    for name in ("a", "b"):
+        app.analytics_unit(AnalyticsUnitSpec(
+            name=name, logic=lambda ctx: (lambda s, p: p),
+            placement=Placement.DEVICE, min_instances=1, max_instances=4))
+    app.sensor(SensorSpec(name="src", driver="d"))
+    app.stream(StreamSpec(name="sa", analytics_unit="a", inputs=("src",)))
+    app.stream(StreamSpec(name="sb", analytics_unit="b", inputs=("sa",)))
+    assert [[s.name for s in seg] for seg in plan_segments(app)] == \
+        [["sa", "sb"]]
+    fused = fuse_application(app)
+    assert [s.name for s in fused.streams] == ["sb"]
+    unit = next(a for a in fused.analytics_units if a.fused_stages)
+    assert unit.fused_stages == ("a", "b")
+    # declared stage AUs stay in the operator catalog
+    assert {"a", "b"} <= {a.name for a in fused.analytics_units}
+
+
+def test_fused_unit_folds_stage_scaling_bounds():
+    app = Application(name="scale")
+    app.driver(DriverSpec(name="d", logic=lambda ctx: iter(()),
+                          output_schema=TEN))
+    app.analytics_unit(AnalyticsUnitSpec(
+        name="a", logic=lambda ctx: (lambda s, p: p),
+        placement=Placement.DEVICE, min_instances=1, max_instances=8))
+    app.analytics_unit(AnalyticsUnitSpec(
+        name="b", logic=lambda ctx: (lambda s, p: p),
+        placement=Placement.DEVICE, min_instances=2, max_instances=4))
+    app.sensor(SensorSpec(name="src", driver="d"))
+    app.stream(StreamSpec(name="sa", analytics_unit="a", inputs=("src",)))
+    app.stream(StreamSpec(name="sb", analytics_unit="b", inputs=("sa",)))
+    unit = next(a for a in fuse_application(app).analytics_units
+                if a.fused_stages)
+    # autoscaled as a WHOLE: the segment's envelope, not per-hop counts
+    assert (unit.min_instances, unit.max_instances) == (2, 4)
+    # contradictory envelopes (a floor above another stage's ceiling) clamp
+    # the floor — no stage ever runs above its declared max_instances
+    app.analytics_units[0] = AnalyticsUnitSpec(
+        name="a", logic=lambda ctx: (lambda s, p: p),
+        placement=Placement.DEVICE, min_instances=6, max_instances=8)
+    unit = next(u for u in fuse_application(app).analytics_units
+                if u.fused_stages)
+    assert (unit.min_instances, unit.max_instances) == (4, 4)
+
+
+# ---------------------------------------------------------------------------
+# (b) bit-identical execution on every path
+# ---------------------------------------------------------------------------
+
+def _assert_identical(a: list, b: list) -> None:
+    assert len(a) == len(b)
+    for pa, pb in zip(a, b):
+        assert pa.keys() == pb.keys()
+        assert np.array_equal(pa["x"], pb["x"])
+        assert np.asarray(pa["x"]).dtype == np.asarray(pb["x"]).dtype
+
+
+def test_fused_jit_program_bit_identical_to_bus(monkeypatch):
+    monkeypatch.delenv("DATAX_FUSION_JIT", raising=False)
+    monkeypatch.setattr(fusion, "JIT_MODE", "always")
+    fused = _run(_chain_app(), "exit", 8, fuse=True)
+    unfused = _run(_chain_app(), "exit", 8, fuse=False)
+    _assert_identical(fused, unfused)
+
+
+def test_fused_host_chain_bit_identical_to_bus(monkeypatch):
+    monkeypatch.setattr(fusion, "JIT_MODE", "never")
+    fused = _run(_chain_app(), "exit", 8, fuse=True)
+    unfused = _run(_chain_app(), "exit", 8, fuse=False)
+    _assert_identical(fused, unfused)
+
+
+def test_no_jax_falls_back_to_host_chain(monkeypatch):
+    monkeypatch.setattr(fusion, "_HAS_JAX", False)
+    app = _chain_app()
+    built = app.build()
+    assert any(a.fused_stages for a in built.analytics_units)  # still fuses
+    fused = _run(_chain_app(), "exit", 8, fuse=True)
+    unfused = _run(_chain_app(), "exit", 8, fuse=False)
+    _assert_identical(fused, unfused)
+
+
+def test_scalar_outputs_typed_identically_on_jit_and_host(monkeypatch):
+    """A reduction to 0-d must come back as a numpy scalar on the jitted
+    path, exactly as numpy produces on the host path — the jit path must
+    never be *more lenient* (e.g. python floats passing a FieldSpec that
+    numpy scalars fail) than per-hop bus execution."""
+    monkeypatch.delenv("DATAX_FUSION_JIT", raising=False)
+
+    def build():
+        app = App("scalars")
+
+        @app.driver(emits=TEN)
+        def src(ctx, n=3):
+            return iter(_frames(n))
+
+        (app.sense("raw", src)
+            .map(lambda p: {"x": p["x"] * 2}, emits=TEN, device=True,
+                 name="m1")
+            .map(lambda p: {"s": p["x"].sum()}, device=True, name="exit"))
+        return app
+
+    monkeypatch.setattr(fusion, "JIT_MODE", "always")
+    jit_out = _run(build(), "exit", 3)
+    monkeypatch.setattr(fusion, "JIT_MODE", "never")
+    host_out = _run(build(), "exit", 3)
+    for pj, ph in zip(jit_out, host_out):
+        assert type(pj["s"]) is type(ph["s"]) is np.float32
+        assert pj["s"] == ph["s"]
+
+
+def test_untraceable_stage_degrades_to_host_per_message(monkeypatch):
+    """float(tracer) raises under jit -> the unit drops to the host chain."""
+    monkeypatch.setattr(fusion, "JIT_MODE", "always")
+    app = App("impure")
+
+    @app.driver(emits=TEN)
+    def src(ctx, n=4):
+        return iter(_frames(n))
+
+    (app.sense("raw", src)
+        .map(lambda p: {"x": p["x"] * 2}, emits=TEN, device=True, name="m1")
+        .map(lambda p: {"x": p["x"] * (2.0 if float(p["x"].sum()) >= 0 else 1.0)},
+             emits=TEN, device=True, name="exit"))
+    out = _run(app, "exit", 4)
+    assert [p["x"][0, 0] for p in out] == [0.0, 4.0, 8.0, 12.0]
+
+
+def test_declared_device_au_joins_segment_host_composed():
+    app = App("via-dev")
+
+    @app.driver(emits=TEN)
+    def src(ctx, n=5):
+        return iter(_frames(n))
+
+    @app.analytics_unit(expects=(TEN,), emits=TEN,
+                        placement=Placement.DEVICE)
+    def halver(ctx):
+        return lambda s, p: {"x": p["x"] * 0.5}
+
+    (app.sense("raw", src)
+        .map(lambda p: {"x": p["x"] * 2}, emits=TEN, device=True, name="m1")
+        .via(halver, name="exit"))
+    built = app.build()
+    unit = next(a for a in built.analytics_units if a.fused_stages)
+    assert unit.fused_stages == ("m1.map", "halver")
+    out = _run(app, "exit", 5)
+    assert [p["x"][0, 0] for p in out] == [0.0, 1.0, 2.0, 3.0, 4.0]
+
+
+def test_fused_unit_jit_warmup_recorded(monkeypatch):
+    """All-device entry schema -> the unit compiles before the first message
+    and the compile cost lands in warmup_s, not the latency EWMA."""
+    if not fusion.jax_available():
+        pytest.skip("warmup compiles a jit program; needs jax")
+    monkeypatch.setattr(fusion, "JIT_MODE", "always")
+    app = _chain_app()
+    with connect(start=False) as op:
+        app.deploy(op, start_sensors=False)
+        deadline = time.monotonic() + 10
+        warmup = 0.0
+        while warmup == 0.0 and time.monotonic() < deadline:
+            handles = op.executor.instances_of("exit")
+            if handles:
+                warmup = handles[0].sidecar.metrics()["warmup_s"]
+            time.sleep(0.02)
+    assert warmup > 0.0
+
+
+# ---------------------------------------------------------------------------
+# (c) fusion barriers
+# ---------------------------------------------------------------------------
+
+def test_window_is_a_barrier():
+    app = App("win")
+
+    @app.driver(emits=TEN)
+    def src(ctx):
+        return iter(())
+
+    (app.sense("raw", src)
+        .map(lambda p: p, emits=TEN, device=True, name="a")
+        .map(lambda p: p, emits=TEN, device=True, name="b")
+        .window(2, name="w")
+        .map(lambda p: p, device=True, name="c")
+        .map(lambda p: p, device=True, name="d"))
+    built = app.build()
+    assert [s.name for s in built.streams] == ["w", "b", "d"]
+    fused = {a.name: a.fused_stages for a in built.analytics_units
+             if a.fused_stages}
+    assert fused == {"b.fused": ("a.map", "b.map"),
+                     "d.fused": ("c.map", "d.map")}
+
+
+def test_multi_input_fuse_is_a_barrier():
+    from repro.core import StreamHandle
+    app = App("join")
+
+    @app.driver(emits=TEN)
+    def src(ctx):
+        return iter(())
+
+    a = app.sense("ra", src).map(lambda p: p, emits=TEN, device=True,
+                                 name="a")
+    b = app.sense("rb", src).map(lambda p: p, emits=TEN, device=True,
+                                 name="b")
+    StreamHandle.fuse(a, b, with_=lambda x, y: x, emits=TEN, name="joined")
+    built = app.build()
+    assert not any(u.fused_stages for u in built.analytics_units)
+    assert {s.name for s in built.streams} == {"a", "b", "joined"}
+
+
+def test_multi_subscriber_tap_splits_segment():
+    app = App("tee")
+
+    @app.driver(emits=TEN)
+    def src(ctx):
+        return iter(())
+
+    @app.actuator(expects=(TEN,))
+    def sink(ctx):
+        return lambda s, p: None
+
+    mid = app.sense("raw", src).map(lambda p: p, emits=TEN, device=True,
+                                    name="mid")
+    mid.map(lambda p: p, emits=TEN, device=True, name="out")
+    mid >> app.gadget("g", sink)               # second consumer of `mid`
+    built = app.build()
+    assert not any(u.fused_stages for u in built.analytics_units)
+    assert {s.name for s in built.streams} == {"mid", "out"}
+
+
+def test_explicit_tap_is_a_barrier_and_stays_subscribable():
+    app = App("tapped")
+
+    @app.driver(emits=TEN)
+    def src(ctx, n=3):
+        return iter(_frames(n))
+
+    (app.sense("raw", src)
+        .map(lambda p: {"x": p["x"] * 2}, emits=TEN, device=True, name="mid")
+        .tap()
+        .map(lambda p: {"x": p["x"] + 1}, emits=TEN, device=True, name="out"))
+    built = app.build()
+    assert not any(u.fused_stages for u in built.analytics_units)
+    with connect(start=False) as op:
+        app.deploy(op, start_sensors=False)
+        sub = op.subscribe("mid")              # the §3 reuse surface survives
+        op.start_pending_sensors()
+        assert [m.payload["x"][0, 0] for m in drain(sub, 3, timeout=30)] == \
+            [0.0, 2.0, 4.0]
+
+
+def test_fixed_instances_above_one_is_a_barrier():
+    app = Application(name="fixed")
+    app.driver(DriverSpec(name="d", logic=lambda ctx: iter(()),
+                          output_schema=TEN))
+    for name in ("a", "b"):
+        app.analytics_unit(AnalyticsUnitSpec(
+            name=name, logic=lambda ctx: (lambda s, p: p),
+            placement=Placement.DEVICE))
+    app.sensor(SensorSpec(name="src", driver="d"))
+    app.stream(StreamSpec(name="sa", analytics_unit="a", inputs=("src",),
+                          fixed_instances=2))
+    app.stream(StreamSpec(name="sb", analytics_unit="b", inputs=("sa",)))
+    assert plan_segments(app) == []
