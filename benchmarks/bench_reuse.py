@@ -51,7 +51,8 @@ def run() -> None:
         if m2:
             lat2.append((now - m2.payload["ts"]) * 1e6)
     op.shutdown()
-    lat1.sort(); lat2.sort()
+    lat1.sort()
+    lat2.sort()
     p50_1 = lat1[len(lat1)//2] if lat1 else -1
     p50_2 = lat2[len(lat2)//2] if lat2 else -1
     emit("stream_reuse_latency", p50_2,

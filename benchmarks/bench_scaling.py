@@ -1,0 +1,107 @@
+"""Claim (tentpole PR 3): queue-group delivery makes auto-scaling add capacity.
+
+Before queue groups, every instance of a scaled stream held its own bus
+subscription and ``_deliver`` fanned each message out to all of them — scaling
+N instances did N× the work, not 1/N of it.  With ``delivery="group"`` (the
+platform default) the instances form a single-delivery worker pool, so the
+same 4-stage pipeline should run ≈N× faster with N instances per stage.
+
+The pipeline is service-time bound: each stage sleeps a fixed per-message
+service time (the host-thread analog of an I/O or device-RPC bound stage,
+and deliberately GIL-free so thread workers can actually overlap).  The same
+topology is deployed twice, every stage at 1 instance and at ``WORKERS``
+grouped instances; metric is end-to-end messages/s from sensor start to the
+last exit message, best of ``RUNS``.
+
+``run()`` returns the variant->metric dict that ``benchmarks.run`` writes to
+``BENCH_scaling.json``; CI gates on ``speedup`` (grouped workers over single)
+>= 2.  Group delivery is pure platform code — the gate runs on BOTH CI matrix
+legs (no jax required).
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import App, FieldSpec, StreamSchema, connect, drain
+
+from .common import emit
+
+VALUE = StreamSchema.of(value=FieldSpec("int"))
+# keep the burst strictly under the per-instance mailbox size (256) so both
+# variants are lossless and the drain count is exact
+FRAMES = 120
+STAGES = 4
+WORKERS = 4
+SERVICE_S = 0.002   # per-message service time per stage
+RUNS = 3            # best-of, to keep the CI gate robust to scheduler noise
+
+
+def _app(instances: int, frames: int):
+    app = App(f"scaling-bench-{instances}")
+
+    @app.driver(emits=VALUE)
+    def source(ctx, frames=FRAMES):
+        return ({"value": i} for i in range(frames))
+
+    @app.analytics_unit(expects=(VALUE,), emits=VALUE,
+                        max_instances=max(WORKERS, 8))
+    def work(ctx, service_s=SERVICE_S):
+        def process(stream, payload):
+            time.sleep(service_s)
+            return {"value": payload["value"]}
+        return process
+
+    handle = app.sense("ingest", source, frames=frames)
+    for i in range(STAGES):
+        handle = handle.via(work, name=f"stage{i}",
+                            fixed_instances=instances)
+    return app, handle.name
+
+
+def _measure(instances: int, frames: int = FRAMES) -> tuple[float, int, int]:
+    """Deploy, push ``frames`` messages through, return
+    (messages/s, total drops, exit-group member count)."""
+    app, tail = _app(instances, frames)
+    with connect(start=False) as op:
+        app.deploy(op, start_sensors=False)
+        sub = op.subscribe(tail, maxsize=frames + 8)
+        time.sleep(0.2)  # let the worker threads boot
+        t0 = time.perf_counter()
+        op.start_pending_sensors()
+        got = len(drain(sub, frames, timeout=120))
+        dt = time.perf_counter() - t0
+        stats = op.bus.stats()
+        drops = sum(s["dropped"] for s in stats.values())
+        members = len(stats[f"stage{STAGES - 2}"]["groups"]
+                      .get(tail, {}).get("members", ()))
+    return got / dt, drops, members
+
+
+def run() -> dict:
+    single, pooled = 0.0, 0.0
+    drops = 0
+    members = 0
+    for _ in range(RUNS):
+        rate, d, _ = _measure(1)
+        single = max(single, rate)
+        drops += d
+        rate, d, members = _measure(WORKERS)
+        pooled = max(pooled, rate)
+        drops += d
+    speedup = pooled / single
+    emit("scaling_grouped_1", 1e6 / single, f"msgs_per_s={single:.0f}")
+    emit(f"scaling_grouped_{WORKERS}", 1e6 / pooled,
+         f"msgs_per_s={pooled:.0f}")
+    emit("scaling_speedup", 0.0,
+         f"{WORKERS}_workers_over_1={speedup:.2f}x")
+    return {
+        "grouped_1_msgs_per_s": round(single, 1),
+        f"grouped_{WORKERS}_msgs_per_s": round(pooled, 1),
+        "speedup": round(speedup, 3),
+        "frames": FRAMES,
+        "stages": STAGES,
+        "workers": WORKERS,
+        "service_time_s": SERVICE_S,
+        "exit_group_members": members,
+        "dropped": drops,
+    }

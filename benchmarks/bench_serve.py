@@ -6,7 +6,6 @@ the platform's serverless elasticity applied to inference.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 
 import jax

@@ -8,8 +8,10 @@ metric) for CI trending and gating.  Run:
 
 ``--gate`` turns known regression checks into hard failures — today: the
 fused device chain must beat per-hop bus execution (BENCH_fusion.json
-``speedup`` > 1).  Modules are imported lazily so a minimal-deps environment
-(no jax) can still run the core benchmarks.
+``speedup`` > 1), and 4 queue-grouped workers must beat 1 by >= 2x on the
+scaling pipeline (BENCH_scaling.json ``speedup``).  Modules are imported
+lazily so a minimal-deps environment (no jax) can still run the core
+benchmarks — the scaling gate is pure platform code and runs on both CI legs.
 """
 from __future__ import annotations
 
@@ -24,6 +26,7 @@ ALL = {
     "bus": "bench_bus",
     "pipeline": "bench_pipeline",
     "autoscale": "bench_autoscale",
+    "scaling": "bench_scaling",
     "loc": "bench_loc",
     "reuse": "bench_reuse",
     "fusion": "bench_fusion",
@@ -43,6 +46,18 @@ def _gate(results: dict[str, dict]) -> list[str]:
             f"fusion: fused chain not faster than per-hop bus "
             f"(fused={fusion.get('fused_msgs_per_s')} msgs/s, "
             f"bus={fusion.get('bus_msgs_per_s')} msgs/s)")
+    scaling = results.get("scaling")
+    if scaling is not None and scaling.get("speedup", 0.0) < 2.0:
+        workers = scaling.get("workers", 4)
+        failures.append(
+            f"scaling: {workers} grouped workers must be >=2x over 1 "
+            f"(got {scaling.get('speedup')}x; "
+            f"pooled={scaling.get(f'grouped_{workers}_msgs_per_s')} msgs/s, "
+            f"single={scaling.get('grouped_1_msgs_per_s')} msgs/s)")
+    if scaling is not None and scaling.get("dropped", 0) > 0:
+        failures.append(
+            f"scaling: benchmark pipeline dropped "
+            f"{scaling.get('dropped')} messages (should be lossless)")
     return failures
 
 

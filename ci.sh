@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
 # CI entrypoint: deps + tier-1 tests + headless runs of the shipped examples
-# + benchmark artifacts with the fusion regression gate.  Runs on two matrix
+# + benchmark artifacts with the fusion and queue-group scaling regression
+# gates.  Runs on two matrix
 # legs (.github/workflows/ci.yml): full deps, and minimal deps via
 # CI_SKIP_INSTALL=1 (no jax/zstandard/hypothesis) to exercise every
 # graceful-degradation path.
@@ -29,6 +30,11 @@ echo "== benchmarks: fusion regression gate =="
 # writes BENCH_fusion.json; fails if the fused device chain is not faster
 # than per-hop bus execution on the 4-stage benchmark topology
 python -m benchmarks.run --only fusion --gate
+
+echo "== benchmarks: queue-group scaling gate =="
+# writes BENCH_scaling.json; fails unless 4 grouped workers beat 1 by >=2x
+# on the 4-stage pipeline (pure platform code — runs on both matrix legs)
+python -m benchmarks.run --only scaling --gate
 
 echo "== benchmarks: productivity claim =="
 # writes BENCH_loc.json

@@ -101,7 +101,6 @@ class ModelConfig:
         if self.family == "ssm":
             per_layer = self._ssm_layer_params() + d
         elif self.family == "hybrid":
-            n_shared = self.n_layers // (self.hybrid.period if self.hybrid else 6)
             shared = att + mlp + norms
             per_layer = self._ssm_layer_params() + d
             return emb + self.n_layers * per_layer + shared + d

@@ -4,7 +4,7 @@ Entities (§2), Operator coherence + lifecycle (§4), message bus (NATS analog),
 sidecar metrics, serverless autoscaling, platform state, and the 3-method SDK.
 """
 from .app import Application, AppValidationError
-from .bus import (BusError, MessageBus, Subscription, Unauthorized,
+from .bus import (BusError, MessageBus, QueueGroup, Subscription, Unauthorized,
                   UnknownSubject, decode_message, decode_payload,
                   encode_message, encode_payload, drain)
 from .compression import CompressionError, codec_name
@@ -25,7 +25,8 @@ __all__ = [
     "connect",
     "Application", "AppValidationError",
     "CompressionError", "codec_name",
-    "BusError", "MessageBus", "Subscription", "Unauthorized", "UnknownSubject",
+    "BusError", "MessageBus", "QueueGroup", "Subscription", "Unauthorized",
+    "UnknownSubject",
     "decode_message", "decode_payload", "encode_message", "encode_payload",
     "drain",
     "ActuatorSpec", "AnalyticsUnitSpec", "DatabaseSpec", "DriverSpec",

@@ -43,25 +43,32 @@ class Application:
 
     # -- fluent builders ------------------------------------------------------
     def driver(self, spec: DriverSpec) -> "Application":
-        self.drivers.append(spec); return self
+        self.drivers.append(spec)
+        return self
 
     def analytics_unit(self, spec: AnalyticsUnitSpec) -> "Application":
-        self.analytics_units.append(spec); return self
+        self.analytics_units.append(spec)
+        return self
 
     def actuator(self, spec: ActuatorSpec) -> "Application":
-        self.actuators.append(spec); return self
+        self.actuators.append(spec)
+        return self
 
     def sensor(self, spec: SensorSpec) -> "Application":
-        self.sensors.append(spec); return self
+        self.sensors.append(spec)
+        return self
 
     def stream(self, spec: StreamSpec) -> "Application":
-        self.streams.append(spec); return self
+        self.streams.append(spec)
+        return self
 
     def gadget(self, spec: GadgetSpec) -> "Application":
-        self.gadgets.append(spec); return self
+        self.gadgets.append(spec)
+        return self
 
     def database(self, spec: DatabaseSpec) -> "Application":
-        self.databases.append(spec); return self
+        self.databases.append(spec)
+        return self
 
     # -- validation -------------------------------------------------------------
     def validate(self, *, external_streams: Iterable[str] = ()) -> list[str]:

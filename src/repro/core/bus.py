@@ -8,6 +8,13 @@ Subject-based pub/sub with:
   with a token that is not authorized for that subject, raises.
 * **bounded subscriber queues** with a drop-oldest policy (streams are lossy
   real-time flows; the sidecar counts drops and reports them as metrics).
+* **queue groups** (the NATS queue-group analog) — ``subscribe(...,
+  group="owner")`` joins a named single-delivery group on the subject: each
+  message is round-robined to exactly ONE healthy member per group, while
+  still fanning out to every ungrouped subscription and to every *other*
+  group.  Scaled instances of the same stream join one group (a worker pool,
+  N instances = N× capacity); different consumer streams use different group
+  names, so §3 multi-app stream reuse keeps broadcast semantics.
 * **schema enforcement** — each subject carries a StreamSchema; publishes are
   validated against it (homogeneous streams, §2).
 * **wire serialization** — msgpack (+numpy) encode/decode used when a message
@@ -24,7 +31,7 @@ import io
 import queue
 import threading
 import time
-from typing import Callable, Iterable
+from typing import Iterable, Sequence
 
 import msgpack
 import numpy as np
@@ -101,28 +108,41 @@ class UnknownSubject(BusError):
 # ---------------------------------------------------------------------------
 
 class Subscription:
-    """A bounded mailbox bound to one subject."""
+    """A bounded mailbox bound to one subject.
 
-    def __init__(self, subject: str, maxsize: int, wire: bool, name: str = ""):
+    ``group`` is the queue-group name this subscription joined (None =
+    ungrouped broadcast subscriber).  Drops are counted per subscription and
+    surfaced through ``MessageBus.stats()`` — a nonzero count means this
+    consumer is losing data and is a hard scale-up signal for the autoscaler.
+    """
+
+    def __init__(self, subject: str, maxsize: int, wire: bool, name: str = "",
+                 group: str | None = None):
         self.subject = subject
         self.name = name or f"sub-{id(self):x}"
         self.wire = wire
+        self.group = group
         self._q: queue.Queue = queue.Queue(maxsize=maxsize)
         self.received = 0
         self.dropped = 0
         self.closed = False
         self._lock = threading.Lock()
 
-    def _offer(self, item) -> None:
-        """Enqueue with drop-oldest on overflow (lossy stream semantics)."""
+    def _offer(self, item) -> bool:
+        """Enqueue with drop-oldest on overflow (lossy stream semantics).
+
+        Returns False when the mailbox is closed (counted as a drop here so
+        the refusal is never silent; a group-delivery caller re-picks another
+        member so the message still reaches a survivor)."""
         with self._lock:
             if self.closed:
-                return
+                self.dropped += 1
+                return False
             while True:
                 try:
                     self._q.put_nowait(item)
                     self.received += 1
-                    return
+                    return True
                 except queue.Full:
                     try:
                         self._q.get_nowait()
@@ -145,6 +165,34 @@ class Subscription:
     def qsize(self) -> int:
         return self._q.qsize()
 
+    def _seal(self) -> None:
+        """Mark closed WITHOUT waking readers (no sentinel, no eviction).
+
+        Departing-group-member hand-off step 1: once sealed, every further
+        ``_offer`` is refused and counted, so a publisher that picked this
+        member just before it left the rotation cannot slip a message in
+        after the backlog drain (offer and seal serialize on the mailbox
+        lock).  ``close()`` afterwards still delivers the reader sentinel.
+        """
+        with self._lock:
+            self.closed = True
+
+    def _drain_pending(self) -> list:
+        """Pop everything still queued (raw items, possibly wire blobs).
+
+        Used when a group member departs: under single delivery its queued
+        messages are the only copies, so the bus hands them to the surviving
+        members instead of garbage-collecting them.  Call after ``_seal()``.
+        """
+        items = []
+        while True:
+            try:
+                item = self._q.get_nowait()
+            except queue.Empty:
+                return items
+            if item is not None:
+                items.append(item)
+
     def close(self) -> None:
         with self._lock:
             self.closed = True
@@ -163,6 +211,84 @@ class Subscription:
                         pass
 
 
+class QueueGroup:
+    """A named single-delivery group on one subject (NATS queue-group analog).
+
+    Members are Subscriptions; ``pick()`` advances a round-robin cursor and
+    returns the next *healthy* (non-closed) member, skipping dead ones so a
+    member dying mid-rotation re-routes its share to the survivors.  Membership
+    changes happen under the bus lock; the group's own lock orders ``pick()``
+    against them (lock order is always bus → group, so no deadlock).
+    """
+
+    def __init__(self, subject: str, name: str):
+        self.subject = subject
+        self.name = name
+        self.members: list[Subscription] = []
+        self.rr = 0                   # round-robin cursor (next member index)
+        self.delivered = 0            # hand-offs to a member (incl. re-routes)
+        self.undeliverable = 0        # published while no healthy member
+        self.rerouted = 0             # departing-member backlog re-deliveries
+        self._lock = threading.Lock()
+
+    def add(self, sub: Subscription) -> None:
+        with self._lock:
+            self.members.append(sub)
+
+    def remove(self, sub: Subscription) -> bool:
+        """Remove a member; True if the group is now empty."""
+        with self._lock:
+            if sub in self.members:
+                i = self.members.index(sub)
+                self.members.remove(sub)
+                if i < self.rr:
+                    self.rr -= 1     # keep the cursor on the same successor
+                if self.members:
+                    self.rr %= len(self.members)
+                else:
+                    self.rr = 0
+            return not self.members
+
+    def pick(self) -> Subscription | None:
+        with self._lock:
+            n = len(self.members)
+            for i in range(n):
+                m = self.members[(self.rr + i) % n]
+                if not m.closed:
+                    self.rr = (self.rr + i + 1) % n
+                    self.delivered += 1
+                    return m
+            self.undeliverable += 1
+            return None
+
+    def note_reroute(self) -> None:
+        with self._lock:
+            self.rerouted += 1
+
+    def unpick(self) -> None:
+        """Roll back a pick() whose offer was refused (member sealed by a
+        racing departure) so ``delivered`` stays exact before the re-pick."""
+        with self._lock:
+            self.delivered -= 1
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {
+                "members": [m.name for m in self.members],
+                "rr": self.rr,
+                "delivered": self.delivered,
+                "undeliverable": self.undeliverable,
+                "rerouted": self.rerouted,
+                "dropped": sum(m.dropped for m in self.members),
+                "backlog": sum(m.qsize() for m in self.members),
+            }
+
+    def backlog(self) -> int:
+        """Group-aggregate mailbox depth (the pool's total queued work)."""
+        with self._lock:
+            return sum(m.qsize() for m in self.members)
+
+
 # ---------------------------------------------------------------------------
 # The bus
 # ---------------------------------------------------------------------------
@@ -174,8 +300,14 @@ class MessageBus:
         self._lock = threading.RLock()
         self._subjects: dict[str, StreamSchema] = {}
         self._subs: dict[str, list[Subscription]] = {}
+        self._groups: dict[str, dict[str, QueueGroup]] = {}  # subject -> name -> group
         self._tokens: dict[str, set[str] | None] = {}  # token -> allowed subjects (None=all)
         self._published: dict[str, int] = {}
+        # messages that left the bus unconsumed when a departing group member
+        # had no survivor to take its queued share (teardown/upgrade window);
+        # kept on the SUBJECT so the loss stays visible in stats() after the
+        # subscription itself is gone
+        self._lost: dict[str, int] = {}
         self._default_queue_size = default_queue_size
         self._closed = False
 
@@ -186,7 +318,9 @@ class MessageBus:
                 raise BusError(f"subject {subject!r} already registered")
             self._subjects[subject] = schema or StreamSchema.untyped()
             self._subs[subject] = []
+            self._groups[subject] = {}
             self._published[subject] = 0
+            self._lost[subject] = 0
 
     def unregister_subject(self, subject: str) -> None:
         with self._lock:
@@ -194,8 +328,10 @@ class MessageBus:
                 raise UnknownSubject(subject)
             for sub in self._subs.pop(subject):
                 sub.close()
+            self._groups.pop(subject, None)
             del self._subjects[subject]
             del self._published[subject]
+            self._lost.pop(subject, None)
 
     def subjects(self) -> list[str]:
         with self._lock:
@@ -238,45 +374,121 @@ class MessageBus:
                 raise UnknownSubject(subject)
             schema = self._subjects[subject]
             subs = list(self._subs[subject])
+            groups = list(self._groups.get(subject, {}).values())
         self._authorize(token, subject)
         schema.validate(payload)
         msg = Message(subject=subject, payload=payload, headers=headers or {})
-        self._deliver(msg, subs)
+        self._deliver(msg, subs, groups)
         with self._lock:
             if subject in self._published:
                 self._published[subject] += 1
         return msg
 
-    def _deliver(self, msg: Message, subs: list[Subscription]) -> None:
+    def _deliver(self, msg: Message, subs: list[Subscription],
+                 groups: Sequence[QueueGroup] = ()) -> None:
+        """Fan out to every ungrouped subscription; round-robin each queue
+        group to exactly one healthy member (single delivery per group).
+
+        A refused offer (the picked member was sealed by a racing departure
+        between our pick and the enqueue) re-picks, so the message still
+        lands on a survivor whenever one exists."""
         wire_blob = None
-        for sub in subs:
+
+        def offer(sub: Subscription) -> bool:
+            nonlocal wire_blob
             if sub.wire:
                 if wire_blob is None:
                     wire_blob = encode_message(msg)
-                sub._offer(wire_blob)
-            else:
-                sub._offer(msg)
+                return sub._offer(wire_blob)
+            return sub._offer(msg)
+
+        for sub in subs:
+            if sub.group is None:
+                offer(sub)
+        for group in groups:
+            while True:
+                member = group.pick()
+                if member is None:
+                    break
+                if offer(member):
+                    break
+                group.unpick()
 
     def subscribe(self, subject: str, *, token: str, maxsize: int | None = None,
-                  wire: bool = False, name: str = "") -> Subscription:
+                  wire: bool = False, name: str = "",
+                  group: str | None = None) -> Subscription:
+        """``group`` joins the named queue group on this subject: each message
+        goes to exactly one healthy member of each group (round-robin), while
+        ungrouped subscriptions keep broadcast semantics."""
         self._authorize(token, subject)
         with self._lock:
             if subject not in self._subjects:
                 raise UnknownSubject(subject)
             sub = Subscription(subject, maxsize or self._default_queue_size,
-                               wire=wire, name=name)
+                               wire=wire, name=name, group=group)
             self._subs[subject].append(sub)
+            if group is not None:
+                g = self._groups[subject].setdefault(
+                    group, QueueGroup(subject, group))
+                g.add(sub)
             return sub
 
     def unsubscribe(self, sub: Subscription) -> None:
+        grouped = False
+        survivors: QueueGroup | None = None
         with self._lock:
             subs = self._subs.get(sub.subject)
             if subs and sub in subs:
                 subs.remove(sub)
+            if sub.group is not None:
+                groups = self._groups.get(sub.subject, {})
+                g = groups.get(sub.group)
+                if g is not None:
+                    grouped = True
+                    if g.remove(sub):
+                        del groups[sub.group]
+                    else:
+                        survivors = g
+        if grouped:
+            # single delivery: the departing member's queued messages are the
+            # ONLY copies — hand them to the survivors.  Seal first: an
+            # in-flight publish that picked this member just before it left
+            # the rotation either enqueued before the seal (drained below) or
+            # is refused-and-counted after it; offers and the seal serialize
+            # on the mailbox lock, so nothing slips in post-drain.
+            sub._seal()
+            for item in sub._drain_pending():
+                while True:
+                    member = survivors.pick() if survivors is not None else None
+                    if member is None:
+                        # last member out (stream teardown / upgrade window):
+                        # the share is lost — counted on the mailbox AND on
+                        # the subject, so the loss outlives the subscription
+                        # in stats() instead of vanishing with it
+                        sub.dropped += 1
+                        with self._lock:
+                            if sub.subject in self._lost:
+                                self._lost[sub.subject] += 1
+                        break
+                    is_wire = isinstance(item, (bytes, bytearray))
+                    if member.wire == is_wire:
+                        ok = member._offer(item)
+                    elif member.wire:
+                        ok = member._offer(encode_message(item))
+                    else:
+                        ok = member._offer(decode_message(item))
+                    if ok:
+                        survivors.note_reroute()
+                        break
+                    survivors.unpick()
         sub.close()
 
     # -- introspection --------------------------------------------------------
     def stats(self) -> dict:
+        """Per-subject counters, including per-group membership / round-robin
+        position / drop counts and a per-subscription drop breakdown (drops
+        mean a consumer is losing data — the autoscaler treats them as a hard
+        scale-up signal)."""
         with self._lock:
             return {
                 subject: {
@@ -284,14 +496,30 @@ class MessageBus:
                     "subscribers": len(self._subs[subject]),
                     "backlog": sum(s.qsize() for s in self._subs[subject]),
                     "dropped": sum(s.dropped for s in self._subs[subject]),
+                    "lost": self._lost.get(subject, 0),
+                    "groups": {name: g.snapshot()
+                               for name, g in
+                               self._groups.get(subject, {}).items()},
+                    "subscriptions": {
+                        s.name: {"group": s.group, "backlog": s.qsize(),
+                                 "received": s.received, "dropped": s.dropped}
+                        for s in self._subs[subject]
+                    },
                 }
                 for subject in self._subjects
             }
 
     def backlog(self, subject: str) -> int:
+        """Deepest consumer lag on ``subject``: max over ungrouped mailbox
+        depths and group-aggregate depths (a group's lag is the SUM of its
+        members' mailboxes — the pool shares one logical queue)."""
         with self._lock:
             subs = self._subs.get(subject, [])
-            return max((s.qsize() for s in subs), default=0)
+            solo = max((s.qsize() for s in subs if s.group is None), default=0)
+            pooled = max((g.backlog()
+                          for g in self._groups.get(subject, {}).values()),
+                         default=0)
+            return max(solo, pooled)
 
     def close(self) -> None:
         with self._lock:

@@ -55,6 +55,7 @@ Quickstart::
 from __future__ import annotations
 
 import contextlib
+import dataclasses
 import inspect
 from collections import deque
 from typing import Any, Callable, Iterator, Mapping, Sequence
@@ -237,6 +238,78 @@ class StreamHandle:
         as a segment barrier instead of folding it into a device program.
         """
         self.app._taps.add(self.name)
+        return self
+
+    def scaled(self, *, delivery: str = "group", instances: int | None = None,
+               max_instances: int | None = None) -> "StreamHandle":
+        """Scaling & delivery escape hatch for this stream's instances.
+
+        ``delivery="group"`` (the platform default) makes scaled instances a
+        single-delivery worker pool: they join one bus queue group per input
+        subject and each message reaches exactly one of them.
+        ``delivery="broadcast"`` restores replica semantics — every instance
+        receives every message (redundant/speculative execution).
+
+        ``instances`` fixes the pool size (the operator will not autoscale
+        it); ``max_instances`` instead lets the operator autoscale a
+        combinator stage between 1 and the given ceiling — group delivery
+        makes that safe for stateless ``.map``/``.filter`` stages, which were
+        pinned single-instance before queue groups existed.  Stateful
+        combinators (``.window``, ``fuse``) keep their per-instance buffers
+        and stay single-instance, as do broadcast combinator stages (scaling
+        those would duplicate messages downstream).
+        """
+        if delivery not in ("group", "broadcast"):
+            raise DSLError(f"delivery must be 'group' or 'broadcast', "
+                           f"got {delivery!r}")
+        if instances is not None and instances < 1:
+            raise DSLError(f"instances must be >= 1, got {instances}")
+        if max_instances is not None and max_instances < 1:
+            raise DSLError(f"max_instances must be >= 1, got {max_instances}")
+        index = next((i for i, s in enumerate(self.app._streams)
+                      if s.name == self.name), None)
+        if index is None:
+            raise DSLError(
+                f"{self.name!r} is not a derived stream of app "
+                f"{self.app.name!r}; sensors run exactly one driver instance "
+                f"and external streams are scaled by their owning app")
+        spec = self.app._streams[index]
+        au = self.app._aus[spec.analytics_unit]
+        # guards judge the pool configuration this call RESULTS in, not just
+        # its own arguments — a prior .scaled() may already have fixed a pool
+        # size or lifted the combinator's autoscale envelope
+        if instances is not None:
+            fixed = instances
+        elif max_instances is not None:
+            fixed = None                      # autoscale pool
+        else:
+            fixed = spec.fixed_instances
+        ceiling = max(instances or 1, max_instances or 1,
+                      au.max_instances if au.combinator else 1)
+        pool = fixed if fixed is not None else ceiling
+        if au.combinator and pool > 1:
+            if au.combinator not in ("map", "filter"):
+                raise DSLError(
+                    f"stream {self.name!r}: a .{au.combinator} stage keeps "
+                    f"per-instance state and cannot scale past one instance")
+            if delivery == "broadcast":
+                raise DSLError(
+                    f"stream {self.name!r}: broadcast replicas of a "
+                    f".{au.combinator} stage would emit every message "
+                    f"{pool}x downstream; use delivery='group'")
+        if au.combinator:
+            # synthetic AUs are 1:1 with their stream — lift the declared
+            # instance envelope so create_stream/autoscaler can use it
+            self.app._aus[au.name] = dataclasses.replace(
+                au, max_instances=max(ceiling, au.max_instances))
+        elif max_instances is not None:
+            raise DSLError(
+                f"stream {self.name!r}: the autoscale ceiling of declared "
+                f"analytics unit {au.name!r} is set on its declaration "
+                f"(@app.analytics_unit(max_instances=...)); .scaled() only "
+                f"fixes the pool size via instances=")
+        self.app._streams[index] = dataclasses.replace(
+            spec, delivery=delivery, fixed_instances=fixed)
         return self
 
     # -- combinators (synthetic AUs) ----------------------------------------
@@ -568,8 +641,10 @@ class App:
             name=au_name, logic=factory,
             input_schemas=tuple(h.schema for h in inputs),
             output_schema=emits,
-            # exactly-once per message: the bus fans out to every instance,
-            # so combinators (often stateful closures) must run single-instance
+            # single-instance by default: combinators are often stateful
+            # closures (window/fuse buffers).  Stateless map/filter stages can
+            # opt into a queue-group worker pool via .scaled(), which lifts
+            # this envelope — single delivery keeps exactly-once per message.
             min_instances=1, max_instances=1,
             placement=placement, pure_fn=pure_fn, combinator=kind)
         self._register(self._aus, au, "analytics unit")

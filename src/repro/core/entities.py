@@ -128,13 +128,26 @@ class SensorSpec:
 
 @dataclasses.dataclass(frozen=True)
 class StreamSpec:
-    """A derived (augmented) stream: AU + input streams + AU config (paper §4)."""
+    """A derived (augmented) stream: AU + input streams + AU config (paper §4).
+
+    ``delivery`` selects what scaled instances of this stream *are*:
+
+    * ``"group"`` (default) — instances join one bus queue group per input
+      subject; each message reaches exactly ONE of them (a worker pool —
+      scaling N× adds N× capacity).  Other consumer streams and external
+      subscribers are unaffected: broadcast across *different* groups is
+      preserved, so §3 stream reuse still sees every message.
+    * ``"broadcast"`` — every instance holds its own ungrouped subscription
+      and receives every message (pre-queue-group replica semantics; the
+      escape hatch for redundant/speculative execution).
+    """
 
     name: str
     analytics_unit: str
     inputs: Sequence[str] = ()
     config: Mapping[str, Any] = dataclasses.field(default_factory=dict)
     fixed_instances: int | None = None   # None => operator auto-scales
+    delivery: str = "group"              # "group" | "broadcast"
 
     kind = EntityKind.STREAM
 

@@ -342,10 +342,16 @@ def fuse_application(app: Application, *,
             placement=Placement.DEVICE,
             min_instances=lo, max_instances=hi,
             fused_stages=tuple(st.au_name for st in stages)))
+        # delivery mode follows the ENTRY stream: it governs how instances
+        # consume the segment's input subject (interior hops have no bus
+        # delivery at all).  Under "group" every fused-unit instance is one
+        # member of the exit-named queue group, so a scaled fused segment is
+        # a worker pool exactly like a scaled host stream.
         fused_streams.append(StreamSpec(
             name=exit_.name, analytics_unit=name, inputs=tuple(entry.inputs),
             fixed_instances=1 if any(s.fixed_instances == 1 for s in segment)
-            else None))
+            else None,
+            delivery=entry.delivery))
         folded.update(s.name for s in segment)
 
     streams = [s for s in app.streams if s.name not in folded] + fused_streams

@@ -268,6 +268,10 @@ class Operator:
                     f"stream {spec.name!r}: analytics unit "
                     f"{spec.analytics_unit!r} is not available")
             au = self._aus[spec.analytics_unit]
+            if spec.delivery not in ("group", "broadcast"):
+                raise OperatorError(
+                    f"stream {spec.name!r}: delivery must be 'group' or "
+                    f"'broadcast', got {spec.delivery!r}")
             missing = [s for s in spec.inputs if s not in self._stream_names()]
             if missing:
                 raise CoherenceError(
@@ -299,10 +303,16 @@ class Operator:
             db_name = f"au-{spec.name}"
             db = (self.store.get(db_name) if self.store.exists(db_name)
                   else self.store.create(db_name))
+        # group delivery: every instance of this stream (fused units included
+        # — one member per instance) joins the queue group named after the
+        # stream, so scaled instances form a worker pool on their inputs;
+        # other streams consuming the same inputs use their own group names
+        # and still see every message (§3 reuse broadcast across groups)
         return self.executor.start_instance(
             entity_kind="analytics_unit", entity_name=au.name, owner=spec.name,
             logic=au.logic, config=dict(resolved), inputs=tuple(spec.inputs),
-            output=spec.name, db=db or self._db_for(resolved))
+            output=spec.name, db=db or self._db_for(resolved),
+            group=spec.name if spec.delivery == "group" else None)
 
     def register_gadget(self, spec: GadgetSpec) -> None:
         with self._lock:
@@ -319,10 +329,16 @@ class Operator:
             resolved = act.config_schema.validate(spec.config)
             self._gadgets[spec.name] = spec
             self._resolved[spec.name] = resolved
+        # actuator instances pool under the gadget's name too, so a scaled
+        # gadget actuates once per insight instead of once per replica; the
+        # kind prefix keeps a gadget from merging into the queue group of a
+        # same-named stream that consumes the same subjects (gadget and
+        # stream names live in different namespaces)
         self.executor.start_instance(
             entity_kind="actuator", entity_name=act.name, owner=spec.name,
             logic=act.logic, config=dict(resolved), inputs=tuple(spec.inputs),
-            output=None, db=self._db_for(resolved))
+            output=None, db=self._db_for(resolved),
+            group=f"gadget:{spec.name}")
         self._event("register", f"gadget/{spec.name} (actuator={spec.actuator})")
 
     def create_database(self, spec: DatabaseSpec) -> Database:
@@ -465,10 +481,9 @@ class Operator:
             # a fused unit autoscales as a WHOLE: one decision for the whole
             # segment (its min/max were folded from the stage specs), never
             # per interior hop — those hops no longer exist on the bus.
-            # NB: scaled instances are replicas — the bus fans every message
-            # out to each of them, exactly as for scaled HOST streams (and as
-            # create_stream's min_instances spawns always have); single-
-            # delivery worker pools need bus queue groups (see ROADMAP)
+            # Under the default delivery="group" the instances form a bus
+            # queue group (single delivery), so every scale-up adds capacity;
+            # the AutoScaler's signals are group-aggregate accordingly.
             handles = self.executor.instances_of(spec.name)
             desired = self.autoscaler.decide(spec.name, handles,
                                              au.min_instances, au.max_instances)

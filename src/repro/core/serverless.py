@@ -19,7 +19,6 @@ import traceback
 from typing import Any, Callable, Sequence
 
 from .bus import MessageBus
-from .schema import Message
 from .sdk import DataX, LogicContext, is_sdk_style
 from .sidecar import Sidecar
 from .state import Database
@@ -66,11 +65,15 @@ class Executor:
                        logic: Callable, config: dict,
                        inputs: Sequence[str] = (), output: str | None = None,
                        db: Database | None = None, node: str | None = None,
-                       queue_size: int = 256) -> InstanceHandle:
+                       queue_size: int = 256,
+                       group: str | None = None) -> InstanceHandle:
+        """``group`` puts this instance's input subscriptions into the named
+        bus queue group: all instances started with the same group form a
+        single-delivery worker pool (scaling adds capacity, not copies)."""
         iid = f"{owner}/{entity_name}-{next(self._ids):04d}"
         stop_event = threading.Event()
         sidecar = Sidecar(iid, self._bus, inputs=inputs, output=output,
-                          queue_size=queue_size)
+                          queue_size=queue_size, group=group)
 
         handle = InstanceHandle(
             instance_id=iid, entity_kind=entity_kind, entity_name=entity_name,
@@ -220,7 +223,7 @@ class Executor:
 class ScalePolicy:
     """Backlog/latency-driven scaling thresholds."""
 
-    backlog_high: int = 32        # scale up if per-instance backlog exceeds this
+    backlog_high: int = 32        # scale up if backlog-per-instance exceeds this
     backlog_low: int = 2          # scale down if total backlog below this
     idle_s: float = 5.0           # and instances have been idle this long
     cooldown_s: float = 1.0       # min seconds between decisions per stream
@@ -228,11 +231,24 @@ class ScalePolicy:
 
 class AutoScaler:
     """Decides instance counts from sidecar metrics (paper §4: metrics drive
-    the auto-scaling process)."""
+    the auto-scaling process).
+
+    Signals are **group-aggregate**: under queue-group (single) delivery the
+    pool shares one logical queue split across member mailboxes, so a single
+    replica's mailbox depth no longer reflects load — the scale-up test is the
+    pool's TOTAL backlog against ``backlog_high × members`` (for broadcast
+    replicas every mailbox holds the same messages, so the aggregate form is
+    conservative-equivalent at N=1 and stricter above).  Nonzero mailbox drops
+    since the last decision are a hard scale-up signal regardless of backlog:
+    drops mean the pool is already losing data, not merely lagging.
+    """
 
     def __init__(self, policy: ScalePolicy | None = None):
         self.policy = policy or ScalePolicy()
         self._last_decision: dict[str, float] = {}
+        # per-instance drop watermarks: a replaced instance must not lower
+        # the pool total and mask fresh drops on the survivors
+        self._last_drops: dict[str, dict[str, int]] = {}
 
     def decide(self, owner: str, handles: Sequence[InstanceHandle],
                min_instances: int, max_instances: int) -> int:
@@ -245,14 +261,19 @@ class AutoScaler:
         if now - last < self.policy.cooldown_s:
             return cur
         metrics = [h.sidecar.metrics() for h in handles]
-        per_instance_backlog = max(m["backlog"] for m in metrics)
         total_backlog = sum(m["backlog"] for m in metrics)
+        prev_drops = self._last_drops.get(owner, {})
+        drops = {m["instance"]: m["dropped"] for m in metrics}
+        new_drops = any(d > prev_drops.get(iid, 0) for iid, d in drops.items())
+        self._last_drops[owner] = drops
         all_idle = all(m["idle_s"] > self.policy.idle_s for m in metrics)
 
         desired = cur
-        if per_instance_backlog > self.policy.backlog_high and cur < max_instances:
+        if (total_backlog > self.policy.backlog_high * cur or new_drops) \
+                and cur < max_instances:
             desired = min(max_instances, cur * 2)
-        elif total_backlog <= self.policy.backlog_low and all_idle and cur > min_instances:
+        elif total_backlog <= self.policy.backlog_low and all_idle \
+                and cur > min_instances:
             desired = cur - 1
         if desired != cur:
             self._last_decision[owner] = now

@@ -27,15 +27,19 @@ class Sidecar:
     def __init__(self, instance_id: str, bus: MessageBus, *,
                  inputs: Sequence[str] = (), output: str | None = None,
                  token: str | None = None, queue_size: int = 256,
-                 wire: bool = False):
+                 wire: bool = False, group: str | None = None):
         self.instance_id = instance_id
         self._bus = bus
         self._output = output
+        self.group = group
         self._token = token or bus.issue_token(
             instance_id, list(inputs) + ([output] if output else []))
+        # group: scaled instances of one entity join the same queue group on
+        # every input subject — each message reaches exactly one of them (a
+        # worker pool); group=None keeps per-instance broadcast replicas
         self._subs: list[Subscription] = [
             bus.subscribe(s, token=self._token, maxsize=queue_size, wire=wire,
-                          name=f"{instance_id}:{s}")
+                          name=f"{instance_id}:{s}", group=group)
             for s in inputs
         ]
         self._rr = 0  # round-robin cursor over input subscriptions
@@ -114,6 +118,7 @@ class Sidecar:
         with self._lock:
             return {
                 "instance": self.instance_id,
+                "group": self.group,
                 "received": received,
                 "dropped": dropped,
                 "published": self.published,

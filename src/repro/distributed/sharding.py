@@ -69,7 +69,6 @@ def _param_rule(path: tuple[str, ...], shape: tuple[int, ...],
     name = path[-1]
     ctx = path[-2] if len(path) >= 2 else ""
     H, KH = cfg.n_heads, cfg.n_kv_heads
-    Dh = cfg.resolved_head_dim
 
     # fsdp axis on a given dim only if divisible
     def fs(dim: int):

@@ -26,7 +26,7 @@ import sys
 import time
 import traceback
 
-import jax
+import jax  # noqa: F401  (imported for effect: locks the fake device count)
 
 from repro.configs import (ARCHS, SHAPES_BY_NAME, get_config, shapes_for,
                            skipped_shapes_for)

@@ -14,8 +14,6 @@ softmax accumulation in f32, residual stream in activation dtype.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 import math
 
 import jax

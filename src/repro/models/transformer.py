@@ -22,7 +22,6 @@ layer body.  Every family exposes:
 from __future__ import annotations
 
 import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -27,7 +27,6 @@ import dataclasses
 import json
 import re
 
-import numpy as np
 
 from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
 
@@ -75,7 +74,6 @@ class CollectiveStats:
 def parse_collectives(hlo_text: str) -> CollectiveStats:
     op_bytes: dict[str, float] = {}
     op_counts: dict[str, int] = {}
-    seen_done = set()
     for m in _COLLECTIVE_RE.finditer(hlo_text):
         shape_str, kind = m.group(1), m.group(2)
         line = hlo_text[m.start():hlo_text.find("\n", m.start())]

@@ -28,7 +28,6 @@ import numpy as np
 from repro import models
 from repro.configs.base import ModelConfig, RunConfig
 from repro.core.state import Database
-from repro.distributed import sharding as shard
 from repro.distributed.act_sharding import activation_mesh
 from repro.models import transformer as T
 

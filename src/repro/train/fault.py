@@ -98,7 +98,7 @@ class ElasticController:
                              state_like, model_axis: int = 1):
         """The full elastic path: new mesh -> new shardings -> restore."""
         mesh = self.build_mesh(surviving_devices, model_axis)
-        pshard = self.reshard_plan(
+        self.reshard_plan(
             jax.eval_shape(lambda s: s["params"], state_like)
             if isinstance(state_like, dict) and "params" in state_like
             else state_like, mesh)

@@ -14,7 +14,6 @@ compression hooks stay explicit:
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any
 
 import jax

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import models
-from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.configs.base import ModelConfig, RunConfig
 from repro.distributed import sharding as shard
 from repro.distributed.act_sharding import activation_mesh
 

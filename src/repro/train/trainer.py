@@ -18,11 +18,9 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import models
 from repro.configs.base import ModelConfig, RunConfig

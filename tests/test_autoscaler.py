@@ -1,8 +1,6 @@
 """Serverless autoscaling: backlog-driven scale decisions + operator loop."""
 import time
 
-import pytest
-
 from repro.core import (AnalyticsUnitSpec, AutoScaler, ConfigSchema,
                         DriverSpec, FieldSpec, Operator, ScalePolicy,
                         SensorSpec, StreamSchema, StreamSpec)
@@ -98,7 +96,8 @@ def test_policy_unit():
 
     class FakeSidecar:
         def __init__(self, backlog, idle):
-            self._m = {"backlog": backlog, "idle_s": idle}
+            self._m = {"instance": f"fake-{id(self):x}",
+                       "backlog": backlog, "idle_s": idle}
 
         def metrics(self):
             return dict(self._m, received=0, dropped=0, published=0,

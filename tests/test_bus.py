@@ -6,8 +6,7 @@ import pytest
 
 from repro.core import (FieldSpec, MessageBus, StreamSchema, Unauthorized,
                         UnknownSubject, drain)
-from repro.core.bus import decode_message, decode_payload, encode_message, \
-    encode_payload
+from repro.core.bus import decode_payload, encode_payload
 
 
 @pytest.fixture

@@ -1,7 +1,4 @@
 """Checkpointing: atomic commit, checksums, retention, elastic restore."""
-import json
-import os
-import shutil
 
 import jax
 import jax.numpy as jnp

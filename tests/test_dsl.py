@@ -183,8 +183,8 @@ def test_map_filter_fuse_window_end_to_end():
     doubled = raw.map(lambda p: {"t": p["t"] * 2}, emits=READING,
                       name="doubled")
     big = doubled.filter(lambda p: p["t"] >= 10.0, name="big")
-    pairs = big.window(2, name="pairs")
-    summed = StreamHandle.fuse(
+    big.window(2, name="pairs")
+    StreamHandle.fuse(
         doubled, big, with_=lambda a, b: {"t": a["t"] + b["t"]},
         emits=READING, name="summed")
 

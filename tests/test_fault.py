@@ -1,15 +1,12 @@
 """Fault tolerance: preemption-save, stragglers, restart, elastic re-mesh."""
-import shutil
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs import get_smoke_config
 from repro.configs.base import RunConfig
-from repro.train.fault import ElasticController, PreemptionHandler, \
-    StepTimeMonitor
+from repro.train.fault import ElasticController, StepTimeMonitor
 from repro.train.trainer import Trainer, TrainerConfig
 
 RUN = RunConfig(attention_impl="chunked", attention_chunk=32, remat="none")
@@ -41,7 +38,7 @@ def test_preemption_checkpoints_and_stops(workdir):
 def test_restart_resumes_from_checkpoint(workdir):
     tr = _trainer(workdir)
     tr.init_or_restore()
-    m1 = tr.run_steps(4)
+    tr.run_steps(4)
     tr.ckpt.wait()
     w_before = np.asarray(jax.tree.leaves(tr.params)[0], np.float32)
     tr.close()

@@ -3,10 +3,9 @@ import time
 
 import pytest
 
-from repro.core import (AnalyticsUnitSpec, Application, CoherenceError,
-                        ConfigSchema, DriverSpec, FieldSpec, GadgetSpec,
-                        ActuatorSpec, Operator, OperatorError, SensorSpec,
-                        StreamSchema, StreamSpec, drain)
+from repro.core import (AnalyticsUnitSpec, CoherenceError, ConfigSchema,
+                        DriverSpec, FieldSpec, Operator, OperatorError,
+                        SensorSpec, StreamSchema, StreamSpec, drain)
 
 
 def counter_driver(ctx):
@@ -191,7 +190,6 @@ def test_stream_reuse_across_apps(op):
                                 inputs=("nums",)))
     assert "doubled" in op.registered_streams()
     # app 2 reuses 'doubled' without touching app 1
-    app2 = Application(name="reuser")
     op.register_analytics_unit(AnalyticsUnitSpec(
         name="plus1", logic=lambda ctx: (
             lambda s, p: {"value": p["value"] + 1}),

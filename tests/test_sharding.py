@@ -5,12 +5,11 @@ import sys
 import textwrap
 
 import jax
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCHS, get_config
-from repro.configs.base import RunConfig, TRAIN_4K
+from repro.configs.base import TRAIN_4K
 from repro.distributed import sharding as shard
 from repro.launch.presets import run_preset
 from repro.train import steps

@@ -1,12 +1,10 @@
 """Platform state management: StateStore engines, persistence, DB-in-AU."""
-import os
 
 import pytest
 
-from repro.core import (AnalyticsUnitSpec, ConfigSchema, DatabaseSpec,
-                        DriverSpec, FieldSpec, Operator, SensorSpec,
-                        StateError, StateStore, StreamSchema, StreamSpec,
-                        drain)
+from repro.core import (AnalyticsUnitSpec, DriverSpec, FieldSpec, Operator,
+                        SensorSpec, StateError, StateStore, StreamSchema,
+                        StreamSpec, drain)
 
 
 def test_memkv_tables():

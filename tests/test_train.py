@@ -1,5 +1,4 @@
 """Training integration: loss goes down; optimizer features; compression."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
