@@ -1,0 +1,145 @@
+"""Claim (tentpole PR 4): keyed delivery scales STATEFUL streams.
+
+Queue groups (PR 3) made stateless scaling add capacity, but any stateful
+stage — per-key counters, per-session servers — stayed pinned to one
+instance: splitting its messages round-robin would fork its state and
+scramble per-key order.  Keyed delivery removes the pin: ``.key_by(field)``
+hashes the field onto a stable partition ring, every message for a key goes
+to the same healthy member in order, and the per-key state lives in the
+stream's shared platform database (``KeyedStore``), so partitions re-home on
+scale events with their state intact.
+
+The workload is a per-key running fold (``.reduce``) with a fixed service
+time per message (service-time bound, GIL-free, same rationale as
+bench_scaling).  The same topology deploys twice — 1 instance vs ``WORKERS``
+keyed instances — and during the pooled run one worker is force-stopped
+(scale-down churn) to exercise the ordered partition hand-off.  Metric:
+end-to-end messages/s, best of ``RUNS``.
+
+Correctness is asserted, not sampled: every key's emitted fold values must be
+``1..rounds`` *in order* at a single subscriber.  Any cross-member key split,
+lost handoff, state reset, or ordering violation breaks the sequence —
+``ordering_violations`` / ``lost_state`` are hard CI gate failures alongside
+``speedup >= 2``.  Keyed delivery is pure platform code: the gate runs on
+BOTH CI matrix legs (no jax required).
+
+``run()`` returns the metric dict written to ``BENCH_keyed.json``.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import App, FieldSpec, StreamSchema, connect, drain
+
+from .common import emit
+
+EVENT = StreamSchema.of(key=FieldSpec("str"), seq=FieldSpec("int"))
+KEYS = 32            # distinct keys (spread over the 64-partition ring)
+ROUNDS = 7           # messages per key -> 224 total, under the 256 mailbox
+SERVICE_S = 0.004    # per-message service time inside the fold
+WORKERS = 4
+RUNS = 3             # best-of, to keep the CI gate robust to scheduler noise
+
+
+def _app(instances: int):
+    app = App(f"keyed-bench-{instances}")
+
+    @app.driver(emits=EVENT)
+    def source(ctx, rounds=ROUNDS):
+        def gen():
+            for r in range(rounds):
+                for k in range(KEYS):
+                    yield {"key": f"key-{k:02d}", "seq": r}
+        return gen()
+
+    def fold(acc, payload):
+        time.sleep(SERVICE_S)
+        n = (acc or {"n": 0})["n"]
+        return {"n": n + 1, "seq": payload["seq"]}
+
+    counts = (app.sense("events", source, rounds=ROUNDS)
+              .key_by("key")
+              .reduce(fold, name="counts"))
+    if instances > 1:
+        counts.scaled(instances=instances)
+    return app
+
+
+def _measure(instances: int, churn: bool) -> dict:
+    """Deploy, stream every event through the keyed fold, verify per-key
+    order + state continuity at the subscriber; returns rate + violations."""
+    frames = KEYS * ROUNDS
+    app = _app(instances)
+    with connect(start=False) as op:
+        app.deploy(op, start_sensors=False)
+        sub = op.subscribe("counts", maxsize=frames + 8)
+        time.sleep(0.2)  # let the worker threads boot
+        t0 = time.perf_counter()
+        op.start_pending_sensors()
+        got = []
+        if churn:
+            # forced scale-down mid-burst: one member leaves, its partitions
+            # (and their queued backlog) re-home to the survivors in order
+            got.extend(drain(sub, frames // 2, timeout=120))
+            victim = op.executor.instances_of("counts")[0]
+            op.executor.stop_instance(victim.instance_id)
+        got.extend(drain(sub, frames - len(got), timeout=120))
+        dt = time.perf_counter() - t0
+        stats = op.bus.stats()
+        group = stats["events"]["groups"]["counts"]
+        drops = sum(s["dropped"] for s in stats.values())
+
+    ordering_violations = 0
+    lost_state = 0
+    per_key: dict[str, list[dict]] = {}
+    for m in got:
+        per_key.setdefault(m.payload["key"], []).append(m.payload["value"])
+    for vals in per_key.values():
+        for i, v in enumerate(vals):
+            if v["seq"] != i:
+                ordering_violations += 1   # out-of-order / duplicated fold
+            if v["n"] != i + 1:
+                lost_state += 1            # accumulator reset or forked
+    return {
+        "rate": len(got) / dt,
+        "received": len(got),
+        "ordering_violations": ordering_violations,
+        "lost_state": lost_state,
+        "dropped": drops,
+        "rerouted": group["rerouted"],
+    }
+
+
+def run() -> dict:
+    single, pooled = 0.0, 0.0
+    violations = state_loss = drops = rerouted = 0
+    for _ in range(RUNS):
+        r1 = _measure(1, churn=False)
+        rn = _measure(WORKERS, churn=True)
+        single = max(single, r1["rate"])
+        pooled = max(pooled, rn["rate"])
+        for r in (r1, rn):
+            violations += r["ordering_violations"]
+            state_loss += r["lost_state"]
+            drops += r["dropped"]
+        rerouted += rn["rerouted"]
+    speedup = pooled / single
+    emit("keyed_stateful_1", 1e6 / single, f"msgs_per_s={single:.0f}")
+    emit(f"keyed_stateful_{WORKERS}", 1e6 / pooled,
+         f"msgs_per_s={pooled:.0f}")
+    emit("keyed_speedup", 0.0,
+         f"{WORKERS}_keyed_workers_over_1={speedup:.2f}x_with_churn")
+    return {
+        "keyed_1_msgs_per_s": round(single, 1),
+        f"keyed_{WORKERS}_msgs_per_s": round(pooled, 1),
+        "speedup": round(speedup, 3),
+        "keys": KEYS,
+        "rounds": ROUNDS,
+        "workers": WORKERS,
+        "service_time_s": SERVICE_S,
+        "scale_down_during_run": True,
+        "ordering_violations": violations,
+        "lost_state": state_loss,
+        "dropped": drops,
+        "rerouted": rerouted,
+    }

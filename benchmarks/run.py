@@ -8,10 +8,13 @@ metric) for CI trending and gating.  Run:
 
 ``--gate`` turns known regression checks into hard failures — today: the
 fused device chain must beat per-hop bus execution (BENCH_fusion.json
-``speedup`` > 1), and 4 queue-grouped workers must beat 1 by >= 2x on the
-scaling pipeline (BENCH_scaling.json ``speedup``).  Modules are imported
-lazily so a minimal-deps environment (no jax) can still run the core
-benchmarks — the scaling gate is pure platform code and runs on both CI legs.
+``speedup`` > 1); 4 queue-grouped workers must beat 1 by >= 2x on the
+scaling pipeline (BENCH_scaling.json ``speedup``); and 4 keyed *stateful*
+workers must beat 1 by >= 2x with zero per-key ordering violations and zero
+lost state across a forced mid-run scale-down (BENCH_keyed.json).  Modules
+are imported lazily so a minimal-deps environment (no jax) can still run the
+core benchmarks — the scaling and keyed gates are pure platform code and run
+on both CI legs.
 """
 from __future__ import annotations
 
@@ -27,6 +30,7 @@ ALL = {
     "pipeline": "bench_pipeline",
     "autoscale": "bench_autoscale",
     "scaling": "bench_scaling",
+    "keyed": "bench_keyed",
     "loc": "bench_loc",
     "reuse": "bench_reuse",
     "fusion": "bench_fusion",
@@ -58,6 +62,27 @@ def _gate(results: dict[str, dict]) -> list[str]:
         failures.append(
             f"scaling: benchmark pipeline dropped "
             f"{scaling.get('dropped')} messages (should be lossless)")
+    keyed = results.get("keyed")
+    if keyed is not None:
+        if keyed.get("speedup", 0.0) < 2.0:
+            workers = keyed.get("workers", 4)
+            failures.append(
+                f"keyed: {workers} keyed stateful workers must be >=2x over "
+                f"1 (got {keyed.get('speedup')}x; "
+                f"pooled={keyed.get(f'keyed_{workers}_msgs_per_s')} msgs/s, "
+                f"single={keyed.get('keyed_1_msgs_per_s')} msgs/s)")
+        if keyed.get("ordering_violations", 1) != 0:
+            failures.append(
+                f"keyed: {keyed.get('ordering_violations')} per-key ordering "
+                f"violations under scale-down churn (must be 0)")
+        if keyed.get("lost_state", 1) != 0:
+            failures.append(
+                f"keyed: {keyed.get('lost_state')} per-key state "
+                f"resets/forks across rebalance (must be 0)")
+        if keyed.get("dropped", 0) > 0:
+            failures.append(
+                f"keyed: benchmark pipeline dropped "
+                f"{keyed.get('dropped')} messages (should be lossless)")
     return failures
 
 

@@ -25,6 +25,13 @@ echo "== examples (headless) =="
 python examples/quickstart.py
 python examples/fever_screening.py
 python examples/stream_reuse.py
+# the LM examples (now v2 fluent-DSL apps) need jax — full-deps leg only
+if python -c "import jax" 2>/dev/null; then
+    echo "== examples (headless, jax) =="
+    python examples/serve_lm.py --requests 6 --slots 3
+    python examples/train_lm.py --steps 4 --batch 4 --seq 64 \
+        --workdir "$(mktemp -d)"
+fi
 
 echo "== benchmarks: fusion regression gate =="
 # writes BENCH_fusion.json; fails if the fused device chain is not faster
@@ -35,6 +42,12 @@ echo "== benchmarks: queue-group scaling gate =="
 # writes BENCH_scaling.json; fails unless 4 grouped workers beat 1 by >=2x
 # on the 4-stage pipeline (pure platform code — runs on both matrix legs)
 python -m benchmarks.run --only scaling --gate
+
+echo "== benchmarks: keyed stateful scaling gate =="
+# writes BENCH_keyed.json; fails unless 4 keyed STATEFUL workers beat 1 by
+# >=2x with zero per-key ordering violations and zero lost state across a
+# forced mid-run scale-down (pure platform code — runs on both matrix legs)
+python -m benchmarks.run --only keyed --gate
 
 echo "== benchmarks: productivity claim =="
 # writes BENCH_loc.json

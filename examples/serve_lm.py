@@ -1,7 +1,16 @@
-"""Serve a small LM with continuously-batched requests.
+"""Serve a small LM with continuously-batched requests — as a v2 DSL app.
 
-Requests arrive on a DataX stream (request sensor), the engine admits them
-into KV slots as they free up, and responses land on a response stream.
+The serving loop is a real DataX application (migrated from the raw-Operator
+v1 style): a request driver feeds a ``requests`` stream, an SDK-style engine
+analytics unit owns the continuous-batching loop (submit -> tick -> emit),
+and responses land on a ``responses`` stream any consumer can reuse (§3).
+
+The request stream is **keyed by session** (``.key_by("session")``): every
+session's requests reach the same engine instance in order, and the KV slot
+table lives in the stream's platform database — exactly the per-session
+state locality that lets ``.scaled(instances=N)`` shard sessions across N
+engines without forking their state (this example keeps one engine so the
+jit compile is paid once).
 
 Run:  PYTHONPATH=src python examples/serve_lm.py --requests 12 --slots 4
 """
@@ -9,14 +18,80 @@ import argparse
 import dataclasses
 import time
 
-import jax
 import numpy as np
 
-from repro import models
 from repro.configs import get_smoke_config
 from repro.configs.base import RunConfig
-from repro.core import Operator
-from repro.serve import ServeEngine
+from repro.core import (App, ConfigSchema, FieldSpec, StreamSchema, connect,
+                        drain, sdk_entrypoint)
+
+REQUEST = StreamSchema.of(
+    request_id=FieldSpec("str"), session=FieldSpec("str"),
+    prompt=FieldSpec("ndarray", shape=(-1,), dtype="int32"),
+    max_new=FieldSpec("int"))
+RESPONSE = StreamSchema.of(
+    request_id=FieldSpec("str"), session=FieldSpec("str"),
+    prompt_len=FieldSpec("int"), tokens=FieldSpec("int"),
+    ttft_ms=FieldSpec("float"))
+
+app = App("serve-lm")
+
+
+@app.driver(emits=REQUEST)
+def request_gen(ctx, requests=12, sessions=3, vocab=4096, seed=0):
+    rng = np.random.default_rng(seed)
+
+    def gen():
+        for i in range(requests):
+            if not ctx.running:
+                return
+            prompt = rng.integers(1, vocab, int(rng.integers(4, 24)),
+                                  dtype=np.int32)
+            yield {"request_id": f"req-{i:03d}",
+                   "session": f"sess-{i % sessions}",
+                   "prompt": prompt,
+                   "max_new": 16}
+    return gen()
+
+
+@app.analytics_unit(expects=(REQUEST,), emits=RESPONSE, stateful=True,
+                    config=ConfigSchema.of(slots=("int", 4),
+                                           max_new=("int", 16)))
+@sdk_entrypoint
+def lm_engine(dx):
+    """SDK-style engine: owns its loop, three-method SDK + platform db."""
+    import jax
+
+    from repro import models
+    from repro.serve import ServeEngine
+
+    cfg = dataclasses.replace(
+        get_smoke_config("qwen3-14b"), n_layers=4, d_model=128, n_heads=4,
+        n_kv_heads=2, d_ff=512, vocab=4096, head_dim=32)
+    run = RunConfig(attention_impl="naive", remat="none")
+    params = models.init(jax.random.PRNGKey(0), cfg)
+    conf = dx.get_configuration()
+    # the KV slot table lives in the stream's platform database: an engine
+    # restart — or a session re-homed by keyed rebalance — recovers its map
+    engine = ServeEngine(cfg, run, params, n_slots=conf["slots"],
+                         max_seq=256, db=dx.db)
+    sessions: dict[str, str] = {}
+    while dx.running:
+        item = dx.next(timeout=0.02)
+        if item is not None:
+            _, payload = item
+            sessions[payload["request_id"]] = payload["session"]
+            engine.submit(payload["request_id"],
+                          [int(t) for t in payload["prompt"]],
+                          max_new_tokens=min(payload["max_new"],
+                                             conf["max_new"]))
+        if not engine.batcher.idle:
+            for req in engine.tick():
+                dx.emit({"request_id": req.request_id,
+                         "session": sessions.pop(req.request_id, ""),
+                         "prompt_len": len(req.prompt),
+                         "tokens": len(req.generated),
+                         "ttft_ms": (req.first_token_at - req.arrived) * 1e3})
 
 
 def main() -> None:
@@ -26,36 +101,33 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=16)
     args = ap.parse_args()
 
-    cfg = dataclasses.replace(
-        get_smoke_config("qwen3-14b"), n_layers=4, d_model=128, n_heads=4,
-        n_kv_heads=2, d_ff=512, vocab=4096, head_dim=32)
-    run = RunConfig(attention_impl="naive", remat="none")
-    params = models.init(jax.random.PRNGKey(0), cfg)
+    requests = app.sense("requests", request_gen, requests=args.requests)
+    responses = (requests.key_by("session")
+                 .via(lm_engine, name="responses", slots=args.slots,
+                      max_new=args.max_new, fixed_instances=1))
+    responses.tap()   # promised to external consumers (§3 reuse)
 
-    # the KV slot table lives in a platform database: engine restarts
-    # recover their session map (the paper's state management claim)
-    op = Operator()
-    db = op.store.create("serving-session")
-    engine = ServeEngine(cfg, run, params, n_slots=args.slots, max_seq=256,
-                         db=db)
-
-    rng = np.random.default_rng(0)
     t0 = time.perf_counter()
-    for i in range(args.requests):
-        prompt = list(rng.integers(1, cfg.vocab, int(rng.integers(4, 24))))
-        engine.submit(f"req-{i:03d}", prompt, max_new_tokens=args.max_new)
-    done = engine.run_until_idle()
-    dt = time.perf_counter() - t0
-
-    toks = sum(len(r.generated) for r in done)
-    print(f"served {len(done)} requests / {toks} tokens in {dt:.2f}s "
-          f"({toks/dt:.0f} tok/s) with {args.slots} KV slots")
-    for r in sorted(done, key=lambda r: r.request_id)[:5]:
-        ttft = (r.first_token_at - r.arrived) * 1e3
-        print(f"  {r.request_id}: {len(r.prompt)}-token prompt -> "
-              f"{len(r.generated)} tokens, ttft {ttft:.0f} ms")
-    print("engine metrics:", engine.metrics)
-    op.shutdown()
+    with connect() as op:
+        app.deploy(op, start_sensors=False)
+        sub = op.subscribe("responses", maxsize=args.requests + 8)
+        op.start_pending_sensors()
+        done = drain(sub, args.requests, timeout=600)
+        dt = time.perf_counter() - t0
+        toks = sum(m.payload["tokens"] for m in done)
+        print(f"served {len(done)} requests / {toks} tokens in {dt:.2f}s "
+              f"({toks/dt:.0f} tok/s) with {args.slots} KV slots")
+        for m in sorted(done, key=lambda m: m.payload["request_id"])[:5]:
+            p = m.payload
+            print(f"  {p['request_id']} ({p['session']}): "
+                  f"{p['prompt_len']}-token prompt -> {p['tokens']} tokens, "
+                  f"ttft {p['ttft_ms']:.0f} ms")
+        group = (op.executor.instances_of("responses")[0]
+                 .sidecar.metrics()["groups"]["requests"])
+        db = op.store.get("au-responses")
+        print(f"request delivery: {group['policy']} on {group.get('key')!r} "
+              f"({group['delivered']} delivered); KV slot table "
+              f"{db.tables()} lives in platform db {db.name!r}")
 
 
 if __name__ == "__main__":

@@ -1,8 +1,11 @@
 """End-to-end training driver: train an LM through the DataX pipeline.
 
-The full application graph is: corpus sensor -> packer AU -> batcher AU ->
-pjit train-step device AU -> {async checkpoints, metrics}.  Fault tolerance
-is live: Ctrl-C (or --preempt-at) triggers the preemption path (blocking
+The data pipeline is a **v2 fluent-DSL app** (the last spec-style holdout
+migrated): corpus sensor -> packer AU -> batcher AU, wired with decorators
+and ``.via`` combinators; the Trainer attaches to the resulting ``batches``
+stream as just another subscriber (§3 stream reuse) and drives the pjit
+train-step device AU -> {async checkpoints, metrics}.  Fault tolerance is
+live: Ctrl-C (or --preempt-at) triggers the preemption path (blocking
 checkpoint, clean exit); re-running the same command resumes.
 
 CPU-sized default (a few M params).  On a real slice, pass --preset 100m
@@ -15,6 +18,9 @@ import dataclasses
 
 from repro.configs import get_smoke_config
 from repro.configs.base import ModelConfig, RunConfig
+from repro.core import App, Operator
+from repro.data import corpus as corpus_mod
+from repro.data import pipeline as pipe
 from repro.train.trainer import Trainer, TrainerConfig
 
 
@@ -28,6 +34,28 @@ def preset_config(name: str) -> ModelConfig:
             get_smoke_config("qwen3-14b"), n_layers=12, d_model=768,
             n_heads=12, n_kv_heads=4, d_ff=2048, vocab=32768, head_dim=64)
     raise SystemExit(f"unknown preset {name}")
+
+
+def pipeline_app(cfg: ModelConfig, tcfg: TrainerConfig) -> App:
+    """corpus -> packer -> batcher, declared fluently.
+
+    The business logic is the shared library AUs (repro.data) — the app
+    only *wires* them, which is the v1-vs-v2 productivity delta."""
+    app = App("train-pipeline")
+    app.driver(corpus_mod.corpus_driver, name="corpus",
+               emits=corpus_mod.CORPUS_SCHEMA, config=corpus_mod.CORPUS_CONFIG)
+    app.analytics_unit(pipe.packer_au, name="packer",
+                       emits=pipe.PACKED_SCHEMA, config=pipe.PACKER_CONFIG,
+                       max_instances=4)
+    app.analytics_unit(pipe.batcher_au, name="batcher",
+                       emits=pipe.BATCH_SCHEMA, config=pipe.BATCHER_CONFIG,
+                       max_instances=1)
+    docs = app.sense("docs", "corpus", vocab=cfg.vocab, seed=tcfg.seed)
+    sequences = docs.via("packer", name="sequences", seq_len=tcfg.seq_len)
+    # the batcher accumulates across messages -> single instance
+    sequences.via("batcher", name="batches", batch=tcfg.global_batch,
+                  fixed_instances=1)
+    return app
 
 
 def main() -> None:
@@ -47,8 +75,13 @@ def main() -> None:
     tcfg = TrainerConfig(global_batch=args.batch, seq_len=args.seq,
                          ckpt_every=25, total_steps=args.steps,
                          workdir=args.workdir)
-    tr = Trainer(cfg, run, tcfg)
+
+    op = Operator(reconcile_interval_s=0.2)
+    pipeline_app(cfg, tcfg).deploy(op, start_sensors=False)
+    op.start()
+    tr = Trainer(cfg, run, tcfg, operator=op, deploy_pipeline=False)
     tr.init_or_restore()
+    op.start_pending_sensors()   # no data flows before the trainer subscribed
     if tr.step:
         print(f"resumed from checkpoint at step {tr.step}")
     print(f"training {cfg.param_count()/1e6:.1f}M params "
@@ -71,6 +104,7 @@ def main() -> None:
         tr.run_steps(1)
     finally:
         tr.close()
+        op.shutdown()
     print(f"done at step {tr.step}; checkpoints in {args.workdir}/ckpt")
 
 

@@ -4,9 +4,11 @@ Entities (§2), Operator coherence + lifecycle (§4), message bus (NATS analog),
 sidecar metrics, serverless autoscaling, platform state, and the 3-method SDK.
 """
 from .app import Application, AppValidationError
-from .bus import (BusError, MessageBus, QueueGroup, Subscription, Unauthorized,
-                  UnknownSubject, decode_message, decode_payload,
-                  encode_message, encode_payload, drain)
+from .bus import (KEYED_PARTITIONS, BusError, KeyedGroup, MessageBus,
+                  QueueGroup, Subscription, Unauthorized, UnknownSubject,
+                  decode_message, decode_payload, encode_message,
+                  encode_payload, drain, partition_of, partition_owner,
+                  ring_assignment, stable_hash)
 from .compression import CompressionError, codec_name
 from .dsl import App, DSLError, GadgetHandle, SchemaMismatch, StreamHandle, connect
 from .entities import (ActuatorSpec, AnalyticsUnitSpec, DatabaseSpec,
@@ -18,17 +20,18 @@ from .schema import ConfigSchema, FieldSpec, Message, StreamSchema
 from .sdk import DataX, LogicContext, sdk_entrypoint
 from .serverless import AutoScaler, Executor, InstanceHandle, ScalePolicy
 from .sidecar import Sidecar
-from .state import Database, StateError, StateStore, Table
+from .state import Database, KeyedStore, StateError, StateStore, Table
 
 __all__ = [
     "App", "DSLError", "GadgetHandle", "SchemaMismatch", "StreamHandle",
     "connect",
     "Application", "AppValidationError",
     "CompressionError", "codec_name",
-    "BusError", "MessageBus", "QueueGroup", "Subscription", "Unauthorized",
-    "UnknownSubject",
+    "KEYED_PARTITIONS", "BusError", "KeyedGroup", "MessageBus", "QueueGroup",
+    "Subscription", "Unauthorized", "UnknownSubject",
     "decode_message", "decode_payload", "encode_message", "encode_payload",
-    "drain",
+    "drain", "partition_of", "partition_owner", "ring_assignment",
+    "stable_hash",
     "ActuatorSpec", "AnalyticsUnitSpec", "DatabaseSpec", "DriverSpec",
     "EntityKind", "GadgetSpec", "Placement", "SensorSpec", "StreamSpec",
     "FusedStage", "fuse_application", "plan_segments",
@@ -37,5 +40,5 @@ __all__ = [
     "DataX", "LogicContext", "sdk_entrypoint",
     "AutoScaler", "Executor", "InstanceHandle", "ScalePolicy",
     "Sidecar",
-    "Database", "StateError", "StateStore", "Table",
+    "Database", "KeyedStore", "StateError", "StateStore", "Table",
 ]

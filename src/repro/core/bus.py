@@ -8,13 +8,26 @@ Subject-based pub/sub with:
   with a token that is not authorized for that subject, raises.
 * **bounded subscriber queues** with a drop-oldest policy (streams are lossy
   real-time flows; the sidecar counts drops and reports them as metrics).
-* **queue groups** (the NATS queue-group analog) — ``subscribe(...,
-  group="owner")`` joins a named single-delivery group on the subject: each
-  message is round-robined to exactly ONE healthy member per group, while
-  still fanning out to every ungrouped subscription and to every *other*
-  group.  Scaled instances of the same stream join one group (a worker pool,
-  N instances = N× capacity); different consumer streams use different group
-  names, so §3 multi-app stream reuse keeps broadcast semantics.
+* **delivery policies** — how a subject's subscribers share its messages is a
+  first-class, pluggable layer (the DataX claim that the *platform* picks the
+  right communication mechanism):
+
+  - ``broadcast`` — every ungrouped subscription receives every message
+    (§3 stream reuse; the default for plain ``subscribe``).
+  - ``group`` (:class:`QueueGroup`, the NATS queue-group analog) —
+    ``subscribe(..., group="owner")`` joins a named single-delivery group:
+    each message is round-robined to exactly ONE healthy member per group,
+    while still fanning out to every ungrouped subscription and every
+    *other* group.  Scaled instances of one stream join one group (a worker
+    pool, N instances = N× capacity).
+  - ``keyed`` (:class:`KeyedGroup`) — ``subscribe(..., group=..., key=...)``
+    hashes the declared payload field onto a stable partition ring
+    (rendezvous hashing over :data:`KEYED_PARTITIONS` partitions): every
+    message for a key lands on the SAME healthy member, which is what makes
+    *stateful* scaled streams safe (per-key state + per-key order).  A
+    departing member's partitions move — whole and in order — to survivors;
+    no other partition moves (minimal disruption, property-tested).
+
 * **schema enforcement** — each subject carries a StreamSchema; publishes are
   validated against it (homogeneous streams, §2).
 * **wire serialization** — msgpack (+numpy) encode/decode used when a message
@@ -27,6 +40,7 @@ is factored so a NATS-backed implementation only replaces ``_deliver``.
 """
 from __future__ import annotations
 
+import hashlib
 import io
 import queue
 import threading
@@ -104,6 +118,64 @@ class UnknownSubject(BusError):
 
 
 # ---------------------------------------------------------------------------
+# The partition ring (pure functions — property-tested)
+# ---------------------------------------------------------------------------
+
+#: Default number of hash partitions per keyed group.  Partitions, not
+#: members, are the unit of assignment: keys map to partitions permanently
+#: (stable hash), and only the partition->member mapping changes on
+#: membership churn.  64 keeps the rendezvous spread within ~25% of fair for
+#: small pools while the assignment map stays cheap to snapshot.
+KEYED_PARTITIONS = 64
+
+
+def stable_hash(value) -> int:
+    """Deterministic, process-independent 64-bit hash over canonical bytes.
+
+    blake2s, not crc32/python-hash: python's hash is salted per process (the
+    ring must agree across restarts and, eventually, hosts), and crc32 is
+    *affine* — member names that differ only in an instance counter digit
+    would get rendezvous weights whose relative order repeats across
+    partitions, piling half the ring onto one member.  A cryptographic hash
+    makes every (partition, member) weight independent.
+    """
+    if isinstance(value, bytes):
+        data = value
+    elif isinstance(value, str):
+        data = value.encode("utf-8")
+    else:
+        data = repr(value).encode("utf-8")
+    return int.from_bytes(hashlib.blake2s(data, digest_size=8).digest(), "big")
+
+
+def partition_of(key, n_partitions: int = KEYED_PARTITIONS) -> int:
+    """Key value -> partition index.  Same key, same partition — forever."""
+    return stable_hash(key) % n_partitions
+
+
+def partition_owner(partition: int, members: Sequence[str]) -> str | None:
+    """Rendezvous (highest-random-weight) owner of ``partition``.
+
+    Stability + minimal disruption come from scoring every (partition,
+    member) pair independently: while membership is unchanged the argmax is
+    constant; removing a member only re-homes the partitions it was winning
+    (each to its runner-up); adding one only claims the partitions it now
+    wins.  No other partition moves."""
+    best, best_w = None, -1
+    for m in members:
+        w = stable_hash(f"{partition}|{m}")
+        if w > best_w or (w == best_w and (best is None or m < best)):
+            best, best_w = m, w
+    return best
+
+
+def ring_assignment(members: Sequence[str],
+                    n_partitions: int = KEYED_PARTITIONS) -> dict[int, str]:
+    """The full partition->member map for a membership set."""
+    return {p: partition_owner(p, members) for p in range(n_partitions)}
+
+
+# ---------------------------------------------------------------------------
 # Subscriptions
 # ---------------------------------------------------------------------------
 
@@ -114,6 +186,10 @@ class Subscription:
     ungrouped broadcast subscriber).  Drops are counted per subscription and
     surfaced through ``MessageBus.stats()`` — a nonzero count means this
     consumer is losing data and is a hard scale-up signal for the autoscaler.
+
+    Mailbox items are stored as ``(tag, item)`` pairs; ``tag`` is the keyed
+    partition index (None for broadcast/round-robin delivery), which is how
+    the bus keeps an exact per-partition backlog without touching payloads.
     """
 
     def __init__(self, subject: str, maxsize: int, wire: bool, name: str = "",
@@ -127,8 +203,14 @@ class Subscription:
         self.dropped = 0
         self.closed = False
         self._lock = threading.Lock()
+        # set by KeyedGroup.add: consumption callback for partition backlog
+        self._keyed_group: "KeyedGroup | None" = None
 
-    def _offer(self, item) -> bool:
+    def _note_consumed(self, tag) -> None:
+        if tag is not None and self._keyed_group is not None:
+            self._keyed_group.note_consumed(tag)
+
+    def _offer(self, item, tag=None) -> bool:
         """Enqueue with drop-oldest on overflow (lossy stream semantics).
 
         Returns False when the mailbox is closed (counted as a drop here so
@@ -140,24 +222,28 @@ class Subscription:
                 return False
             while True:
                 try:
-                    self._q.put_nowait(item)
+                    self._q.put_nowait((tag, item))
                     self.received += 1
                     return True
                 except queue.Full:
                     try:
-                        self._q.get_nowait()
+                        old = self._q.get_nowait()
                         self.dropped += 1
+                        if old is not None:
+                            self._note_consumed(old[0])
                     except queue.Empty:  # pragma: no cover - race guard
                         pass
 
     def next(self, timeout: float | None = None) -> Message | None:
         """Blocking pop; None on timeout or close."""
         try:
-            item = self._q.get(timeout=timeout)
+            pair = self._q.get(timeout=timeout)
         except queue.Empty:
             return None
-        if item is None:
+        if pair is None:
             return None
+        tag, item = pair
+        self._note_consumed(tag)
         if self.wire:
             return decode_message(item)
         return item
@@ -178,7 +264,8 @@ class Subscription:
             self.closed = True
 
     def _drain_pending(self) -> list:
-        """Pop everything still queued (raw items, possibly wire blobs).
+        """Pop everything still queued as ``(tag, item)`` pairs (items
+        possibly wire blobs).
 
         Used when a group member departs: under single delivery its queued
         messages are the only copies, so the bus hands them to the surviving
@@ -187,11 +274,11 @@ class Subscription:
         items = []
         while True:
             try:
-                item = self._q.get_nowait()
+                pair = self._q.get_nowait()
             except queue.Empty:
                 return items
-            if item is not None:
-                items.append(item)
+            if pair is not None:
+                items.append(pair)
 
     def close(self) -> None:
         with self._lock:
@@ -205,8 +292,10 @@ class Subscription:
                     return
                 except queue.Full:
                     try:
-                        self._q.get_nowait()
+                        old = self._q.get_nowait()
                         self.dropped += 1
+                        if old is not None:
+                            self._note_consumed(old[0])
                     except queue.Empty:  # pragma: no cover - race guard
                         pass
 
@@ -214,79 +303,314 @@ class Subscription:
 class QueueGroup:
     """A named single-delivery group on one subject (NATS queue-group analog).
 
-    Members are Subscriptions; ``pick()`` advances a round-robin cursor and
-    returns the next *healthy* (non-closed) member, skipping dead ones so a
-    member dying mid-rotation re-routes its share to the survivors.  Membership
-    changes happen under the bus lock; the group's own lock orders ``pick()``
-    against them (lock order is always bus → group, so no deadlock).
+    The base class implements the ``group`` delivery policy: round-robin to
+    the next *healthy* (non-closed) member, skipping dead ones so a member
+    dying mid-rotation re-routes its share to the survivors.
+    :class:`KeyedGroup` subclasses it for the ``keyed`` policy — the two
+    differ only in how a message picks its member and how a departing
+    member's backlog re-homes, which is exactly the pluggable surface
+    (:meth:`_pick_locked` / :meth:`_repick_locked`).
+
+    The round-robin cursor tracks the next member's *identity*, not an index,
+    so a removal can never skew the rotation: removing any member other than
+    the cursor leaves the cursor in place, and removing the cursor moves it
+    to that member's successor — the survivor after a departure is never
+    double-picked (regression-tested exhaustively).
+
+    Membership changes happen under the bus lock; the group's own lock orders
+    ``pick()`` against them (lock order is always bus → group, so no
+    deadlock).  :meth:`depart` runs the seal-drain-reroute hand-off of a
+    leaving member atomically under the group lock, so no concurrent publish
+    can be delivered to the new owner ahead of the rerouted backlog — that
+    atomicity is what upgrades "re-route" to *ordered* re-route for keyed
+    groups.
     """
+
+    policy = "group"
 
     def __init__(self, subject: str, name: str):
         self.subject = subject
         self.name = name
         self.members: list[Subscription] = []
-        self.rr = 0                   # round-robin cursor (next member index)
+        self._next: Subscription | None = None   # round-robin cursor (identity)
         self.delivered = 0            # hand-offs to a member (incl. re-routes)
         self.undeliverable = 0        # published while no healthy member
         self.rerouted = 0             # departing-member backlog re-deliveries
         self._lock = threading.Lock()
 
+    # -- membership -----------------------------------------------------------
     def add(self, sub: Subscription) -> None:
         with self._lock:
-            self.members.append(sub)
+            self._add_locked(sub)
+
+    def _add_locked(self, sub: Subscription) -> None:
+        self.members.append(sub)
+        if self._next is None:
+            self._next = sub
 
     def remove(self, sub: Subscription) -> bool:
         """Remove a member; True if the group is now empty."""
         with self._lock:
-            if sub in self.members:
-                i = self.members.index(sub)
-                self.members.remove(sub)
-                if i < self.rr:
-                    self.rr -= 1     # keep the cursor on the same successor
-                if self.members:
-                    self.rr %= len(self.members)
-                else:
-                    self.rr = 0
+            self._remove_locked(sub)
             return not self.members
 
-    def pick(self) -> Subscription | None:
-        with self._lock:
-            n = len(self.members)
-            for i in range(n):
-                m = self.members[(self.rr + i) % n]
-                if not m.closed:
-                    self.rr = (self.rr + i + 1) % n
-                    self.delivered += 1
-                    return m
-            self.undeliverable += 1
-            return None
+    def _remove_locked(self, sub: Subscription) -> None:
+        if sub not in self.members:
+            return
+        if self._next is sub:
+            # cursor moves to the departing member's successor, never back
+            # to the member just picked (the old index arithmetic's risk)
+            i = self.members.index(sub)
+            self._next = self.members[(i + 1) % len(self.members)] \
+                if len(self.members) > 1 else None
+        self.members.remove(sub)
 
-    def note_reroute(self) -> None:
+    def is_empty(self) -> bool:
         with self._lock:
-            self.rerouted += 1
+            return not self.members
 
-    def unpick(self) -> None:
+    # -- the delivery policy surface ------------------------------------------
+    def _pick_locked(self, msg) -> tuple[Subscription | None, object]:
+        """(member, tag) for a fresh message; None when no healthy member.
+
+        Base policy: round-robin from the cursor, skipping closed members.
+        """
+        n = len(self.members)
+        if n == 0:
+            return None, None
+        start = self.members.index(self._next) if self._next in self.members \
+            else 0
+        for i in range(n):
+            m = self.members[(start + i) % n]
+            if not m.closed:
+                self._next = self.members[(start + i + 1) % n]
+                return m, None
+        return None, None
+
+    def _repick_locked(self, tag, item) -> tuple[Subscription | None, object]:
+        """(member, tag) for a departing member's drained backlog item.
+
+        Base policy: same round-robin as fresh messages."""
+        return self._pick_locked(None)
+
+    # -- data plane ------------------------------------------------------------
+    def pick(self, msg: Message | None = None) -> tuple[Subscription | None, object]:
+        """Pick the member for ``msg``; returns ``(member, tag)``.
+
+        ``tag`` is policy-private routing state (the partition index for
+        keyed groups) that the caller must hand to ``member._offer`` and to
+        :meth:`unpick` on a refused offer."""
+        with self._lock:
+            member, tag = self._pick_locked(msg)
+            if member is None:
+                self.undeliverable += 1
+            else:
+                self.delivered += 1
+            return member, tag
+
+    def unpick(self, tag=None) -> None:
         """Roll back a pick() whose offer was refused (member sealed by a
         racing departure) so ``delivered`` stays exact before the re-pick."""
         with self._lock:
             self.delivered -= 1
+            self._unpick_tag_locked(tag)
+
+    def _unpick_tag_locked(self, tag) -> None:
+        pass
+
+    def note_consumed(self, tag) -> None:
+        """A mailbox popped (or evicted) an item tagged ``tag``."""
+        pass
+
+    def depart(self, sub: Subscription, reoffer, lost) -> bool:
+        """Atomic leave: seal ``sub``, remove it, re-home its queued backlog.
+
+        Under single delivery the departing member's queued messages are the
+        ONLY copies, so they are re-offered to the surviving members via
+        ``reoffer(member, item, tag)`` (the bus supplies wire conversion);
+        unroutable items go to ``lost(item)``.  The whole hand-off holds the
+        group lock, so concurrent ``pick()``s — publishes racing the
+        departure — serialize *after* it: a rerouted backlog always lands
+        ahead of newer messages on the new owner, which keeps per-key order
+        intact across keyed rebalances.  Returns True if the group emptied.
+        """
+        with self._lock:
+            # seal before drain: an in-flight publish that picked this member
+            # just before the lock either enqueued already (drained below) or
+            # is refused-and-counted after (offer/seal serialize on the
+            # mailbox lock), then re-picks — blocking on the group lock until
+            # this hand-off completes.
+            sub._seal()
+            pending = sub._drain_pending()
+            self._remove_locked(sub)
+            for tag, item in pending:
+                self._unpick_tag_locked(tag)   # left the old mailbox
+                while True:
+                    member, tag2 = self._repick_locked(tag, item)
+                    if member is None:
+                        lost(item)
+                        break
+                    self.delivered += 1
+                    if reoffer(member, item, tag2):
+                        self.rerouted += 1
+                        break
+                    self.delivered -= 1
+                    self._unpick_tag_locked(tag2)
+            return not self.members
+
+    # -- introspection ---------------------------------------------------------
+    def _snapshot_locked(self) -> dict:
+        nxt = self._next if self._next in self.members else None
+        return {
+            "policy": self.policy,
+            "members": [m.name for m in self.members],
+            "rr": self.members.index(nxt) if nxt is not None else 0,
+            "delivered": self.delivered,
+            "undeliverable": self.undeliverable,
+            "rerouted": self.rerouted,
+            "dropped": sum(m.dropped for m in self.members),
+            "backlog": sum(m.qsize() for m in self.members),
+        }
 
     def snapshot(self) -> dict:
         with self._lock:
-            return {
-                "members": [m.name for m in self.members],
-                "rr": self.rr,
-                "delivered": self.delivered,
-                "undeliverable": self.undeliverable,
-                "rerouted": self.rerouted,
-                "dropped": sum(m.dropped for m in self.members),
-                "backlog": sum(m.qsize() for m in self.members),
-            }
+            return self._snapshot_locked()
 
     def backlog(self) -> int:
         """Group-aggregate mailbox depth (the pool's total queued work)."""
         with self._lock:
             return sum(m.qsize() for m in self.members)
+
+
+class KeyedGroup(QueueGroup):
+    """Hash-partitioned single delivery: every message for a key lands on the
+    same healthy member (the ``keyed`` policy).
+
+    ``key`` names the payload field to hash; its value maps to one of
+    ``n_partitions`` partitions (:func:`partition_of`, blake2s), and the
+    partition's owner is chosen by rendezvous hashing over the *healthy*
+    members' names (:func:`partition_owner`).  Consequences:
+
+    * same key -> same member while membership is unchanged (per-key order);
+    * a leave moves exactly the leaver's partitions, each to its rendezvous
+      runner-up; a join claims exactly the partitions the joiner wins —
+      minimal disruption, so per-key state hand-off touches only the keys
+      that actually move;
+    * a departing member's backlog re-homes per partition (not round-robin),
+      atomically with the membership change (:meth:`QueueGroup.depart`), so
+      rebalances preserve per-key order end to end.
+
+    An exact per-partition backlog is kept (incremented at delivery,
+    decremented when the owning mailbox pops or evicts the item) — the
+    autoscaler reads it to spot hot partitions that aggregate backlog hides.
+    """
+
+    policy = "keyed"
+
+    def __init__(self, subject: str, name: str, key: str,
+                 n_partitions: int = KEYED_PARTITIONS):
+        super().__init__(subject, name)
+        self.key = key
+        self.n_partitions = n_partitions
+        # dedicated lock: note_consumed is called from mailbox code paths
+        # (some while holding a mailbox lock), and the main group lock is
+        # held while *taking* mailbox locks in depart() — a shared lock
+        # would deadlock.  This one is a leaf: it never takes another.
+        self._pb_lock = threading.Lock()
+        self._partition_backlog: dict[int, int] = {}
+        # assignment map memo, keyed on the healthy-member name tuple — the
+        # ring is pure in membership, and recomputing it costs n_partitions
+        # x members hashes, which sits on the autoscaler's metrics poll path
+        self._ring_for: tuple[str, ...] | None = None
+        self._ring: dict[int, str] = {}
+
+    def add(self, sub: Subscription) -> None:
+        with self._lock:
+            if any(m.name == sub.name for m in self.members):
+                # the ring routes by member NAME: a duplicate would collapse
+                # both subscriptions onto one rendezvous identity and starve
+                # every copy but the first — refuse loudly instead
+                raise BusError(
+                    f"keyed group {self.name!r} on {self.subject!r} already "
+                    f"has a member named {sub.name!r}")
+            self._add_locked(sub)
+        sub._keyed_group = self
+
+    def _healthy_names(self) -> list[str]:
+        return [m.name for m in self.members if not m.closed]
+
+    def _ring_locked(self) -> dict[int, str]:
+        """The memoized partition->owner-name map for the current healthy
+        membership (pure in the name tuple, so a stale memo is impossible)."""
+        names = tuple(self._healthy_names())
+        if names != self._ring_for:
+            self._ring = ring_assignment(names, self.n_partitions)
+            self._ring_for = names
+        return self._ring
+
+    def _member_for_partition(self, p: int) -> Subscription | None:
+        owner = self._ring_locked().get(p)
+        if owner is None:
+            return None
+        for m in self.members:
+            if m.name == owner and not m.closed:
+                return m
+        return None  # pragma: no cover - owner drawn from healthy names
+
+    def _pick_locked(self, msg) -> tuple[Subscription | None, object]:
+        payload = msg.payload if msg is not None else {}
+        p = partition_of(payload.get(self.key), self.n_partitions)
+        member = self._member_for_partition(p)
+        if member is not None:
+            with self._pb_lock:
+                self._partition_backlog[p] = \
+                    self._partition_backlog.get(p, 0) + 1
+        return member, p
+
+    def _repick_locked(self, tag, item) -> tuple[Subscription | None, object]:
+        """Drained backlog keeps its partition: the item re-homes to the
+        partition's NEW owner (the rendezvous runner-up), never round-robin —
+        that is what keeps all of a key's messages on one member."""
+        if tag is None:  # pragma: no cover - keyed items are always tagged
+            return None, None
+        member = self._member_for_partition(tag)
+        if member is not None:
+            with self._pb_lock:
+                self._partition_backlog[tag] = \
+                    self._partition_backlog.get(tag, 0) + 1
+        return member, tag
+
+    def _unpick_tag_locked(self, tag) -> None:
+        if tag is not None:
+            self.note_consumed(tag)
+
+    def note_consumed(self, tag) -> None:
+        with self._pb_lock:
+            left = self._partition_backlog.get(tag, 0) - 1
+            if left > 0:
+                self._partition_backlog[tag] = left
+            else:
+                self._partition_backlog.pop(tag, None)
+
+    def _assignment_locked(self) -> dict[int, str]:
+        return dict(self._ring_locked())
+
+    def assignment(self) -> dict[int, str]:
+        """The live partition->member map (healthy members only)."""
+        with self._lock:
+            return self._assignment_locked()
+
+    def _snapshot_locked(self) -> dict:
+        snap = super()._snapshot_locked()
+        with self._pb_lock:
+            pb = dict(self._partition_backlog)
+        snap.update(
+            key=self.key,
+            n_partitions=self.n_partitions,
+            assignment=self._assignment_locked(),
+            partition_backlog=pb,
+        )
+        return snap
 
 
 # ---------------------------------------------------------------------------
@@ -386,101 +710,126 @@ class MessageBus:
 
     def _deliver(self, msg: Message, subs: list[Subscription],
                  groups: Sequence[QueueGroup] = ()) -> None:
-        """Fan out to every ungrouped subscription; round-robin each queue
-        group to exactly one healthy member (single delivery per group).
+        """Fan out to every ungrouped subscription; ask each queue group's
+        delivery policy (round-robin or keyed) for exactly one healthy
+        member (single delivery per group).
 
         A refused offer (the picked member was sealed by a racing departure
         between our pick and the enqueue) re-picks, so the message still
         lands on a survivor whenever one exists."""
         wire_blob = None
 
-        def offer(sub: Subscription) -> bool:
+        def offer(sub: Subscription, tag=None) -> bool:
             nonlocal wire_blob
             if sub.wire:
                 if wire_blob is None:
                     wire_blob = encode_message(msg)
-                return sub._offer(wire_blob)
-            return sub._offer(msg)
+                return sub._offer(wire_blob, tag)
+            return sub._offer(msg, tag)
 
         for sub in subs:
             if sub.group is None:
                 offer(sub)
         for group in groups:
             while True:
-                member = group.pick()
+                member, tag = group.pick(msg)
                 if member is None:
                     break
-                if offer(member):
+                if offer(member, tag):
                     break
-                group.unpick()
+                group.unpick(tag)
 
     def subscribe(self, subject: str, *, token: str, maxsize: int | None = None,
                   wire: bool = False, name: str = "",
-                  group: str | None = None) -> Subscription:
+                  group: str | None = None, key: str | None = None,
+                  partitions: int = KEYED_PARTITIONS) -> Subscription:
         """``group`` joins the named queue group on this subject: each message
-        goes to exactly one healthy member of each group (round-robin), while
-        ungrouped subscriptions keep broadcast semantics."""
+        goes to exactly one healthy member of each group, while ungrouped
+        subscriptions keep broadcast semantics.  ``key`` upgrades the group to
+        keyed delivery: the named payload field is hashed onto a partition
+        ring and every message for a key goes to the same member.  All
+        members of one group must agree on the policy (and key)."""
         self._authorize(token, subject)
+        if key is not None and group is None:
+            raise BusError("keyed delivery needs a group name")
+        if key is not None and partitions < 1:
+            raise BusError(f"keyed delivery needs partitions >= 1, "
+                           f"got {partitions}")
         with self._lock:
             if subject not in self._subjects:
                 raise UnknownSubject(subject)
             sub = Subscription(subject, maxsize or self._default_queue_size,
                                wire=wire, name=name, group=group)
-            self._subs[subject].append(sub)
             if group is not None:
-                g = self._groups[subject].setdefault(
-                    group, QueueGroup(subject, group))
+                g = self._groups[subject].get(group)
+                if g is None:
+                    g = (KeyedGroup(subject, group, key, partitions)
+                         if key is not None else QueueGroup(subject, group))
+                    self._groups[subject][group] = g
+                elif key is not None and (g.policy != "keyed"
+                                          or g.key != key):  # type: ignore[attr-defined]
+                    raise BusError(
+                        f"group {group!r} on {subject!r} is "
+                        f"{g.policy}-delivery"
+                        + (f" keyed on {g.key!r}" if g.policy == "keyed"
+                           else "")
+                        + f"; cannot join keyed on {key!r}")
+                elif key is not None and partitions != g.n_partitions:  # type: ignore[attr-defined]
+                    raise BusError(
+                        f"group {group!r} on {subject!r} has "
+                        f"{g.n_partitions} partitions; cannot join with "  # type: ignore[attr-defined]
+                        f"partitions={partitions} (the ring size is fixed "
+                        f"at group creation)")
+                elif key is None and g.policy == "keyed":
+                    raise BusError(
+                        f"group {group!r} on {subject!r} is keyed on "
+                        f"{g.key!r}; members must subscribe with key=")  # type: ignore[attr-defined]
                 g.add(sub)
+            self._subs[subject].append(sub)
             return sub
 
     def unsubscribe(self, sub: Subscription) -> None:
-        grouped = False
-        survivors: QueueGroup | None = None
+        g: QueueGroup | None = None
         with self._lock:
             subs = self._subs.get(sub.subject)
             if subs and sub in subs:
                 subs.remove(sub)
             if sub.group is not None:
-                groups = self._groups.get(sub.subject, {})
-                g = groups.get(sub.group)
-                if g is not None:
-                    grouped = True
-                    if g.remove(sub):
-                        del groups[sub.group]
-                    else:
-                        survivors = g
-        if grouped:
+                g = self._groups.get(sub.subject, {}).get(sub.group)
+        if g is not None:
             # single delivery: the departing member's queued messages are the
-            # ONLY copies — hand them to the survivors.  Seal first: an
-            # in-flight publish that picked this member just before it left
-            # the rotation either enqueued before the seal (drained below) or
-            # is refused-and-counted after it; offers and the seal serialize
-            # on the mailbox lock, so nothing slips in post-drain.
-            sub._seal()
-            for item in sub._drain_pending():
-                while True:
-                    member = survivors.pick() if survivors is not None else None
-                    if member is None:
-                        # last member out (stream teardown / upgrade window):
-                        # the share is lost — counted on the mailbox AND on
-                        # the subject, so the loss outlives the subscription
-                        # in stats() instead of vanishing with it
-                        sub.dropped += 1
-                        with self._lock:
-                            if sub.subject in self._lost:
-                                self._lost[sub.subject] += 1
-                        break
-                    is_wire = isinstance(item, (bytes, bytearray))
-                    if member.wire == is_wire:
-                        ok = member._offer(item)
-                    elif member.wire:
-                        ok = member._offer(encode_message(item))
-                    else:
-                        ok = member._offer(decode_message(item))
-                    if ok:
-                        survivors.note_reroute()
-                        break
-                    survivors.unpick()
+            # ONLY copies — the group's depart() re-homes them to survivors
+            # (round-robin for plain groups, per-partition for keyed ones)
+            # atomically with the membership change, so rerouted backlog
+            # always precedes newer messages on the new owner.
+            lost_count = [0]
+
+            def reoffer(member: Subscription, item, tag) -> bool:
+                is_wire = isinstance(item, (bytes, bytearray))
+                if member.wire == is_wire:
+                    return member._offer(item, tag)
+                if member.wire:
+                    return member._offer(encode_message(item), tag)
+                return member._offer(decode_message(item), tag)
+
+            def lost(item) -> None:
+                # last member out (stream teardown / upgrade window): the
+                # share is lost — counted on the mailbox AND (below, outside
+                # the group lock) on the subject, so the loss outlives the
+                # subscription in stats() instead of vanishing with it
+                sub.dropped += 1
+                lost_count[0] += 1
+
+            emptied = g.depart(sub, reoffer, lost)
+            with self._lock:
+                if lost_count[0] and sub.subject in self._lost:
+                    self._lost[sub.subject] += lost_count[0]
+                if emptied:
+                    groups = self._groups.get(sub.subject, {})
+                    # re-check under the bus lock: a new member may have
+                    # joined between depart() and here
+                    if groups.get(sub.group) is g and g.is_empty():
+                        del groups[sub.group]
         sub.close()
 
     # -- introspection --------------------------------------------------------
@@ -508,6 +857,14 @@ class MessageBus:
                 }
                 for subject in self._subjects
             }
+
+    def group_info(self, subject: str, group: str) -> dict | None:
+        """Snapshot of one queue group (delivery policy, members, delivered,
+        backlog-as-lag; plus key/assignment/partition_backlog when keyed) —
+        the sidecar surfaces this through its REST metrics."""
+        with self._lock:
+            g = self._groups.get(subject, {}).get(group)
+        return g.snapshot() if g is not None else None
 
     def backlog(self, subject: str) -> int:
         """Deepest consumer lag on ``subject``: max over ungrouped mailbox

@@ -17,6 +17,12 @@ but verbose: seven parallel ``*Spec`` dataclasses and imperative
 * **eager schema checking** — every edge is checked at composition time
   (consumer's declared input schema must *accept* the producer's schema), so
   a type error surfaces at the line that wires the streams, not at deploy.
+* **keyed streams** — ``.key_by(field)`` partitions the stream by a payload
+  field: downstream stages compile to keyed-delivery streams (same key ->
+  same instance, in order), per-key stateful combinators (``.reduce``,
+  ``.window(..., per_key=True)``) keep their state in the stream's platform
+  database, and ``.scaled()`` therefore scales *stateful* stages too —
+  partition rebalances hand state over instead of losing it.
 * **device placement + chain fusion** — ``.map(fn, device=True)`` /
   ``.filter(pred, device=True)`` declare pure array stages; at :meth:`App.build`
   the chain-fusion pass (:mod:`~.fusion`) collapses maximal linear DEVICE
@@ -67,6 +73,7 @@ from .entities import (ActuatorSpec, AnalyticsUnitSpec, DatabaseSpec,
 from .fusion import fuse_application
 from .operator import Operator
 from .schema import ConfigSchema, StreamSchema
+from .state import KeyedStore
 
 
 class DSLError(AppValidationError):
@@ -177,6 +184,22 @@ def _check_edge(consumer: str, declared: Sequence[StreamSchema], index: int,
             f"the declared input schema {sorted(declared[index].fields)}")
 
 
+def _shared_key(handles: Sequence["StreamHandle"]) -> str | None:
+    """The common partition key of a set of input handles (None if they are
+    unkeyed or disagree — a multi-input stage cannot partition two ways)."""
+    keys = {h.key for h in handles}
+    return keys.pop() if len(keys) == 1 else None
+
+
+def _key_through(key: str | None, schema: StreamSchema) -> str | None:
+    """The key survives a stage only while its output schema still (or may
+    still) carry the field — a typed schema without it ends the keyed chain
+    explicitly instead of silently hashing a missing field."""
+    if key is None:
+        return None
+    return key if (not schema.fields or key in schema.fields) else None
+
+
 def _entity_name(ref: Any) -> str:
     """Resolve a decorated function (or plain string) to its entity name."""
     if isinstance(ref, str):
@@ -198,15 +221,41 @@ class StreamHandle:
 
     Handles are cheap, immutable descriptors: every combinator appends specs
     to the owning app and returns a *new* handle for the derived stream.
+    ``key`` is the partition field declared by :meth:`key_by` (None =
+    unkeyed): combinators on a keyed handle compile to keyed-delivery
+    streams, and the per-key stateful combinators (:meth:`reduce`,
+    ``window(per_key=True)``) require it.
     """
 
-    def __init__(self, app: "App", name: str, schema: StreamSchema):
+    def __init__(self, app: "App", name: str, schema: StreamSchema,
+                 key: str | None = None):
         self.app = app
         self.name = name
         self.schema = schema
+        self.key = key
 
     def __repr__(self) -> str:  # pragma: no cover - debug aid
         return f"StreamHandle({self.name!r})"
+
+    # -- keyed streams --------------------------------------------------------
+    def key_by(self, field: str) -> "StreamHandle":
+        """Declare ``field`` as this stream's partition key (§3 scaling for
+        *stateful* consumers).
+
+        Downstream combinators compile to ``delivery="keyed"`` streams: the
+        platform hashes ``field`` onto a stable partition ring so every
+        message for a key is processed by the same instance, in order — which
+        is what makes scaled stateful stages (``.reduce``,
+        ``.window(per_key=True)``, stateful ``.via`` AUs) safe.  Scale
+        events re-home whole partitions to survivors (ordered hand-off), and
+        per-key state lives in the stream's shared platform database, so a
+        rebalance finds its state instead of losing it.
+        """
+        if self.schema.fields and field not in self.schema.fields:
+            raise DSLError(
+                f"key_by({field!r}): stream {self.name!r} has no such field; "
+                f"schema fields are {sorted(self.schema.fields)}")
+        return StreamHandle(self.app, self.name, self.schema, key=field)
 
     # -- routing through declared AUs ---------------------------------------
     def via(self, au: Any, *, name: str | None = None,
@@ -240,7 +289,8 @@ class StreamHandle:
         self.app._taps.add(self.name)
         return self
 
-    def scaled(self, *, delivery: str = "group", instances: int | None = None,
+    def scaled(self, *, delivery: str | None = None,
+               instances: int | None = None,
                max_instances: int | None = None) -> "StreamHandle":
         """Scaling & delivery escape hatch for this stream's instances.
 
@@ -249,19 +299,26 @@ class StreamHandle:
         subject and each message reaches exactly one of them.
         ``delivery="broadcast"`` restores replica semantics — every instance
         receives every message (redundant/speculative execution).
+        ``delivery=None`` keeps the stream's current policy — in particular
+        a keyed stream (built downstream of :meth:`key_by`) stays keyed.
 
         ``instances`` fixes the pool size (the operator will not autoscale
         it); ``max_instances`` instead lets the operator autoscale a
         combinator stage between 1 and the given ceiling — group delivery
         makes that safe for stateless ``.map``/``.filter`` stages, which were
         pinned single-instance before queue groups existed.  Stateful
+        combinators scale too **when keyed**: under keyed delivery every key
+        sticks to one instance and per-key state lives in the stream's
+        platform database, so ``.reduce`` / ``.window(per_key=True)`` pools
+        stay exactly-once per key with no state races.  Unkeyed stateful
         combinators (``.window``, ``fuse``) keep their per-instance buffers
         and stay single-instance, as do broadcast combinator stages (scaling
         those would duplicate messages downstream).
         """
-        if delivery not in ("group", "broadcast"):
+        if delivery is not None and delivery not in ("group", "broadcast"):
             raise DSLError(f"delivery must be 'group' or 'broadcast', "
-                           f"got {delivery!r}")
+                           f"got {delivery!r} (keyed delivery is declared "
+                           f"with .key_by(field), not .scaled())")
         if instances is not None and instances < 1:
             raise DSLError(f"instances must be >= 1, got {instances}")
         if max_instances is not None and max_instances < 1:
@@ -275,6 +332,13 @@ class StreamHandle:
                 f"and external streams are scaled by their owning app")
         spec = self.app._streams[index]
         au = self.app._aus[spec.analytics_unit]
+        keyed = spec.delivery == "keyed"
+        if keyed and delivery is not None:
+            raise DSLError(
+                f"stream {self.name!r} is keyed on {spec.key!r}; "
+                f".scaled(delivery={delivery!r}) would discard the key "
+                f"policy — re-compose without .key_by() instead")
+        resolved = delivery if delivery is not None else spec.delivery
         # guards judge the pool configuration this call RESULTS in, not just
         # its own arguments — a prior .scaled() may already have fixed a pool
         # size or lifted the combinator's autoscale envelope
@@ -288,11 +352,13 @@ class StreamHandle:
                       au.max_instances if au.combinator else 1)
         pool = fixed if fixed is not None else ceiling
         if au.combinator and pool > 1:
-            if au.combinator not in ("map", "filter"):
+            if au.combinator not in ("map", "filter") and not keyed:
                 raise DSLError(
                     f"stream {self.name!r}: a .{au.combinator} stage keeps "
-                    f"per-instance state and cannot scale past one instance")
-            if delivery == "broadcast":
+                    f"per-instance state and cannot scale past one "
+                    f"instance; partition it with .key_by(field) to scale "
+                    f"stateful stages")
+            if resolved == "broadcast":
                 raise DSLError(
                     f"stream {self.name!r}: broadcast replicas of a "
                     f".{au.combinator} stage would emit every message "
@@ -309,7 +375,7 @@ class StreamHandle:
                 f"(@app.analytics_unit(max_instances=...)); .scaled() only "
                 f"fixes the pool size via instances=")
         self.app._streams[index] = dataclasses.replace(
-            spec, delivery=delivery, fixed_instances=fixed)
+            spec, delivery=resolved, fixed_instances=fixed)
         return self
 
     # -- combinators (synthetic AUs) ----------------------------------------
@@ -336,7 +402,41 @@ class StreamHandle:
             (self,), factory, kind="map", name=name,
             emits=_infer_output_schema(fn, emits),
             placement=Placement.DEVICE if device else Placement.HOST,
-            pure_fn=fn if device else None)
+            pure_fn=fn if device else None, key=self.key)
+
+    def reduce(self, fn: Callable[[Any, dict], Any], *, init: Any = None,
+               name: str | None = None,
+               emits: StreamSchema | None = None) -> "StreamHandle":
+        """Per-key running reduction: for each payload emit
+        ``{<key_field>: k, "value": fn(acc, payload)}`` where ``acc`` is the
+        key's previous accumulator (``init`` the first time).
+
+        Requires :meth:`key_by` upstream — the accumulator lives in the
+        stream's platform database (:class:`~.state.KeyedStore`), not in the
+        instance, so the stage scales with ``.scaled()``: keyed delivery
+        pins each key to one instance (exactly-once, in-order folds) and a
+        scale event re-homes a partition's keys to an instance that reads
+        the same store — no state is lost or forked.
+        """
+        if self.key is None:
+            raise DSLError(
+                f"stream {self.name!r}: .reduce() is a per-key combinator; "
+                f"declare the partition field with .key_by(field) first")
+        field = self.key
+
+        def factory(ctx):
+            store = KeyedStore(ctx.db, "reduce")
+
+            def process(stream, payload):
+                acc = fn(store.get(payload.get(field), init), payload)
+                store.put(payload.get(field), acc)
+                return {field: payload.get(field), "value": acc}
+            return process
+        factory.__name__ = getattr(fn, "__name__", "reduce")
+        out_schema = emits or StreamSchema.untyped()
+        return self.app._synthetic_stream(
+            (self,), factory, kind="reduce", name=name, emits=out_schema,
+            stateful=True, key=field)
 
     def filter(self, pred: Callable[[dict], bool], *,
                name: str | None = None, device: bool = False) -> "StreamHandle":
@@ -353,14 +453,47 @@ class StreamHandle:
         return self.app._synthetic_stream(
             (self,), factory, kind="filter", name=name, emits=self.schema,
             placement=Placement.DEVICE if device else Placement.HOST,
-            pure_fn=pred if device else None)
+            pure_fn=pred if device else None, key=self.key)
 
     def window(self, n: int, *, name: str | None = None,
-               emits: StreamSchema | None = None) -> "StreamHandle":
+               emits: StreamSchema | None = None,
+               per_key: bool = False) -> "StreamHandle":
         """Tumbling count window: every ``n`` payloads emit
-        ``{"window": [...], "count": n}``."""
+        ``{"window": [...], "count": n}``.
+
+        ``per_key=True`` windows each key separately (requires
+        :meth:`key_by` upstream) and adds the key field to the emitted
+        payload.  The per-key buffers live in the stream's platform database
+        (:class:`~.state.KeyedStore`) rather than an instance-local list, so
+        the stage scales with ``.scaled()`` and survives partition
+        rebalances without dropping half-filled windows.
+        """
         if n < 1:
             raise DSLError(f"window size must be >= 1, got {n}")
+        if per_key:
+            if self.key is None:
+                raise DSLError(
+                    f"stream {self.name!r}: window(per_key=True) needs the "
+                    f"partition field; declare it with .key_by(field) first")
+            field = self.key
+
+            def keyed_factory(ctx):
+                store = KeyedStore(ctx.db, f"window{n}")
+
+                def process(stream, payload):
+                    k = payload.get(field)
+                    buf = store.get(k, []) + [payload]
+                    if len(buf) < n:
+                        store.put(k, buf)
+                        return None
+                    store.put(k, [])
+                    return {field: k, "window": buf, "count": len(buf)}
+                return process
+            keyed_factory.__name__ = f"window{n}_by_{field}"
+            return self.app._synthetic_stream(
+                (self,), keyed_factory, kind="window", name=name,
+                emits=emits or StreamSchema.untyped(),
+                stateful=True, key=field)
 
         def factory(ctx):
             buf: list[dict] = []
@@ -622,18 +755,29 @@ class App:
         spec.config_schema.validate(dict(config or {}))
         sname = name or self._auto_name(inputs[0].name, aname)
         self._claim_stream_name(sname)
+        key = _shared_key(inputs)
         self._streams.append(StreamSpec(
             name=sname, analytics_unit=aname,
             inputs=tuple(h.name for h in inputs),
-            config=dict(config or {}), fixed_instances=fixed_instances))
-        return StreamHandle(self, sname, spec.output_schema)
+            config=dict(config or {}), fixed_instances=fixed_instances,
+            delivery="keyed" if key else "group", key=key))
+        return StreamHandle(self, sname, spec.output_schema,
+                            key=_key_through(key, spec.output_schema))
 
     def _synthetic_stream(self, inputs: Sequence[StreamHandle],
                           factory: Callable, *, kind: str, name: str | None,
                           emits: StreamSchema,
                           placement: Placement = Placement.HOST,
-                          pure_fn: Callable | None = None) -> StreamHandle:
-        """Wrap a combinator lambda into a synthetic single-instance AU."""
+                          pure_fn: Callable | None = None,
+                          stateful: bool = False,
+                          key: str | None = None) -> StreamHandle:
+        """Wrap a combinator lambda into a synthetic single-instance AU.
+
+        ``key`` makes the combinator's stream keyed-delivery (set by
+        combinators downstream of :meth:`StreamHandle.key_by`); ``stateful``
+        marks per-key stateful combinators so the operator attaches the
+        stream's shared platform database (their :class:`~.state.KeyedStore`
+        home)."""
         sname = name or self._auto_name(inputs[0].name, kind)
         self._claim_stream_name(sname)
         au_name = f"{sname}.{kind}"
@@ -642,17 +786,21 @@ class App:
             input_schemas=tuple(h.schema for h in inputs),
             output_schema=emits,
             # single-instance by default: combinators are often stateful
-            # closures (window/fuse buffers).  Stateless map/filter stages can
-            # opt into a queue-group worker pool via .scaled(), which lifts
-            # this envelope — single delivery keeps exactly-once per message.
+            # closures (window/fuse buffers).  Stateless map/filter stages —
+            # and KEYED stateful ones, whose state is per-key in the platform
+            # database — can opt into a worker pool via .scaled(), which
+            # lifts this envelope; single/keyed delivery keeps exactly-once.
             min_instances=1, max_instances=1,
-            placement=placement, pure_fn=pure_fn, combinator=kind)
+            placement=placement, pure_fn=pure_fn, combinator=kind,
+            stateful=stateful)
         self._register(self._aus, au, "analytics unit")
         self._synthetic_aus += 1
         self._streams.append(StreamSpec(
             name=sname, analytics_unit=au_name,
-            inputs=tuple(h.name for h in inputs), fixed_instances=1))
-        return StreamHandle(self, sname, emits)
+            inputs=tuple(h.name for h in inputs), fixed_instances=1,
+            delivery="keyed" if key else "group", key=key))
+        return StreamHandle(self, sname, emits,
+                            key=_key_through(key, emits))
 
     def _auto_name(self, base: str, kind: str) -> str:
         i = 0

@@ -137,6 +137,11 @@ class StreamSpec:
       scaling N× adds N× capacity).  Other consumer streams and external
       subscribers are unaffected: broadcast across *different* groups is
       preserved, so §3 stream reuse still sees every message.
+    * ``"keyed"`` — like ``"group"``, but the payload field named by ``key``
+      is hashed onto a stable partition ring: every message for a key lands
+      on the SAME instance (per-key order + per-key state locality), which
+      is what lets *stateful* streams scale.  Requires ``key``; the field
+      must exist in every typed input schema.
     * ``"broadcast"`` — every instance holds its own ungrouped subscription
       and receives every message (pre-queue-group replica semantics; the
       escape hatch for redundant/speculative execution).
@@ -147,7 +152,8 @@ class StreamSpec:
     inputs: Sequence[str] = ()
     config: Mapping[str, Any] = dataclasses.field(default_factory=dict)
     fixed_instances: int | None = None   # None => operator auto-scales
-    delivery: str = "group"              # "group" | "broadcast"
+    delivery: str = "group"              # "group" | "keyed" | "broadcast"
+    key: str | None = None               # hashed payload field (keyed only)
 
     kind = EntityKind.STREAM
 

@@ -148,9 +148,24 @@ def plan_segments(app: Application,
         if consumers.get(upstream.name, 0) != 1 or upstream.name in taps:
             return None  # multi-subscriber tap / promised bus subject
         nxt = next((s for s in app.streams if upstream.name in s.inputs), None)
-        if nxt is not None and _fusible(nxt, aus):
-            return nxt
-        return None
+        if nxt is None or not _fusible(nxt, aus):
+            return None
+        if nxt.delivery == "keyed" and not (upstream.delivery == "keyed"
+                                            and upstream.key == nxt.key):
+            # a keyed consumer re-partitions on ITS input.  If the chain is
+            # uniformly keyed on the SAME field (the DSL propagates .key_by
+            # through stateless stages), the fused unit inherits the entry's
+            # key policy and hashes once at entry — equivalent to per-stage
+            # hashing as long as interior stages don't rewrite the key
+            # field's VALUE (rewriting it while keeping the field in the
+            # schema re-partitions mid-chain in the unfused graph; keep such
+            # a stage out of the device chain or .tap() it).  A different
+            # key field (or a keyed consumer of an unkeyed stage) is a
+            # genuine re-partition point: the interior stream must stay a
+            # bus subject (segment barrier).  Pairwise same-key induction
+            # keeps every fused segment uniformly keyed back to its entry.
+            return None
+        return nxt
 
     segments: list[list[StreamSpec]] = []
     in_segment: set[str] = set()
@@ -346,12 +361,15 @@ def fuse_application(app: Application, *,
         # consume the segment's input subject (interior hops have no bus
         # delivery at all).  Under "group" every fused-unit instance is one
         # member of the exit-named queue group, so a scaled fused segment is
-        # a worker pool exactly like a scaled host stream.
+        # a worker pool exactly like a scaled host stream; a keyed entry's
+        # key policy is inherited wholesale (each key sticks to one fused
+        # instance).  Mid-chain keyed streams never get here — they are
+        # segment barriers in plan_segments.
         fused_streams.append(StreamSpec(
             name=exit_.name, analytics_unit=name, inputs=tuple(entry.inputs),
             fixed_instances=1 if any(s.fixed_instances == 1 for s in segment)
             else None,
-            delivery=entry.delivery))
+            delivery=entry.delivery, key=entry.key))
         folded.update(s.name for s in segment)
 
     streams = [s for s in app.streams if s.name not in folded] + fused_streams

@@ -268,14 +268,32 @@ class Operator:
                     f"stream {spec.name!r}: analytics unit "
                     f"{spec.analytics_unit!r} is not available")
             au = self._aus[spec.analytics_unit]
-            if spec.delivery not in ("group", "broadcast"):
+            if spec.delivery not in ("group", "keyed", "broadcast"):
                 raise OperatorError(
-                    f"stream {spec.name!r}: delivery must be 'group' or "
-                    f"'broadcast', got {spec.delivery!r}")
+                    f"stream {spec.name!r}: delivery must be 'group', "
+                    f"'keyed' or 'broadcast', got {spec.delivery!r}")
+            if spec.delivery == "keyed" and not spec.key:
+                raise OperatorError(
+                    f"stream {spec.name!r}: keyed delivery needs key= "
+                    f"(the payload field to hash)")
+            if spec.key and spec.delivery != "keyed":
+                raise OperatorError(
+                    f"stream {spec.name!r}: key={spec.key!r} requires "
+                    f"delivery='keyed', got {spec.delivery!r}")
             missing = [s for s in spec.inputs if s not in self._stream_names()]
             if missing:
                 raise CoherenceError(
                     f"stream {spec.name!r}: input streams not registered: {missing}")
+            if spec.delivery == "keyed":
+                # the hashed field must be a declared field of every typed
+                # input — a missing key would silently pile every message
+                # onto one partition
+                for inp in spec.inputs:
+                    schema = self.bus.schema_of(inp)
+                    if schema.fields and spec.key not in schema.fields:
+                        raise CoherenceError(
+                            f"stream {spec.name!r}: key field {spec.key!r} "
+                            f"is not in the schema of input {inp!r}")
             resolved = au.config_schema.validate(spec.config)
             # input schema compatibility: each declared input schema must accept
             # the corresponding registered stream's schema
@@ -303,16 +321,20 @@ class Operator:
             db_name = f"au-{spec.name}"
             db = (self.store.get(db_name) if self.store.exists(db_name)
                   else self.store.create(db_name))
-        # group delivery: every instance of this stream (fused units included
-        # — one member per instance) joins the queue group named after the
-        # stream, so scaled instances form a worker pool on their inputs;
-        # other streams consuming the same inputs use their own group names
-        # and still see every message (§3 reuse broadcast across groups)
+        # group/keyed delivery: every instance of this stream (fused units
+        # included — one member per instance) joins the queue group named
+        # after the stream, so scaled instances form a worker pool on their
+        # inputs; under "keyed" the group hashes spec.key so each key sticks
+        # to one instance (all instances share the stream's platform
+        # database, so a rebalanced partition finds its per-key state).
+        # Other streams consuming the same inputs use their own group names
+        # and still see every message (§3 reuse broadcast across groups).
         return self.executor.start_instance(
             entity_kind="analytics_unit", entity_name=au.name, owner=spec.name,
             logic=au.logic, config=dict(resolved), inputs=tuple(spec.inputs),
             output=spec.name, db=db or self._db_for(resolved),
-            group=spec.name if spec.delivery == "group" else None)
+            group=spec.name if spec.delivery in ("group", "keyed") else None,
+            key=spec.key if spec.delivery == "keyed" else None)
 
     def register_gadget(self, spec: GadgetSpec) -> None:
         with self._lock:

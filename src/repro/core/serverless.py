@@ -16,7 +16,7 @@ import itertools
 import threading
 import time
 import traceback
-from typing import Any, Callable, Sequence
+from typing import Any, Callable, Mapping, Sequence
 
 from .bus import MessageBus
 from .sdk import DataX, LogicContext, is_sdk_style
@@ -66,14 +66,18 @@ class Executor:
                        inputs: Sequence[str] = (), output: str | None = None,
                        db: Database | None = None, node: str | None = None,
                        queue_size: int = 256,
-                       group: str | None = None) -> InstanceHandle:
+                       group: str | None = None,
+                       key: str | None = None) -> InstanceHandle:
         """``group`` puts this instance's input subscriptions into the named
         bus queue group: all instances started with the same group form a
-        single-delivery worker pool (scaling adds capacity, not copies)."""
+        single-delivery worker pool (scaling adds capacity, not copies).
+        ``key`` upgrades the group to keyed delivery — the named payload
+        field is hashed so every message for a key reaches this pool's same
+        member (stateful workers scale without splitting a key's state)."""
         iid = f"{owner}/{entity_name}-{next(self._ids):04d}"
         stop_event = threading.Event()
         sidecar = Sidecar(iid, self._bus, inputs=inputs, output=output,
-                          queue_size=queue_size, group=group)
+                          queue_size=queue_size, group=group, key=key)
 
         handle = InstanceHandle(
             instance_id=iid, entity_kind=entity_kind, entity_name=entity_name,
@@ -241,6 +245,14 @@ class AutoScaler:
     conservative-equivalent at N=1 and stricter above).  Nonzero mailbox drops
     since the last decision are a hard scale-up signal regardless of backlog:
     drops mean the pool is already losing data, not merely lagging.
+
+    Keyed pools add a **per-partition** signal: hashing concentrates hot keys
+    on single members, so the aggregate can look healthy while one partition
+    (and therefore one member) is drowning.  The sidecar metrics carry the
+    keyed groups' exact per-partition backlogs; any partition above
+    ``backlog_high`` scales the pool up — more members re-spread the
+    remaining partitions off the hot member (a single key can never split,
+    but its neighbours can move away).
     """
 
     def __init__(self, policy: ScalePolicy | None = None):
@@ -249,6 +261,20 @@ class AutoScaler:
         # per-instance drop watermarks: a replaced instance must not lower
         # the pool total and mask fresh drops on the survivors
         self._last_drops: dict[str, dict[str, int]] = {}
+
+    @staticmethod
+    def _hot_partition_backlog(metrics: Sequence[Mapping]) -> int:
+        """Deepest per-partition backlog across the pool's keyed groups
+        (0 when the pool is not keyed)."""
+        worst = 0
+        for m in metrics:
+            if not m.get("key"):
+                continue
+            for snap in (m.get("groups") or {}).values():
+                pb = snap.get("partition_backlog") or {}
+                if pb:
+                    worst = max(worst, max(pb.values()))
+        return worst
 
     def decide(self, owner: str, handles: Sequence[InstanceHandle],
                min_instances: int, max_instances: int) -> int:
@@ -262,6 +288,7 @@ class AutoScaler:
             return cur
         metrics = [h.sidecar.metrics() for h in handles]
         total_backlog = sum(m["backlog"] for m in metrics)
+        hot_partition = self._hot_partition_backlog(metrics)
         prev_drops = self._last_drops.get(owner, {})
         drops = {m["instance"]: m["dropped"] for m in metrics}
         new_drops = any(d > prev_drops.get(iid, 0) for iid, d in drops.items())
@@ -269,7 +296,8 @@ class AutoScaler:
         all_idle = all(m["idle_s"] > self.policy.idle_s for m in metrics)
 
         desired = cur
-        if (total_backlog > self.policy.backlog_high * cur or new_drops) \
+        if (total_backlog > self.policy.backlog_high * cur or new_drops
+                or hot_partition > self.policy.backlog_high) \
                 and cur < max_instances:
             desired = min(max_instances, cur * 2)
         elif total_backlog <= self.policy.backlog_low and all_idle \

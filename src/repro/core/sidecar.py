@@ -27,19 +27,22 @@ class Sidecar:
     def __init__(self, instance_id: str, bus: MessageBus, *,
                  inputs: Sequence[str] = (), output: str | None = None,
                  token: str | None = None, queue_size: int = 256,
-                 wire: bool = False, group: str | None = None):
+                 wire: bool = False, group: str | None = None,
+                 key: str | None = None):
         self.instance_id = instance_id
         self._bus = bus
         self._output = output
         self.group = group
+        self.key = key
         self._token = token or bus.issue_token(
             instance_id, list(inputs) + ([output] if output else []))
         # group: scaled instances of one entity join the same queue group on
         # every input subject — each message reaches exactly one of them (a
-        # worker pool); group=None keeps per-instance broadcast replicas
+        # worker pool); key upgrades the group to keyed delivery (each key
+        # sticks to one member); group=None keeps broadcast replicas
         self._subs: list[Subscription] = [
             bus.subscribe(s, token=self._token, maxsize=queue_size, wire=wire,
-                          name=f"{instance_id}:{s}", group=group)
+                          name=f"{instance_id}:{s}", group=group, key=key)
             for s in inputs
         ]
         self._rr = 0  # round-robin cursor over input subscriptions
@@ -111,20 +114,48 @@ class Sidecar:
             self.last_activity = time.monotonic()
 
     # -- the REST-analog metrics endpoint (paper: sidecar exposes REST API) ---
+    def _group_metrics(self) -> dict:
+        """Per-input queue-group view: delivery lag (delivered vs drained —
+        i.e. handed to the pool but not yet popped), reroutes, and for keyed
+        groups the live partition assignment map + per-partition backlog.
+        This is how group/partition state reaches the REST surface instead
+        of living only in ``bus.stats()``."""
+        out = {}
+        for s in self._subs:
+            snap = self._bus.group_info(s.subject, self.group)
+            if snap is None:
+                continue
+            info = {
+                "policy": snap["policy"],
+                "members": len(snap["members"]),
+                "delivered": snap["delivered"],
+                "lag": snap["backlog"],       # delivered - drained
+                "rerouted": snap["rerouted"],
+            }
+            if snap["policy"] == "keyed":
+                info.update(key=snap["key"],
+                            assignment=snap["assignment"],
+                            partition_backlog=snap["partition_backlog"])
+            out[s.subject] = info
+        return out
+
     def metrics(self) -> dict:
         received = sum(s.received for s in self._subs)
         dropped = sum(s.dropped for s in self._subs)
         backlog = sum(s.qsize() for s in self._subs)
+        groups = self._group_metrics() if self.group else {}
         with self._lock:
             return {
                 "instance": self.instance_id,
                 "group": self.group,
+                "key": self.key,
                 "received": received,
                 "dropped": dropped,
                 "published": self.published,
                 "processed": self.processed,
                 "errors": self.errors,
                 "backlog": backlog,
+                "groups": groups,
                 "latency_ewma_s": self.latency_ewma_s,
                 "warmup_s": self.warmup_s,
                 "uptime_s": time.monotonic() - self.started_at,

@@ -160,6 +160,44 @@ class Database:
             self._tables[t.name] = t
 
 
+class KeyedStore:
+    """Per-key state over a platform table — the keyed-combinator backbone.
+
+    Keyed stateful combinators (``.window(per_key=True)``, keyed
+    ``.reduce``) keep their state here instead of in instance-local
+    closures: every instance of a keyed stream shares the stream's platform
+    database, so when a scale event moves a partition to another instance,
+    the new owner reads exactly the state the old owner wrote — rebalances
+    hand state over instead of losing it.  Keyed delivery guarantees a key
+    is only ever processed by one instance at a time, so per-key get/put
+    needs no cross-instance coordination.
+
+    ``db=None`` falls back to a private in-memory database (unit tests /
+    factories exercised outside an operator); state then lives only as long
+    as the process, exactly like the old closure dicts.
+    """
+
+    def __init__(self, db: Database | None, name: str):
+        self._db = db or Database(f"local-{name}")
+        self._table = self._db.ensure_table(name, ["value"])
+
+    def get(self, key: Any, default: Any = None) -> Any:
+        row = self._table.get(key)
+        return row["value"] if row is not None else default
+
+    def put(self, key: Any, value: Any) -> None:
+        self._table.put(key, {"value": value})
+
+    def delete(self, key: Any) -> None:
+        self._table.delete(key)
+
+    def keys(self) -> list:
+        return [k for k, _ in self._table.scan()]
+
+    def __len__(self) -> int:
+        return len(self._table)
+
+
 class StateStore:
     """Platform-level registry of databases; the Operator installs them."""
 

@@ -49,7 +49,13 @@ class TrainerConfig:
 
 class Trainer:
     def __init__(self, cfg: ModelConfig, run: RunConfig, tcfg: TrainerConfig,
-                 mesh=None, operator: Operator | None = None):
+                 mesh=None, operator: Operator | None = None,
+                 deploy_pipeline: bool = True, batch_stream: str = "batches"):
+        """``deploy_pipeline=False`` skips the built-in v1 spec-style data
+        pipeline: the caller deploys its own (e.g. a v2 fluent-DSL app, see
+        examples/train_lm.py) onto ``operator`` and the Trainer just
+        subscribes to ``batch_stream`` — the paper's stream-reuse claim
+        applied to the training loop itself."""
         self.cfg = cfg
         self.run = run
         self.tcfg = tcfg
@@ -61,7 +67,11 @@ class Trainer:
         self.ckpt = CheckpointManager(tcfg.workdir + "/ckpt")
         self.metrics_log: list[dict] = []
         self.step = 0
-        self._deploy_pipeline()
+        if deploy_pipeline:
+            self._deploy_pipeline()
+        else:
+            self._batch_sub = self.op.subscribe(batch_stream, name="trainer",
+                                                maxsize=4)
         self._build_device_au()
 
     # ------------------------------------------------------------- pipeline

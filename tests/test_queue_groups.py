@@ -148,6 +148,67 @@ def test_stats_surface_membership_rotation_and_drops(bus):
     assert st["dropped"] == 6                    # subject-level aggregate
 
 
+def test_pick_rotation_no_skew_after_member_removal(bus):
+    """Regression (PR 4): removing a member must never skew the rotation.
+
+    The cursor tracks the next member's *identity* (index arithmetic around
+    a shrinking list is how the survivor after a departure gets
+    double-picked).  Exhaustively: for every pool size, cursor position and
+    removal index, the picks immediately after a removal must (a) start at
+    the removed member's successor when the cursor pointed at the victim,
+    and (b) cover every survivor exactly once per rotation — no survivor
+    double-picked, none starved."""
+    from repro.core import QueueGroup, Subscription
+
+    for n in (2, 3, 4, 5):
+        for advance in range(n):
+            for kill in range(n):
+                g = QueueGroup("s", "g")
+                subs = [Subscription("s", 8, False, name=f"m{i}")
+                        for i in range(n)]
+                for s in subs:
+                    g.add(s)
+                for _ in range(advance):
+                    g.pick()
+                victim = subs[kill]
+                cursor_was_victim = g.snapshot()["members"][
+                    g.snapshot()["rr"]] == victim.name
+                g.remove(victim)
+                survivors = [s for s in subs if s is not victim]
+                if not survivors:
+                    continue
+                window = [g.pick()[0] for _ in range(len(survivors))]
+                case = (n, advance, kill)
+                assert sorted(m.name for m in window) == \
+                    sorted(s.name for s in survivors), case
+                if cursor_was_victim:
+                    successor = subs[(kill + 1) % n]
+                    expect = successor if successor is not victim \
+                        else survivors[0]
+                    assert window[0] is expect, case
+
+
+def test_pick_rotation_no_skew_removing_closed_member(bus):
+    """Same invariant when the removed member was already closed (crash
+    before reap): the rotation had been skipping it, and its removal must
+    not double-pick whoever absorbed its turns."""
+    from repro.core import QueueGroup, Subscription
+
+    for advance in range(4):
+        g = QueueGroup("s", "g")
+        subs = [Subscription("s", 8, False, name=f"m{i}") for i in range(4)]
+        for s in subs:
+            g.add(s)
+        subs[1].closed = True
+        for _ in range(advance):
+            g.pick()
+        g.remove(subs[1])
+        survivors = [subs[0], subs[2], subs[3]]
+        window = [g.pick()[0] for _ in range(3)]
+        assert sorted(m.name for m in window) == \
+            sorted(s.name for s in survivors), advance
+
+
 def test_group_backlog_is_member_sum(bus):
     tok = bus.issue_token("t", ["s"])
     bus.subscribe("s", token=tok, group="pool", name="a")
