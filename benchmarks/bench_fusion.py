@@ -12,7 +12,11 @@ The same 4-stage ``.map`` pipeline is deployed twice on a live Operator:
 
 When jax is importable, a third informational variant forces the jitted
 program on whatever backend is present (``fused_jit``) — on CPU it documents
-the XLA per-message dispatch cost that "auto" mode avoids.
+the XLA per-message dispatch cost that "auto" mode avoids — and a fourth
+(``batched``, gated) adds the ``.scaled(max_batch=)`` knob so the backlogged
+mailbox drains in bursts through ONE vmapped program call per burst: the
+dispatch cost that makes per-message jit slow on CPU is amortized across the
+burst, so batched throughput must beat per-message jitted throughput.
 
 Metric: end-to-end messages/s from sensor start to the last exit message.
 ``run()`` returns the machine-readable variant->metric dict that
@@ -36,9 +40,10 @@ TENSOR = StreamSchema.device(x=((64, 64), "float32"))
 # and the drain count is exact
 FRAMES = 200
 RUNS = 3  # best-of, to keep the CI gate robust to scheduler noise
+MAX_BATCH = 64  # burst ceiling for the batched variant
 
 
-def _app(frames: int) -> App:
+def _app(frames: int, max_batch: int | None = None) -> App:
     app = App("fusion-bench")
 
     @app.driver(emits=TENSOR)
@@ -46,21 +51,24 @@ def _app(frames: int) -> App:
         base = np.ones((64, 64), np.float32)
         return ({"x": base * (i % 7)} for i in range(frames))
 
-    (app.sense("frames", source, frames=frames)
-        .map(lambda p: {"x": p["x"] * 2.0}, emits=TENSOR, device=True,
-             name="scaled")
-        .map(lambda p: {"x": p["x"] + 1.0}, emits=TENSOR, device=True,
-             name="shifted")
-        .map(lambda p: {"x": p["x"].clip(0.0)}, emits=TENSOR,
-             device=True, name="rectified")
-        .map(lambda p: {"x": p["x"] - 3.0}, emits=TENSOR, device=True,
-             name="normed"))
+    exit_ = (app.sense("frames", source, frames=frames)
+             .map(lambda p: {"x": p["x"] * 2.0}, emits=TENSOR, device=True,
+                  name="scaled")
+             .map(lambda p: {"x": p["x"] + 1.0}, emits=TENSOR, device=True,
+                  name="shifted")
+             .map(lambda p: {"x": p["x"].clip(0.0)}, emits=TENSOR,
+                  device=True, name="rectified")
+             .map(lambda p: {"x": p["x"] - 3.0}, emits=TENSOR, device=True,
+                  name="normed"))
+    if max_batch is not None:
+        exit_.scaled(max_batch=max_batch)
     return app
 
 
-def _measure(fuse: bool, frames: int = FRAMES) -> float:
+def _measure(fuse: bool, frames: int = FRAMES,
+             max_batch: int | None = None) -> float:
     """Deploy, push ``frames`` messages through, return messages/s."""
-    app = _app(frames)
+    app = _app(frames, max_batch)
     with connect(start=False) as op:
         app.deploy(op, start_sensors=False, fuse=fuse)
         sub = op.subscribe("normed", maxsize=frames + 8)
@@ -94,7 +102,11 @@ def run() -> dict:
         old = os.environ.get("DATAX_FUSION_JIT")
         os.environ["DATAX_FUSION_JIT"] = "always"
         try:
-            fused_jit = max(_measure(True) for _ in range(RUNS))
+            # max_batch=1 pins per-message dispatch: this is the baseline
+            # documenting the per-message XLA cost that batching amortizes
+            fused_jit = max(_measure(True, max_batch=1) for _ in range(RUNS))
+            batched = max(_measure(True, max_batch=MAX_BATCH)
+                          for _ in range(RUNS))
         finally:
             if old is None:
                 del os.environ["DATAX_FUSION_JIT"]
@@ -102,6 +114,11 @@ def run() -> dict:
                 os.environ["DATAX_FUSION_JIT"] = old
         emit("fusion_fused_jit_chain", 1e6 / fused_jit,
              f"msgs_per_s={fused_jit:.0f} backend={jax.default_backend()}")
+        emit("fusion_batched_chain", 1e6 / batched,
+             f"msgs_per_s={batched:.0f} max_batch={MAX_BATCH} "
+             f"backend={jax.default_backend()}")
         data["fused_jit_msgs_per_s"] = round(fused_jit, 1)
+        data["batched_msgs_per_s"] = round(batched, 1)
+        data["max_batch"] = MAX_BATCH
         data["jit_backend"] = jax.default_backend()
     return data

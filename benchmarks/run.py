@@ -8,7 +8,9 @@ metric) for CI trending and gating.  Run:
 
 ``--gate`` turns known regression checks into hard failures — today: the
 fused device chain must beat per-hop bus execution (BENCH_fusion.json
-``speedup`` > 1); 4 queue-grouped workers must beat 1 by >= 2x on the
+``speedup`` > 1); batched fused execution must beat per-message jitted
+dispatch on the jax leg (``batched_msgs_per_s`` >= ``fused_jit_msgs_per_s``);
+4 queue-grouped workers must beat 1 by >= 2x on the
 scaling pipeline (BENCH_scaling.json ``speedup``); and 4 keyed *stateful*
 workers must beat 1 by >= 2x with zero per-key ordering violations and zero
 lost state across a forced mid-run scale-down (BENCH_keyed.json).  Modules
@@ -50,6 +52,15 @@ def _gate(results: dict[str, dict]) -> list[str]:
             f"fusion: fused chain not faster than per-hop bus "
             f"(fused={fusion.get('fused_msgs_per_s')} msgs/s, "
             f"bus={fusion.get('bus_msgs_per_s')} msgs/s)")
+    if fusion is not None and "batched_msgs_per_s" in fusion \
+            and fusion["batched_msgs_per_s"] < fusion.get(
+                "fused_jit_msgs_per_s", 0.0):
+        failures.append(
+            f"fusion: batched fused execution slower than per-message "
+            f"jitted dispatch "
+            f"(batched={fusion.get('batched_msgs_per_s')} msgs/s, "
+            f"per-message={fusion.get('fused_jit_msgs_per_s')} msgs/s, "
+            f"max_batch={fusion.get('max_batch')})")
     scaling = results.get("scaling")
     if scaling is not None and scaling.get("speedup", 0.0) < 2.0:
         workers = scaling.get("workers", 4)

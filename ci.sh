@@ -35,7 +35,9 @@ fi
 
 echo "== benchmarks: fusion regression gate =="
 # writes BENCH_fusion.json; fails if the fused device chain is not faster
-# than per-hop bus execution on the 4-stage benchmark topology
+# than per-hop bus execution on the 4-stage benchmark topology, or (jax leg)
+# if batched fused execution is not faster than per-message jitted dispatch
+# (batched_msgs_per_s >= fused_jit_msgs_per_s)
 python -m benchmarks.run --only fusion --gate
 
 echo "== benchmarks: queue-group scaling gate =="

@@ -17,7 +17,7 @@ from .entities import (ActuatorSpec, AnalyticsUnitSpec, DatabaseSpec,
 from .fusion import FusedStage, fuse_application, plan_segments
 from .operator import CoherenceError, Operator, OperatorError
 from .schema import ConfigSchema, FieldSpec, Message, StreamSchema
-from .sdk import DataX, LogicContext, sdk_entrypoint
+from .sdk import BatchInterrupted, DataX, LogicContext, sdk_entrypoint
 from .serverless import AutoScaler, Executor, InstanceHandle, ScalePolicy
 from .sidecar import Sidecar
 from .state import Database, KeyedStore, StateError, StateStore, Table
@@ -37,7 +37,7 @@ __all__ = [
     "FusedStage", "fuse_application", "plan_segments",
     "CoherenceError", "Operator", "OperatorError",
     "ConfigSchema", "FieldSpec", "Message", "StreamSchema",
-    "DataX", "LogicContext", "sdk_entrypoint",
+    "BatchInterrupted", "DataX", "LogicContext", "sdk_entrypoint",
     "AutoScaler", "Executor", "InstanceHandle", "ScalePolicy",
     "Sidecar",
     "Database", "KeyedStore", "StateError", "StateStore", "Table",

@@ -236,17 +236,45 @@ class Subscription:
 
     def next(self, timeout: float | None = None) -> Message | None:
         """Blocking pop; None on timeout or close."""
+        got = self.next_batch(1, timeout)
+        return got[0] if got else None
+
+    def next_batch(self, max_n: int,
+                   timeout: float | None = None) -> list[Message]:
+        """Pop up to ``max_n`` queued items as one burst, preserving order.
+
+        Blocks up to ``timeout`` for the FIRST item only — a shallow mailbox
+        costs exactly one :meth:`next`, so batching consumers keep unbatched
+        idle latency — then drains whatever else is already queued under ONE
+        mailbox-lock acquisition, without waiting for more to arrive.
+        Group/keyed ``note_consumed`` accounting (per-partition backlog) and
+        wire decoding match :meth:`next` item for item.  Returns ``[]`` on
+        timeout or close.
+        """
+        if max_n < 1:
+            return []
         try:
-            pair = self._q.get(timeout=timeout)
+            first = self._q.get(timeout=timeout)
         except queue.Empty:
-            return None
-        if pair is None:
-            return None
-        tag, item = pair
-        self._note_consumed(tag)
-        if self.wire:
-            return decode_message(item)
-        return item
+            return []
+        pairs = [first]
+        if max_n > 1:
+            q = self._q
+            # one acquisition for the whole drain (vs max_n get_nowait
+            # round-trips).  Safe to touch the internals: producers only ever
+            # put_nowait (nobody waits on not_full), and removing items never
+            # requires a not_empty notification.
+            with q.mutex:
+                while len(pairs) < max_n and q._qsize():
+                    pairs.append(q._get())
+        out: list[Message] = []
+        for pair in pairs:
+            if pair is None:
+                break  # close sentinel — it is always the last item
+            tag, item = pair
+            self._note_consumed(tag)
+            out.append(decode_message(item) if self.wire else item)
+        return out
 
     def qsize(self) -> int:
         return self._q.qsize()
@@ -738,6 +766,17 @@ class MessageBus:
                 if offer(member, tag):
                     break
                 group.unpick(tag)
+
+    def note_lost(self, subject: str, n: int = 1) -> None:
+        """Account ``n`` messages that were consumed from a mailbox but
+        destroyed before processing completed (e.g. a poison message crashing
+        its instance mid-``process``).  Under single delivery the popped copy
+        was the only one, so without this the loss would be invisible in
+        :meth:`stats` — the counter lives on the SUBJECT so it survives the
+        crashed subscription."""
+        with self._lock:
+            if subject in self._lost:
+                self._lost[subject] += n
 
     def subscribe(self, subject: str, *, token: str, maxsize: int | None = None,
                   wire: bool = False, name: str = "",

@@ -291,7 +291,8 @@ class StreamHandle:
 
     def scaled(self, *, delivery: str | None = None,
                instances: int | None = None,
-               max_instances: int | None = None) -> "StreamHandle":
+               max_instances: int | None = None,
+               max_batch: int | None = None) -> "StreamHandle":
         """Scaling & delivery escape hatch for this stream's instances.
 
         ``delivery="group"`` (the platform default) makes scaled instances a
@@ -314,6 +315,17 @@ class StreamHandle:
         combinators (``.window``, ``fuse``) keep their per-instance buffers
         and stay single-instance, as do broadcast combinator stages (scaling
         those would duplicate messages downstream).
+
+        ``max_batch`` bounds batched execution for batching-capable units
+        (fused DEVICE chains): under backlog each mailbox pull drains up to
+        ``max_batch`` queued messages into ONE vmapped device program call
+        instead of dispatching per message.  Deeper bursts raise throughput
+        under load but can add tail latency for the last message of a burst;
+        ``max_batch=1`` forces per-message dispatch.  A shallow mailbox
+        always falls back to single-message pulls, so idle latency is
+        unaffected either way.  On a device chain, declare it on any stage —
+        fusion folds it onto the fused unit; if several stages declare one,
+        the stage closest to the segment exit wins.
         """
         if delivery is not None and delivery not in ("group", "broadcast"):
             raise DSLError(f"delivery must be 'group' or 'broadcast', "
@@ -323,6 +335,8 @@ class StreamHandle:
             raise DSLError(f"instances must be >= 1, got {instances}")
         if max_instances is not None and max_instances < 1:
             raise DSLError(f"max_instances must be >= 1, got {max_instances}")
+        if max_batch is not None and max_batch < 1:
+            raise DSLError(f"max_batch must be >= 1, got {max_batch}")
         index = next((i for i, s in enumerate(self.app._streams)
                       if s.name == self.name), None)
         if index is None:
@@ -375,7 +389,8 @@ class StreamHandle:
                 f"(@app.analytics_unit(max_instances=...)); .scaled() only "
                 f"fixes the pool size via instances=")
         self.app._streams[index] = dataclasses.replace(
-            spec, delivery=resolved, fixed_instances=fixed)
+            spec, delivery=resolved, fixed_instances=fixed,
+            max_batch=max_batch if max_batch is not None else spec.max_batch)
         return self
 
     # -- combinators (synthetic AUs) ----------------------------------------

@@ -154,6 +154,12 @@ class StreamSpec:
     fixed_instances: int | None = None   # None => operator auto-scales
     delivery: str = "group"              # "group" | "keyed" | "broadcast"
     key: str | None = None               # hashed payload field (keyed only)
+    #: Burst ceiling for batched execution: when this stream's unit can batch
+    #: (fused DEVICE chains expose ``process_batch``), each mailbox pull
+    #: drains up to this many queued messages into ONE program call.  None
+    #: defers to the unit's default; 1 forces per-message dispatch.  Set via
+    #: the DSL's ``.scaled(max_batch=)``.
+    max_batch: int | None = None
 
     kind = EntityKind.STREAM
 

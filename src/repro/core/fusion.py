@@ -38,7 +38,21 @@ runtime.  It operates on the compiled v1 :class:`~.app.Application` spec graph
    path degrades transparently: no jax, a CPU-only backend, a stage without
    a pure_fn, or a payload/stage that fails to trace (impure, non-numeric
    fields) → the same chain runs host-composed, bit-identical to per-hop bus
-   execution, still with zero interior bus hops.
+   execution, still with zero interior bus hops.  A payload-local problem
+   (a single non-numeric message) falls back for that message only; the
+   device program stays live (``device_fallbacks`` counts them in sidecar
+   metrics) — only a genuine trace failure demotes the unit permanently.
+
+4. **Batched execution** — under backlog the Executor drains a mailbox
+   burst and hands it to ``process_batch``: the whole burst is stacked
+   field-wise (one host->device transfer), run through ONE vmapped program
+   (:func:`repro.kernels.ops.jit_chain_batched`, per-message keep mask for
+   predicated filters) and unstacked once — amortizing the per-message XLA
+   dispatch that makes per-message jit slower than the host chain on CPU.
+   Bursts are bounded by ``.scaled(max_batch=)`` (default
+   :data:`DEFAULT_MAX_BATCH`) and padded to power-of-two sizes so at most
+   log2(max_batch) batch shapes compile; ragged / mixed-shape / non-numeric
+   bursts degrade per-message, bit-identical to the host chain.
 
 Upgrading an individual stage AU after fusion does not cascade into already-
 deployed fused units (the fused AU snapshots stage logic at build time);
@@ -54,7 +68,7 @@ import numpy as np
 from .app import Application
 from .entities import AnalyticsUnitSpec, Placement, StreamSpec
 from .schema import StreamSchema
-from .sdk import LogicContext, is_sdk_style
+from .sdk import BatchInterrupted, LogicContext, is_sdk_style
 
 try:  # the pass (host-composed path) must work without jax installed
     import jax  # noqa: F401
@@ -75,6 +89,13 @@ except Exception:  # pragma: no cover - exercised via monkeypatch in tests
 #:
 #: Overridable via the DATAX_FUSION_JIT environment variable.
 JIT_MODE = "auto"
+
+#: Default burst ceiling for a fused unit's batched execution when the stream
+#: declares no ``max_batch`` of its own (``.scaled(max_batch=)``).  Each
+#: mailbox pull drains up to this many queued messages into one vmapped
+#: program call; bursts are padded up to the next power of two so at most
+#: log2(max_batch) batch shapes ever compile (no retrace storm).
+DEFAULT_MAX_BATCH = 32
 
 
 def jax_available() -> bool:
@@ -234,13 +255,93 @@ def _from_device(payload: Mapping[str, Any],
     return out
 
 
+def _round_up_pow2(n: int) -> int:
+    """Canonical (power-of-two) batch size for a burst of ``n`` messages.
+
+    The jitted batch program retraces per input shape; rounding every burst
+    up to the next power of two bounds the set of compiled batch shapes to
+    log2(max_batch) instead of one per distinct backlog depth."""
+    return 1 << max(0, n - 1).bit_length()
+
+
+def _to_device_batched(payloads: Sequence[Mapping[str, Any]],
+                       pad_to: int) -> dict:
+    """Stack N payloads field-wise into one leading-batch-dim device payload.
+
+    Raises TypeError on heterogeneous field sets, non-numeric fields, or
+    ragged/mixed shapes-dtypes across the burst — the caller degrades that
+    burst to per-message execution, bit-identical to the host chain.  Tails
+    shorter than ``pad_to`` are padded by repeating the last row (the pad
+    rows' outputs are discarded) so batch shapes stay canonical."""
+    import jax.numpy as jnp
+    keys = payloads[0].keys()
+    for p in payloads[1:]:
+        if p.keys() != keys:
+            raise TypeError("burst payloads carry different field sets")
+    out = {}
+    for k in keys:
+        rows = []
+        for p in payloads:
+            v = p[k]
+            if isinstance(v, (str, bytes, dict, list, tuple)) or v is None:
+                raise TypeError(f"field {k!r} ({type(v).__name__}) is not "
+                                f"device-representable")
+            arr = np.asarray(v)
+            if arr.dtype == object:
+                raise TypeError(f"field {k!r} is not device-representable")
+            rows.append(arr)
+        first = rows[0]
+        if any(r.shape != first.shape or r.dtype != first.dtype
+               for r in rows[1:]):
+            raise TypeError(f"field {k!r}: ragged shapes/dtypes across burst")
+        if len(rows) < pad_to:
+            rows.extend(rows[-1:] * (pad_to - len(rows)))
+        out[k] = jnp.asarray(np.stack(rows))
+    return out
+
+
+def _from_device_batched(stacked: Mapping[str, Any],
+                         likes: Sequence[Mapping[str, Any]]) -> list[dict]:
+    """Stacked device results -> one host payload per (unpadded) message.
+
+    One device->host transfer per FIELD for the whole burst — that single
+    materialization is where batching beats per-message ``_from_device`` —
+    then each row follows the exact scalar-typing rules of
+    :func:`_from_device` against its own entry payload."""
+    host = {k: np.asarray(v) for k, v in stacked.items()}
+    outs = []
+    for i, like in enumerate(likes):
+        p = {}
+        for k, arr in host.items():
+            row = arr[i]
+            if row.ndim == 0:
+                src = like.get(k)
+                if src is not None and not isinstance(src, (np.ndarray,
+                                                            np.generic)):
+                    p[k] = row.item()
+                else:
+                    p[k] = row[()]
+            else:
+                # copy out of the stacked block: a view would keep the whole
+                # pad_to-sized burst alive for as long as ANY downstream
+                # consumer holds one message of it
+                p[k] = np.array(row)
+        outs.append(p)
+    return outs
+
+
 def make_fused_logic(stages: Sequence[FusedStage],
-                     entry_schema: StreamSchema | None) -> Callable:
+                     entry_schema: StreamSchema | None,
+                     max_batch: int | None = None) -> Callable:
     """Factory for the fused AU: chain every stage in one instance.
 
     The returned factory honours the normal AU contract
     (``factory(ctx) -> process(stream, payload)``) so the Executor runs a
-    fused unit exactly like any other microservice.
+    fused unit exactly like any other microservice; additionally ``process``
+    exposes the batched-execution surface the Executor's drain-a-burst mode
+    keys on — ``process_batch`` (whole mailbox burst -> one vmapped program
+    call), ``default_max_batch`` and a ``stats`` counter dict
+    (``device_fallbacks`` / ``batched_bursts`` / ``batched_msgs``).
     """
 
     def fused_factory(ctx):
@@ -262,12 +363,21 @@ def make_fused_logic(stages: Sequence[FusedStage],
                 results.extend(host_chain(i + 1, stages[i].stream_name, p))
             return results
 
-        program = None
+        program = batched_program = None
         if jax_available() and _want_jit() \
                 and all(st.pure_fn is not None for st in stages):
-            from ..kernels.ops import jit_chain
-            program = jit_chain([(st.kind, st.pure_fn) for st in stages])
+            from ..kernels.ops import jit_chain, jit_chain_batched
+            chain = [(st.kind, st.pure_fn) for st in stages]
+            program = jit_chain(chain)
+            batched_program = jit_chain_batched(chain)
         mode = {"device": program is not None}
+        # device_fallbacks counts MESSAGES that ran on the host while the
+        # device program stayed live (payload-local problems);
+        # unstackable_bursts counts bursts that degraded to per-message
+        # dispatch (ragged/mixed shapes) — those messages may still run on
+        # the device one at a time, so they are not fallbacks.
+        stats = {"device_fallbacks": 0, "unstackable_bursts": 0,
+                 "batched_bursts": 0, "batched_msgs": 0}
 
         def run_device(payload: dict) -> dict | None:
             dev, keep = program(_to_device(payload))
@@ -275,25 +385,98 @@ def make_fused_logic(stages: Sequence[FusedStage],
                 return None
             return _from_device(dev, payload)
 
-        def process(stream: str, payload: dict):
-            if mode["device"]:
-                try:
-                    return run_device(payload)
-                except Exception:
-                    # untraceable stage / non-numeric payload: permanently
-                    # drop to the host-composed chain (still zero bus hops)
-                    mode["device"] = False
+        def host_one(stream: str, payload: dict):
             out = host_chain(0, stream, payload)
             if not out:
                 return None
             return out if len(out) > 1 else out[0]
 
+        def process(stream: str, payload: dict):
+            if mode["device"]:
+                try:
+                    dev = _to_device(payload)
+                except Exception:
+                    # conversion failures are ALWAYS payload problems
+                    # (non-numeric field -> TypeError, oversized python int
+                    # -> OverflowError, ...), never program problems: fall
+                    # back for THIS message only and keep the device program
+                    # live for the rest of the stream
+                    stats["device_fallbacks"] += 1
+                else:
+                    try:
+                        out, keep = program(dev)
+                        return _from_device(out, payload) if bool(keep) \
+                            else None
+                    except Exception:
+                        # genuine trace failure (impure/untraceable stage):
+                        # permanently drop to the host-composed chain (still
+                        # zero bus hops)
+                        mode["device"] = False
+            return host_one(stream, payload)
+
+        def process_batch(stream: str, payloads: Sequence[dict]) -> list:
+            """One vmapped device call for a whole mailbox burst; returns a
+            per-message result list (None = filtered), order preserved.
+            Bursts the device cannot stack (ragged/mixed shapes, non-numeric
+            fields) degrade to the per-message path — bit-identical to the
+            host chain."""
+            if mode["device"] and batched_program is not None \
+                    and len(payloads) > 1:
+                try:
+                    dev = _to_device_batched(payloads,
+                                             _round_up_pow2(len(payloads)))
+                except Exception:
+                    # conversion = payload problem (ragged shapes, mixed
+                    # dtypes, non-numeric or unconvertible values): burst-
+                    # level degrade only — the per-message path below still
+                    # tries the device for each message, and counts a
+                    # device_fallback only for the ones that truly drop to
+                    # the host chain
+                    stats["unstackable_bursts"] += 1
+                else:
+                    try:
+                        out, keep = batched_program(dev)
+                        keep = np.asarray(keep)
+                    except Exception:
+                        mode["device"] = False
+                    else:
+                        stats["batched_bursts"] += 1
+                        stats["batched_msgs"] += len(payloads)
+                        host = _from_device_batched(out, payloads)
+                        return [host[i] if keep[i] else None
+                                for i in range(len(payloads))]
+            # per-message fallback: a poison message here must not destroy
+            # its already-processed predecessors — hand the successful
+            # prefix to the Executor so it is emitted before the crash and
+            # only the poison + unprocessed tail count as lost
+            results: list = []
+            for p in payloads:
+                try:
+                    results.append(process(stream, p))
+                except Exception as e:
+                    raise BatchInterrupted(results) from e
+            return results
+
+        process.process_batch = process_batch
+        process.default_max_batch = max_batch or DEFAULT_MAX_BATCH
+        process.stats = stats
+
         if program is not None and entry_schema is not None:
             zeros = entry_schema.zero_payload()
             if zeros is not None:
-                # compile before the first real message; the Executor calls
-                # this ahead of the pump loop and keeps it out of latency EWMA
-                process.warmup = lambda: run_device(zeros)
+                canonical = _round_up_pow2(process.default_max_batch)
+
+                def warmup():
+                    # compile before the first real message; the Executor
+                    # calls this ahead of the pump loop and keeps the cost
+                    # out of the latency EWMA.  The batched program warms at
+                    # the canonical (full) burst size — the steady-state
+                    # shape under backlog.
+                    run_device(zeros)
+                    if batched_program is not None and canonical > 1:
+                        batched_program(
+                            _to_device_batched([zeros, zeros], canonical))
+                process.warmup = warmup
         return process
 
     return fused_factory
@@ -345,13 +528,23 @@ def fuse_application(app: Application, *,
             name += "+"
         au_names.add(name)
         entry_schema = producer_schema.get(entry.inputs[0])
+        # batching envelope: the fused unit consumes the ENTRY subject, so a
+        # max_batch declared on any folded stage carries over.  When several
+        # stages declare one, the stage closest to the segment EXIT wins —
+        # the last word in chain order, which is what lets a trailing
+        # .scaled(max_batch=1) force per-message dispatch over an earlier
+        # stage's burst setting.
+        declared_batch = [s.max_batch for s in segment
+                          if s.max_batch is not None]
+        seg_max_batch = declared_batch[-1] if declared_batch else None
         # the segment's envelope: never exceed ANY stage's declared ceiling;
         # a contradictory pair (one stage's floor above another's ceiling)
         # clamps the floor down rather than violating the ceiling
         hi = max(1, min(au.max_instances for au in stage_aus))
         lo = min(max(au.min_instances for au in stage_aus), hi)
         fused_aus.append(AnalyticsUnitSpec(
-            name=name, logic=make_fused_logic(stages, entry_schema),
+            name=name, logic=make_fused_logic(stages, entry_schema,
+                                              max_batch=seg_max_batch),
             input_schemas=tuple(stage_aus[0].input_schemas),
             output_schema=stage_aus[-1].output_schema,
             placement=Placement.DEVICE,
@@ -369,7 +562,8 @@ def fuse_application(app: Application, *,
             name=exit_.name, analytics_unit=name, inputs=tuple(entry.inputs),
             fixed_instances=1 if any(s.fixed_instances == 1 for s in segment)
             else None,
-            delivery=entry.delivery, key=entry.key))
+            delivery=entry.delivery, key=entry.key,
+            max_batch=seg_max_batch))
         folded.update(s.name for s in segment)
 
     streams = [s for s in app.streams if s.name not in folded] + fused_streams

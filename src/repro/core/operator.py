@@ -280,6 +280,10 @@ class Operator:
                 raise OperatorError(
                     f"stream {spec.name!r}: key={spec.key!r} requires "
                     f"delivery='keyed', got {spec.delivery!r}")
+            if spec.max_batch is not None and spec.max_batch < 1:
+                raise OperatorError(
+                    f"stream {spec.name!r}: max_batch must be >= 1, "
+                    f"got {spec.max_batch}")
             missing = [s for s in spec.inputs if s not in self._stream_names()]
             if missing:
                 raise CoherenceError(
@@ -334,7 +338,8 @@ class Operator:
             logic=au.logic, config=dict(resolved), inputs=tuple(spec.inputs),
             output=spec.name, db=db or self._db_for(resolved),
             group=spec.name if spec.delivery in ("group", "keyed") else None,
-            key=spec.key if spec.delivery == "keyed" else None)
+            key=spec.key if spec.delivery == "keyed" else None,
+            max_batch=spec.max_batch)
 
     def register_gadget(self, spec: GadgetSpec) -> None:
         with self._lock:

@@ -70,6 +70,22 @@ class DataX:
         return not self._stop.is_set()
 
 
+class BatchInterrupted(RuntimeError):
+    """A ``process_batch`` implementation failed partway through a burst.
+
+    ``results`` is the successful prefix (per-message outputs, in order, up
+    to but excluding the failing message).  Raised ``from`` the original
+    exception.  The Executor's drain-a-burst pump emits the prefix and
+    counts only the poison message and the unprocessed tail as lost —
+    without this protocol a single poison message would destroy the whole
+    popped burst, including fully-processed predecessors.
+    """
+
+    def __init__(self, results: list):
+        super().__init__(f"batch interrupted after {len(results)} messages")
+        self.results = results
+
+
 def sdk_entrypoint(fn: Callable[[DataX], Any]) -> Callable[[DataX], Any]:
     """Mark a function as SDK-style business logic (owns its own loop)."""
     fn.datax_sdk_style = True  # type: ignore[attr-defined]

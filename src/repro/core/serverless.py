@@ -19,7 +19,7 @@ import traceback
 from typing import Any, Callable, Mapping, Sequence
 
 from .bus import MessageBus
-from .sdk import DataX, LogicContext, is_sdk_style
+from .sdk import BatchInterrupted, DataX, LogicContext, is_sdk_style
 from .sidecar import Sidecar
 from .state import Database
 
@@ -67,13 +67,17 @@ class Executor:
                        db: Database | None = None, node: str | None = None,
                        queue_size: int = 256,
                        group: str | None = None,
-                       key: str | None = None) -> InstanceHandle:
+                       key: str | None = None,
+                       max_batch: int | None = None) -> InstanceHandle:
         """``group`` puts this instance's input subscriptions into the named
         bus queue group: all instances started with the same group form a
         single-delivery worker pool (scaling adds capacity, not copies).
         ``key`` upgrades the group to keyed delivery — the named payload
         field is hashed so every message for a key reaches this pool's same
-        member (stateful workers scale without splitting a key's state)."""
+        member (stateful workers scale without splitting a key's state).
+        ``max_batch`` bounds the mailbox burst handed to a batching-capable
+        process (one exposing ``process_batch``) per pull; None defers to the
+        process's own ``default_max_batch`` (1 = per-message pulls)."""
         iid = f"{owner}/{entity_name}-{next(self._ids):04d}"
         stop_event = threading.Event()
         sidecar = Sidecar(iid, self._bus, inputs=inputs, output=output,
@@ -84,7 +88,7 @@ class Executor:
             owner=owner, config=dict(config), sidecar=sidecar,
             thread=None, stop_event=stop_event, node=node)  # type: ignore[arg-type]
 
-        runner = self._make_runner(handle, logic, db)
+        runner = self._make_runner(handle, logic, db, max_batch)
         thread = threading.Thread(target=runner, name=iid, daemon=True)
         handle.thread = thread
         with self._lock:
@@ -93,7 +97,8 @@ class Executor:
         return handle
 
     def _make_runner(self, handle: InstanceHandle, logic: Callable,
-                     db: Database | None) -> Callable[[], None]:
+                     db: Database | None,
+                     max_batch: int | None = None) -> Callable[[], None]:
         sidecar, stop_event = handle.sidecar, handle.stop_event
 
         def run() -> None:
@@ -110,7 +115,8 @@ class Executor:
                     self._drive_source(made, sidecar, stop_event)
                 else:
                     self._pump(made, sidecar, stop_event,
-                               sink=handle.entity_kind == "actuator")
+                               sink=handle.entity_kind == "actuator",
+                               max_batch=max_batch)
             except Exception:
                 handle.crashed = True
                 handle.crash_info = traceback.format_exc()
@@ -143,8 +149,18 @@ class Executor:
 
     @staticmethod
     def _pump(process: Callable, sidecar: Sidecar, stop_event: threading.Event,
-              sink: bool) -> None:
-        """AUs/actuators: pull → business logic → (emit)."""
+              sink: bool, max_batch: int | None = None) -> None:
+        """AUs/actuators: pull → business logic → (emit).
+
+        A process exposing ``process_batch(stream, [payloads]) ->
+        [out | None, ...]`` (fused device units) switches the pump to
+        drain-a-burst mode: each pull takes everything queued up to
+        ``max_batch`` (the ``.scaled(max_batch=)`` knob, falling back to the
+        process's own ``default_max_batch``) and hands the whole burst to one
+        batched call.  A shallow mailbox yields 1-message bursts routed
+        through the plain per-message path, so idle latency is unchanged —
+        batching only engages when there is a backlog to amortize.
+        """
         if not callable(process):
             raise TypeError("AU/actuator factory must return a callable process fn")
         warm = getattr(process, "warmup", None)
@@ -160,26 +176,60 @@ class Executor:
             except Exception:
                 pass
             sidecar.record_warmup(time.monotonic() - t0)
+        sidecar.attach_process_stats(getattr(process, "stats", None))
+        batch_fn = getattr(process, "process_batch", None)
+        if max_batch is None:
+            max_batch = int(getattr(process, "default_max_batch", 1) or 1)
+        burst = max(1, max_batch) if batch_fn is not None else 1
+        def emit_outs(outs) -> None:
+            if sink:
+                return
+            for out in outs:
+                if out is None:
+                    continue
+                for payload in (out if isinstance(out, list) else [out]):
+                    sidecar.emit(payload)
+
+        def account(t0: float, total: int, done: int) -> None:
+            dt = (time.monotonic() - t0) / total
+            for i in range(total):
+                sidecar.record_processing(dt, ok=i < done)
+
         while not stop_event.is_set():
-            item = sidecar.next(timeout=0.1)
-            if item is None:
+            if burst > 1:
+                got = sidecar.next_batch(burst, timeout=0.1)
+            else:
+                one = sidecar.next(timeout=0.1)
+                got = None if one is None else (one[0], [one[1]])
+            if got is None:
                 continue
-            stream, msg = item
+            stream, msgs = got
             t0 = time.monotonic()
-            ok = True
             try:
-                out = process(stream, msg.payload)
-            except Exception:
-                ok = False
-                out = None
+                if len(msgs) == 1:
+                    outs = [process(stream, msgs[0].payload)]
+                else:
+                    outs = batch_fn(stream, [m.payload for m in msgs])
+            except BatchInterrupted as bi:
+                # a poison message partway through a burst: the successful
+                # prefix still flows downstream; only the poison and the
+                # never-processed tail die with this instance — and they are
+                # accounted, not silently vanished (the reconciler restarts
+                # the instance; a group survivor inherits the rest of the
+                # mailbox)
+                sidecar.note_lost(stream, len(msgs) - len(bi.results))
+                account(t0, len(msgs), len(bi.results))
+                emit_outs(bi.results)
                 raise
-            finally:
-                sidecar.record_processing(time.monotonic() - t0, ok=ok)
-            if sink or out is None:
-                continue
-            outs = out if isinstance(out, list) else [out]
-            for payload in outs:
-                sidecar.emit(payload)
+            except Exception:
+                # poison message: the in-flight messages die with this
+                # instance and, under single delivery, the popped copies were
+                # the ONLY ones — account them on the subject's lost stat
+                sidecar.note_lost(stream, len(msgs))
+                account(t0, len(msgs), 0)
+                raise
+            account(t0, len(msgs), len(msgs))
+            emit_outs(outs)
 
     # ------------------------------------------------------------- lifecycle
     def stop_instance(self, instance_id: str) -> None:

@@ -53,11 +53,43 @@ class Sidecar:
         self.errors = 0
         self.latency_ewma_s = 0.0     # business-logic processing latency
         self.warmup_s = 0.0           # one-off setup (jit compile) cost
+        self.batches = 0              # next_batch() bursts handed out
+        self.batch_msgs = 0           # messages delivered inside those bursts
+        self.max_batch_seen = 0       # deepest single burst
         self.started_at = time.monotonic()
         self.last_activity = self.started_at
         self._ewma_alpha = 0.2
+        # counters owned by the business logic (e.g. a fused device unit's
+        # device_fallbacks) — attached by the Executor, read by metrics()
+        self._process_stats: dict | None = None
 
     # -- data plane (used by the SDK / runtime, not by business logic) -------
+    def _pull(self, max_n: int, timeout: float | None
+              ) -> tuple[str, list] | None:
+        """The round-robin scan shared by :meth:`next` and
+        :meth:`next_batch`: a fast non-blocking pass over every input, then
+        a blocking wait on the round-robin head.  Returns
+        ``(subject, [messages])`` (1 <= len <= max_n) or None."""
+        if not self._subs or max_n < 1:
+            return None
+        n = len(self._subs)
+        for i in range(n):
+            sub = self._subs[(self._rr + i) % n]
+            msgs = sub.next_batch(max_n, timeout=0)
+            if msgs:
+                self._rr = (self._rr + i + 1) % n
+                self.last_activity = time.monotonic()
+                return (sub.subject, msgs)
+        if timeout == 0:
+            return None
+        sub = self._subs[self._rr % n]
+        msgs = sub.next_batch(max_n, timeout=timeout)
+        if not msgs:
+            return None
+        self._rr = (self._rr + 1) % n
+        self.last_activity = time.monotonic()
+        return (sub.subject, msgs)
+
     def next(self, timeout: float | None = 0.1) -> tuple[str, Message] | None:
         """Round-robin poll across input subscriptions.
 
@@ -65,27 +97,31 @@ class Sidecar:
         Mirrors the paper's SDK ``next()`` returning "the name of the stream
         and the message".
         """
-        if not self._subs:
-            return None
-        n = len(self._subs)
-        # fast pass: try each queue without blocking
-        for i in range(n):
-            sub = self._subs[(self._rr + i) % n]
-            msg = sub.next(timeout=0)
-            if msg is not None:
-                self._rr = (self._rr + i + 1) % n
-                self.last_activity = time.monotonic()
-                return (sub.subject, msg)
-        if timeout == 0:
-            return None
-        # slow pass: block on the round-robin head
-        sub = self._subs[self._rr % n]
-        msg = sub.next(timeout=timeout)
-        if msg is None:
-            return None
-        self._rr = (self._rr + 1) % n
-        self.last_activity = time.monotonic()
-        return (sub.subject, msg)
+        got = self._pull(1, timeout)
+        return None if got is None else (got[0], got[1][0])
+
+    def next_batch(self, max_n: int, timeout: float | None = 0.1
+                   ) -> tuple[str, list[Message]] | None:
+        """Round-robin burst pull: up to ``max_n`` messages from ONE input
+        subscription in a single drain (``(stream_name, [messages])``).
+
+        Blocking behaviour mirrors :meth:`next`, and a shallow mailbox
+        yields a 1-message burst with unchanged latency.  Burst sizes are
+        recorded (``batches`` / ``batch_msgs`` / ``max_batch_seen``) so the
+        metrics surface shows how well batched execution is amortizing.
+        """
+        got = self._pull(max_n, timeout)
+        if got is not None:
+            self._note_batch(len(got[1]))
+        return got
+
+    def _note_batch(self, size: int) -> None:
+        with self._lock:
+            self.batches += 1
+            self.batch_msgs += size
+            if size > self.max_batch_seen:
+                self.max_batch_seen = size
+            self.last_activity = time.monotonic()
 
     def emit(self, payload: dict, headers: dict | None = None) -> None:
         if self._output is None:
@@ -104,6 +140,17 @@ class Sidecar:
                 self.errors += 1
             a = self._ewma_alpha
             self.latency_ewma_s = (1 - a) * self.latency_ewma_s + a * latency_s
+
+    def attach_process_stats(self, stats: dict | None) -> None:
+        """Adopt a mutable counter dict owned by the business logic (a fused
+        device unit exposes ``process.stats``) so logic-level counters —
+        ``device_fallbacks`` above all — reach the REST metrics surface."""
+        self._process_stats = stats
+
+    def note_lost(self, subject: str, n: int = 1) -> None:
+        """Report in-flight message destruction (poison message crashing the
+        instance) to the bus, where it lands on the subject's ``lost`` stat."""
+        self._bus.note_lost(subject, n)
 
     def record_warmup(self, seconds: float) -> None:
         """One-off setup cost (e.g. jit compile of a fused device chain) —
@@ -145,6 +192,7 @@ class Sidecar:
         backlog = sum(s.qsize() for s in self._subs)
         groups = self._group_metrics() if self.group else {}
         with self._lock:
+            stats = self._process_stats or {}
             return {
                 "instance": self.instance_id,
                 "group": self.group,
@@ -158,6 +206,19 @@ class Sidecar:
                 "groups": groups,
                 "latency_ewma_s": self.latency_ewma_s,
                 "warmup_s": self.warmup_s,
+                "batches": self.batches,
+                "batch_msgs": self.batch_msgs,
+                "max_batch_seen": self.max_batch_seen,
+                "avg_batch": (self.batch_msgs / self.batches
+                              if self.batches else 0.0),
+                # logic-owned counters (fused units): batched_bursts > 0 is
+                # the signal that vmapped device batching actually engaged —
+                # the sidecar-level batches/batch_msgs above count every
+                # mailbox pull, including per-message degrades
+                "device_fallbacks": int(stats.get("device_fallbacks", 0)),
+                "unstackable_bursts": int(stats.get("unstackable_bursts", 0)),
+                "batched_bursts": int(stats.get("batched_bursts", 0)),
+                "batched_msgs": int(stats.get("batched_msgs", 0)),
                 "uptime_s": time.monotonic() - self.started_at,
                 "idle_s": time.monotonic() - self.last_activity,
             }

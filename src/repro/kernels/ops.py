@@ -67,3 +67,29 @@ def jit_chain(stages):
         return payload, keep
 
     return jax.jit(program)
+
+
+def jit_chain_batched(stages):
+    """Batched variant of :func:`jit_chain`: ONE vmapped + jitted program over
+    a whole burst of payloads.
+
+    Input is the per-message payload dict with every field stacked along a
+    leading batch dimension; output is ``(stacked_payload, keep_mask)`` where
+    ``keep_mask`` is a ``(N,)`` bool of per-message predicated-filter
+    decisions.  Per-message semantics are exactly ``jit_chain``'s — the vmap
+    axis only amortizes the per-message XLA dispatch + host<->device sync
+    that dominates short chains under load (the fused_jit vs host gap in
+    BENCH_fusion.json) into one device call per burst.
+    """
+    import jax.numpy as jnp
+
+    def single(payload):
+        keep = jnp.asarray(True)
+        for kind, fn in stages:
+            if kind == "filter":
+                keep = jnp.logical_and(keep, jnp.asarray(fn(payload)))
+            else:
+                payload = fn(payload)
+        return payload, keep
+
+    return jax.jit(jax.vmap(single))
