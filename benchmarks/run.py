@@ -11,9 +11,11 @@ fused device chain must beat per-hop bus execution (BENCH_fusion.json
 ``speedup`` > 1); batched fused execution must beat per-message jitted
 dispatch on the jax leg (``batched_msgs_per_s`` >= ``fused_jit_msgs_per_s``);
 4 queue-grouped workers must beat 1 by >= 2x on the
-scaling pipeline (BENCH_scaling.json ``speedup``); and 4 keyed *stateful*
+scaling pipeline (BENCH_scaling.json ``speedup``); 4 keyed *stateful*
 workers must beat 1 by >= 2x with zero per-key ordering violations and zero
-lost state across a forced mid-run scale-down (BENCH_keyed.json).  Modules
+lost state across a forced mid-run scale-down (BENCH_keyed.json); and
+publishing on a durable subject must cost <= 2x fire-and-forget, with a
+late joiner replaying the full retained history (BENCH_durable.json).  Modules
 are imported lazily so a minimal-deps environment (no jax) can still run the
 core benchmarks — the scaling and keyed gates are pure platform code and run
 on both CI legs.
@@ -33,6 +35,7 @@ ALL = {
     "autoscale": "bench_autoscale",
     "scaling": "bench_scaling",
     "keyed": "bench_keyed",
+    "durable": "bench_durable",
     "loc": "bench_loc",
     "reuse": "bench_reuse",
     "fusion": "bench_fusion",
@@ -94,6 +97,19 @@ def _gate(results: dict[str, dict]) -> list[str]:
             failures.append(
                 f"keyed: benchmark pipeline dropped "
                 f"{keyed.get('dropped')} messages (should be lossless)")
+    durable = results.get("durable")
+    if durable is not None:
+        if durable.get("publish_overhead_x", 99.0) > 2.0:
+            failures.append(
+                f"durable: publishing on a durable subject must cost <= 2x "
+                f"fire-and-forget (got {durable.get('publish_overhead_x')}x; "
+                f"plain={durable.get('plain_msgs_per_s')} msgs/s, "
+                f"durable={durable.get('durable_msgs_per_s')} msgs/s)")
+        if durable.get("replayed_records", -1) != durable.get("log_depth", 0):
+            failures.append(
+                f"durable: late-joiner replay must drain the full retained "
+                f"history (replayed {durable.get('replayed_records')} of "
+                f"{durable.get('log_depth')} records)")
     return failures
 
 

@@ -25,6 +25,7 @@ echo "== examples (headless) =="
 python examples/quickstart.py
 python examples/fever_screening.py
 python examples/stream_reuse.py
+python examples/replay_corpus.py
 # the LM examples (now v2 fluent-DSL apps) need jax — full-deps leg only
 if python -c "import jax" 2>/dev/null; then
     echo "== examples (headless, jax) =="
@@ -50,6 +51,12 @@ echo "== benchmarks: keyed stateful scaling gate =="
 # >=2x with zero per-key ordering violations and zero lost state across a
 # forced mid-run scale-down (pure platform code — runs on both matrix legs)
 python -m benchmarks.run --only keyed --gate
+
+echo "== benchmarks: durable publish overhead gate =="
+# writes BENCH_durable.json; fails if publishing on a durable subject costs
+# more than 2x fire-and-forget, or a late joiner's replay does not drain the
+# full retained history (pure platform code — runs on both matrix legs)
+python -m benchmarks.run --only durable --gate
 
 echo "== benchmarks: productivity claim =="
 # writes BENCH_loc.json

@@ -9,8 +9,10 @@ from .bus import (KEYED_PARTITIONS, BusError, KeyedGroup, MessageBus,
                   decode_message, decode_payload, encode_message,
                   encode_payload, drain, partition_of, partition_owner,
                   ring_assignment, stable_hash)
-from .compression import CompressionError, codec_name
+from .compression import CompressionError, codec_name, train_dictionary
 from .dsl import App, DSLError, GadgetHandle, SchemaMismatch, StreamHandle, connect
+from .durable import (SNAPSHOT_TABLE, DurableError, DurableLog, Retention,
+                      iter_log, resolve_replay_from, schema_fingerprint)
 from .entities import (ActuatorSpec, AnalyticsUnitSpec, DatabaseSpec,
                        DriverSpec, EntityKind, GadgetSpec, Placement,
                        SensorSpec, StreamSpec)
@@ -26,7 +28,9 @@ __all__ = [
     "App", "DSLError", "GadgetHandle", "SchemaMismatch", "StreamHandle",
     "connect",
     "Application", "AppValidationError",
-    "CompressionError", "codec_name",
+    "CompressionError", "codec_name", "train_dictionary",
+    "SNAPSHOT_TABLE", "DurableError", "DurableLog", "Retention",
+    "iter_log", "resolve_replay_from", "schema_fingerprint",
     "KEYED_PARTITIONS", "BusError", "KeyedGroup", "MessageBus", "QueueGroup",
     "Subscription", "Unauthorized", "UnknownSubject",
     "decode_message", "decode_payload", "encode_message", "encode_payload",

@@ -34,6 +34,22 @@ Subject-based pub/sub with:
   crosses a host boundary.  In-process delivery passes payloads by reference;
   ``wire=True`` subscriptions force the encode/decode round-trip, which tests
   use to prove payloads are wire-safe.
+* **durable subjects** (``durable.py``) — :meth:`MessageBus.make_durable`
+  attaches an append-only :class:`~.durable.DurableLog` to a subject;
+  ``publish`` then appends BEFORE delivering and stamps the log position on
+  the message as ``headers["offset"]``.  ``subscribe(replay_from=...)``
+  drains that history (offset / timestamp / ``"earliest"``) and hands off to
+  live delivery with **no gaps and no duplicates**: append-before-deliver
+  means every offset below the head is readable from the log, the
+  replay→live flip happens only when the cursor has reached the head (under
+  the group lock, so no publish can slip between the check and the flip),
+  and live items whose offset falls inside the replayed range are deduped.
+  A replaying member of a round-robin group is NOT counted healthy for live
+  delivery until caught up — otherwise live messages would interleave ahead
+  of history in its mailbox (its share is healed from the log, not lost).
+  Keyed members keep their ring partitions while replaying: live messages
+  queue behind the replay and the cursor dedupe drops the overlap at the
+  flip, which also keeps partitions from moving twice per recovery.
 
 This is deliberately an in-process bus: the container is one host.  The class
 is factored so a NATS-backed implementation only replaces ``_deliver``.
@@ -45,12 +61,16 @@ import io
 import queue
 import threading
 import time
-from typing import Iterable, Sequence
+from collections import deque
+from typing import TYPE_CHECKING, Iterable, Sequence
 
 import msgpack
 import numpy as np
 
 from .schema import Message, StreamSchema
+
+if TYPE_CHECKING:  # pragma: no cover - durable imports encode_message from us
+    from .durable import DurableLog, Retention
 
 
 # ---------------------------------------------------------------------------
@@ -190,6 +210,14 @@ class Subscription:
     Mailbox items are stored as ``(tag, item)`` pairs; ``tag`` is the keyed
     partition index (None for broadcast/round-robin delivery), which is how
     the bus keeps an exact per-partition backlog without touching payloads.
+
+    On a **durable** subject the subscription also carries replay state: a
+    cursor (the next log offset it expects), set either at the live head
+    (plain subscribe — used to heal drop-oldest gaps from the log on
+    broadcast subscriptions) or at a historical position
+    (``replay_from=...`` — :meth:`next_batch` then serves from the log until
+    the cursor reaches the head, flips to live atomically against the
+    group's pick, and dedupes the overlap).
     """
 
     def __init__(self, subject: str, maxsize: int, wire: bool, name: str = "",
@@ -205,6 +233,42 @@ class Subscription:
         self._lock = threading.Lock()
         # set by KeyedGroup.add: consumption callback for partition backlog
         self._keyed_group: "KeyedGroup | None" = None
+        # durable replay state (set by MessageBus.subscribe on durable
+        # subjects; _group_ref is the QueueGroup whose lock orders the
+        # replay->live flip against concurrent pick()s)
+        self._log: "DurableLog | None" = None
+        self._group_ref: "QueueGroup | None" = None
+        self._replay_start = 0      # first offset this sub replayed itself
+        self._replayed_upto = 0     # frozen at flip: log served [start, upto)
+        self._cursor = 0            # next offset it expects to see
+        self._join_head = 0         # log head when this sub joined (offsets
+        #                             at/after it were published live to it)
+        self._replayed_set: set = set()  # post-join offsets actually served
+        #                             from the log (keyed replay filters, so
+        #                             a range cannot stand in for this set)
+        self._replay_active = False
+        self.replayed = 0           # messages served from the log
+        self.deduped = 0            # live messages dropped as replay overlap
+        self.healed = 0             # drop-oldest gaps refilled from the log
+        # gap-heal surplus: healing inside next_batch can surface MORE than
+        # max_n messages; the overflow queues here and is served first on
+        # the next pop (single-consumer, like the mailbox itself)
+        self._pending: deque = deque()
+
+    @property
+    def replaying(self) -> bool:
+        """True until the replay cursor has caught the log head.  A replaying
+        member is skipped by round-robin live delivery (its share is healed
+        from the log) — the guard that keeps live messages from interleaving
+        ahead of history."""
+        return self._replay_active
+
+    def replay_lag(self) -> int:
+        """Offsets between this subscription's cursor and the log head
+        (0 = caught up / not durable) — the sidecar's replay-lag metric."""
+        if self._log is None:
+            return 0
+        return max(0, self._log.next_offset() - self._cursor)
 
     def _note_consumed(self, tag) -> None:
         if tag is not None and self._keyed_group is not None:
@@ -250,9 +314,29 @@ class Subscription:
         Group/keyed ``note_consumed`` accounting (per-partition backlog) and
         wire decoding match :meth:`next` item for item.  Returns ``[]`` on
         timeout or close.
+
+        On a durable subject this is also where replay and the gapless
+        handoff live: while replaying, batches come from the log; once the
+        cursor reaches the head the subscription flips to the mailbox, where
+        offsets inside the replayed range are deduped and (broadcast only)
+        offsets beyond the cursor trigger a log refill of whatever
+        drop-oldest evicted.  May return ``[]`` before the timeout when a
+        whole batch deduped away — callers already treat ``[]`` as a tick.
         """
         if max_n < 1:
             return []
+        if self._replay_active:
+            got = self._replay_batch(max_n)
+            if got:
+                return got
+            # caught up — flipped to live; fall through to the mailbox
+        if self._pending:
+            # surplus from an earlier gap-heal — serve it before touching
+            # the mailbox so healed offsets keep their order
+            out = []
+            while self._pending and len(out) < max_n:
+                out.append(self._pending.popleft())
+            return out
         try:
             first = self._q.get(timeout=timeout)
         except queue.Empty:
@@ -273,11 +357,112 @@ class Subscription:
                 break  # close sentinel — it is always the last item
             tag, item = pair
             self._note_consumed(tag)
-            out.append(decode_message(item) if self.wire else item)
+            msg = decode_message(item) if self.wire else item
+            if self._log is not None:
+                off = msg.headers.get("offset")
+                if off is not None:
+                    if (self._replay_start <= off < self._join_head
+                            or off in self._replayed_set):
+                        # replay overlap: this copy was served from the log
+                        # — NOT a loss.  Pre-join history is a contiguous
+                        # range; post-join offsets are tracked exactly,
+                        # because keyed replay filters peer-owned offsets
+                        # out of the log stream and their live copies (e.g.
+                        # an adopted orphan partition) must pass through.
+                        self.deduped += 1
+                        continue
+                    if off > self._cursor and self.group is None:
+                        # broadcast mailbox overflowed (drop-oldest) — the
+                        # durable log still has the evicted span; refill it
+                        # so the consumer sees every offset exactly once.
+                        # Group members skip this: their mailbox offsets are
+                        # legitimately sparse (peers own the rest).
+                        out.extend(self._heal_gap(off))
+                    if off >= self._cursor:
+                        self._cursor = off + 1
+            out.append(msg)
+        if len(out) > max_n:
+            # gap-heal grew the batch past what the caller asked for —
+            # park the tail; the next pop serves it before the mailbox
+            self._pending.extend(out[max_n:])
+            out = out[:max_n]
         return out
 
+    def _replay_batch(self, max_n: int) -> list[Message]:
+        """One replay step: a batch from the log, or ``[]`` after atomically
+        flipping to live delivery because the cursor reached the head."""
+        while True:
+            msgs = self._log.read(self._cursor, max_n)  # type: ignore[union-attr]
+            if msgs:
+                self._cursor = msgs[-1].headers["offset"] + 1
+                kg = self._keyed_group
+                if kg is not None:
+                    # A keyed member replays pre-join history in full, but an
+                    # offset appended AFTER it joined the ring is already
+                    # being delivered live to its partition's owner — serving
+                    # a peer-owned copy from the log here would double-deliver
+                    # it across the group.  Own partitions still come from the
+                    # log (the live mailbox copy dedupes at the flip).
+                    ring = kg.assignment()
+                    msgs = [m for m in msgs
+                            if m.headers["offset"] < self._join_head
+                            or ring.get(partition_of(m.payload.get(kg.key),
+                                                     kg.n_partitions))
+                            == self.name]
+                    if not msgs:
+                        continue  # the whole span was peers' — keep reading
+                for m in msgs:
+                    off = m.headers["offset"]
+                    if off >= self._join_head:
+                        # published live while replaying — a mailbox copy may
+                        # exist and must be deduped at the flip
+                        self._replayed_set.add(off)
+                self.replayed += len(msgs)
+                return msgs
+            if self.closed:
+                self._replayed_upto = self._cursor
+                self._replay_active = False
+                return []
+            # Nothing left to read — but a publish may append between that
+            # read and here.  The flip must serialize against the group's
+            # pick(): publish appends BEFORE picking, so under the group
+            # lock "cursor >= head" proves every picked-while-replaying
+            # message is already behind the cursor, and every later publish
+            # will see this member live.  Ungrouped subs flip under their
+            # mailbox lock (broadcast delivery needs no pick).
+            lock = self._group_ref._lock if self._group_ref is not None \
+                else self._lock
+            with lock:
+                if self._cursor >= self._log.next_offset():  # type: ignore[union-attr]
+                    self._replayed_upto = self._cursor
+                    self._replay_active = False
+                    kg = self._keyed_group
+                    if kg is not None and kg._orphaned and not any(
+                            m.replaying for m in kg.members):
+                        # recovery complete: every orphaned partition's
+                        # history is replayed — the ring owns them again
+                        kg._orphaned.clear()
+                    return []
+            # lost the race with a publish — loop; the next read finds it
+
+    def _heal_gap(self, upto: int) -> list[Message]:
+        """Refill ``[cursor, upto)`` from the log (drop-oldest healing).
+        Offsets already evicted by retention stay lost (counted as drops
+        when they were evicted)."""
+        healed: list[Message] = []
+        while self._cursor < upto:
+            got = [m for m in
+                   self._log.read(self._cursor, upto - self._cursor)  # type: ignore[union-attr]
+                   if m.headers["offset"] < upto]
+            if not got:
+                break  # span evicted by retention
+            healed.extend(got)
+            self._cursor = got[-1].headers["offset"] + 1
+        self.healed += len(healed)
+        return healed
+
     def qsize(self) -> int:
-        return self._q.qsize()
+        return self._q.qsize() + len(self._pending)
 
     def _seal(self) -> None:
         """Mark closed WITHOUT waking readers (no sentinel, no eviction).
@@ -401,7 +586,12 @@ class QueueGroup:
     def _pick_locked(self, msg) -> tuple[Subscription | None, object]:
         """(member, tag) for a fresh message; None when no healthy member.
 
-        Base policy: round-robin from the cursor, skipping closed members.
+        Base policy: round-robin from the cursor, skipping closed members —
+        and **replaying** ones: a member still draining durable history must
+        not receive live messages, or they would interleave ahead of that
+        history in its mailbox.  Its skipped share is not lost — the subject
+        is durable (replay implies a log), so the member reads those offsets
+        from the log before it flips live.
         """
         n = len(self.members)
         if n == 0:
@@ -410,7 +600,7 @@ class QueueGroup:
             else 0
         for i in range(n):
             m = self.members[(start + i) % n]
-            if not m.closed:
+            if not m.closed and not m.replaying:
                 self._next = self.members[(start + i + 1) % n]
                 return m, None
         return None, None
@@ -498,6 +688,7 @@ class QueueGroup:
             "rerouted": self.rerouted,
             "dropped": sum(m.dropped for m in self.members),
             "backlog": sum(m.qsize() for m in self.members),
+            "replaying": [m.name for m in self.members if m.replaying],
         }
 
     def snapshot(self) -> dict:
@@ -546,6 +737,13 @@ class KeyedGroup(QueueGroup):
         # would deadlock.  This one is a leaf: it never takes another.
         self._pb_lock = threading.Lock()
         self._partition_backlog: dict[int, int] = {}
+        # partitions orphaned by a member leaving a DURABLE subject: their
+        # live traffic is parked on whichever member is replaying (the
+        # recoverer adopts them) so the rendezvous runner-up cannot apply
+        # new messages ahead of the leaver's unrecovered history.  Cleared
+        # when the last replaying member catches up; discarded per partition
+        # if traffic arrives while nobody is recovering.
+        self._orphaned: set[int] = set()
         # assignment map memo, keyed on the healthy-member name tuple — the
         # ring is pure in membership, and recomputing it costs n_partitions
         # x members hashes, which sits on the autoscaler's metrics poll path
@@ -565,6 +763,12 @@ class KeyedGroup(QueueGroup):
         sub._keyed_group = self
 
     def _healthy_names(self) -> list[str]:
+        # Replaying members stay IN the keyed ring (unlike round-robin
+        # groups, which skip them): moving their partitions away and back
+        # would churn per-key state twice per recovery.  Live messages for
+        # their partitions queue behind the replay — the pump serves log
+        # batches first, and the cursor dedupe drops the mailbox overlap at
+        # the flip, so history still cannot be interleaved or double-applied.
         return [m.name for m in self.members if not m.closed]
 
     def _ring_locked(self) -> dict[int, str]:
@@ -585,10 +789,33 @@ class KeyedGroup(QueueGroup):
                 return m
         return None  # pragma: no cover - owner drawn from healthy names
 
+    def _remove_locked(self, sub: Subscription) -> None:
+        if sub in self.members and sub._log is not None:
+            # durable subject: park the leaver's partitions until a
+            # recoverer replays their history (see _orphaned above)
+            names = [m.name for m in self.members
+                     if m is sub or not m.closed]
+            ring = ring_assignment(names, self.n_partitions)
+            self._orphaned.update(
+                p for p, owner in ring.items() if owner == sub.name)
+        super()._remove_locked(sub)
+
+    def _route_locked(self, p: int) -> Subscription | None:
+        if p in self._orphaned:
+            recoverer = next(
+                (m for m in self.members if m.replaying and not m.closed),
+                None)
+            if recoverer is not None:
+                return recoverer
+            # nobody is recovering — hand the partition back to the ring
+            # (availability over strict order, like drop-oldest mailboxes)
+            self._orphaned.discard(p)
+        return self._member_for_partition(p)
+
     def _pick_locked(self, msg) -> tuple[Subscription | None, object]:
         payload = msg.payload if msg is not None else {}
         p = partition_of(payload.get(self.key), self.n_partitions)
-        member = self._member_for_partition(p)
+        member = self._route_locked(p)
         if member is not None:
             with self._pb_lock:
                 self._partition_backlog[p] = \
@@ -597,11 +824,12 @@ class KeyedGroup(QueueGroup):
 
     def _repick_locked(self, tag, item) -> tuple[Subscription | None, object]:
         """Drained backlog keeps its partition: the item re-homes to the
-        partition's NEW owner (the rendezvous runner-up), never round-robin —
-        that is what keeps all of a key's messages on one member."""
+        partition's NEW owner (the rendezvous runner-up — or the recovering
+        member for an orphaned partition), never round-robin — that is what
+        keeps all of a key's messages on one member."""
         if tag is None:  # pragma: no cover - keyed items are always tagged
             return None, None
-        member = self._member_for_partition(tag)
+        member = self._route_locked(tag)
         if member is not None:
             with self._pb_lock:
                 self._partition_backlog[tag] = \
@@ -645,6 +873,30 @@ class KeyedGroup(QueueGroup):
 # The bus
 # ---------------------------------------------------------------------------
 
+def _resolve_replay_start(log: "DurableLog", replay_from) -> int:
+    """A ``replay_from`` argument -> starting log offset.
+
+    ``"snapshot"`` never reaches here: the operator resolves it against the
+    stream's state database (``durable.resolve_replay_from``) before the
+    sidecar subscribes."""
+    if replay_from == "earliest":
+        return log.earliest_offset()
+    if replay_from == "snapshot":
+        raise BusError(
+            "replay_from='snapshot' must be resolved against the stream's "
+            "state database first (durable.resolve_replay_from); the bus "
+            "only accepts offsets, timestamps, or 'earliest'")
+    if isinstance(replay_from, bool):
+        raise BusError(f"bad replay_from {replay_from!r}")
+    if isinstance(replay_from, int):
+        return max(0, replay_from)
+    if isinstance(replay_from, float):
+        return log.offset_at_ts(replay_from)
+    raise BusError(
+        f"bad replay_from {replay_from!r}: expected an int offset, a float "
+        f"timestamp, or 'earliest'")
+
+
 class MessageBus:
     """Subject-based pub/sub with registration, authz, schema enforcement."""
 
@@ -660,6 +912,7 @@ class MessageBus:
         # kept on the SUBJECT so the loss stays visible in stats() after the
         # subscription itself is gone
         self._lost: dict[str, int] = {}
+        self._durable: dict[str, "DurableLog"] = {}  # subject -> append log
         self._default_queue_size = default_queue_size
         self._closed = False
 
@@ -684,6 +937,34 @@ class MessageBus:
             del self._subjects[subject]
             del self._published[subject]
             self._lost.pop(subject, None)
+            log = self._durable.pop(subject, None)
+        if log is not None:
+            log.close()  # flush the tail; on-disk history stays readable
+
+    def make_durable(self, subject: str, *,
+                     retention: "Retention | dict | None" = None,
+                     root: str | None = None,
+                     **log_kwargs) -> "DurableLog":
+        """Attach an append-only log to a registered subject (idempotent per
+        subject is NOT supported — the operator declares durability exactly
+        once, at stream/sensor registration).  From now on every publish
+        appends before delivering and carries ``headers["offset"]``, and
+        ``subscribe(replay_from=...)`` becomes legal on the subject."""
+        from .durable import DurableLog
+        with self._lock:
+            if subject not in self._subjects:
+                raise UnknownSubject(subject)
+            if subject in self._durable:
+                raise BusError(f"subject {subject!r} is already durable")
+            log = DurableLog(subject, retention=retention, root=root,
+                             schema=self._subjects[subject], **log_kwargs)
+            self._durable[subject] = log
+            return log
+
+    def durable_log(self, subject: str) -> "DurableLog | None":
+        """The subject's append log, or None for fire-and-forget subjects."""
+        with self._lock:
+            return self._durable.get(subject)
 
     def subjects(self) -> list[str]:
         with self._lock:
@@ -727,9 +1008,17 @@ class MessageBus:
             schema = self._subjects[subject]
             subs = list(self._subs[subject])
             groups = list(self._groups.get(subject, {}).values())
+            log = self._durable.get(subject)
         self._authorize(token, subject)
         schema.validate(payload)
         msg = Message(subject=subject, payload=payload, headers=headers or {})
+        if log is not None:
+            # append BEFORE delivering: by the time any subscriber can see
+            # this offset live, the log can serve it — the invariant the
+            # gapless replay->live handoff rests on.  The offset rides the
+            # message (and its wire encoding) so consumers can pair state
+            # with log positions.
+            msg.headers["offset"] = log.append(msg)
         self._deliver(msg, subs, groups)
         with self._lock:
             if subject in self._published:
@@ -781,13 +1070,21 @@ class MessageBus:
     def subscribe(self, subject: str, *, token: str, maxsize: int | None = None,
                   wire: bool = False, name: str = "",
                   group: str | None = None, key: str | None = None,
-                  partitions: int = KEYED_PARTITIONS) -> Subscription:
+                  partitions: int = KEYED_PARTITIONS,
+                  replay_from=None) -> Subscription:
         """``group`` joins the named queue group on this subject: each message
         goes to exactly one healthy member of each group, while ungrouped
         subscriptions keep broadcast semantics.  ``key`` upgrades the group to
         keyed delivery: the named payload field is hashed onto a partition
         ring and every message for a key goes to the same member.  All
-        members of one group must agree on the policy (and key)."""
+        members of one group must agree on the policy (and key).
+
+        ``replay_from`` (durable subjects only) starts the subscription on
+        the log instead of live: an ``int`` is a log offset, a ``float`` is
+        a timestamp (first record at-or-after it), ``"earliest"`` is the
+        oldest retained offset.  ``next``/``next_batch`` serve history until
+        the cursor reaches the head, then flip to live delivery — no gaps,
+        no duplicates across the handoff."""
         self._authorize(token, subject)
         if key is not None and group is None:
             raise BusError("keyed delivery needs a group name")
@@ -799,6 +1096,25 @@ class MessageBus:
                 raise UnknownSubject(subject)
             sub = Subscription(subject, maxsize or self._default_queue_size,
                                wire=wire, name=name, group=group)
+            log = self._durable.get(subject)
+            if replay_from is not None:
+                if log is None:
+                    raise BusError(
+                        f"subject {subject!r} is not durable; replay_from "
+                        f"requires make_durable (StreamSpec durable=True)")
+                sub._log = log
+                sub._cursor = _resolve_replay_start(log, replay_from)
+                sub._replay_start = sub._replayed_upto = sub._cursor
+                sub._join_head = log.next_offset()
+                sub._replay_active = True
+            elif log is not None:
+                # live-from-head on a durable subject: the cursor still
+                # tracks offsets so broadcast subscriptions heal drop-oldest
+                # gaps from the log (the dedupe window stays empty)
+                sub._log = log
+                sub._cursor = log.next_offset()
+                sub._replay_start = sub._replayed_upto = sub._cursor
+                sub._join_head = sub._cursor
             if group is not None:
                 g = self._groups[subject].get(group)
                 if g is None:
@@ -824,6 +1140,7 @@ class MessageBus:
                         f"group {group!r} on {subject!r} is keyed on "
                         f"{g.key!r}; members must subscribe with key=")  # type: ignore[attr-defined]
                 g.add(sub)
+                sub._group_ref = g
             self._subs[subject].append(sub)
             return sub
 
@@ -885,12 +1202,18 @@ class MessageBus:
                     "backlog": sum(s.qsize() for s in self._subs[subject]),
                     "dropped": sum(s.dropped for s in self._subs[subject]),
                     "lost": self._lost.get(subject, 0),
+                    "durable": (self._durable[subject].info()
+                                if subject in self._durable else None),
                     "groups": {name: g.snapshot()
                                for name, g in
                                self._groups.get(subject, {}).items()},
                     "subscriptions": {
                         s.name: {"group": s.group, "backlog": s.qsize(),
-                                 "received": s.received, "dropped": s.dropped}
+                                 "received": s.received, "dropped": s.dropped,
+                                 "replaying": s.replaying,
+                                 "replayed": s.replayed,
+                                 "replay_lag": s.replay_lag(),
+                                 "deduped": s.deduped, "healed": s.healed}
                         for s in self._subs[subject]
                     },
                 }
@@ -923,6 +1246,9 @@ class MessageBus:
             for subs in self._subs.values():
                 for s in subs:
                     s.close()
+            logs = list(self._durable.values())
+        for log in logs:
+            log.close()  # flush root-backed tails
 
 
 def drain(sub: Subscription, n: int, timeout: float = 5.0) -> list[Message]:

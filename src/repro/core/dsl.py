@@ -63,10 +63,12 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import inspect
+import time
 from collections import deque
 from typing import Any, Callable, Iterator, Mapping, Sequence
 
 from .app import Application, AppValidationError
+from .durable import DurableError, Retention
 from .entities import (ActuatorSpec, AnalyticsUnitSpec, DatabaseSpec,
                        DriverSpec, GadgetSpec, Placement, SensorSpec,
                        StreamSpec)
@@ -289,6 +291,87 @@ class StreamHandle:
         self.app._taps.add(self.name)
         return self
 
+    # -- durability -----------------------------------------------------------
+    def durable(self, *, retention: Mapping[str, Any] | None = None
+                ) -> "StreamHandle":
+        """Attach an append-only log to this stream's subject.
+
+        Every published message is retained (codec-tagged, rolling segments)
+        and late consumers can :meth:`replay` the history — the subject's
+        past survives consumer churn and crashes.  ``retention`` bounds the
+        log with any of ``max_records`` / ``max_age_s`` / ``max_bytes``
+        (whole sealed segments are evicted oldest-first once a limit is
+        exceeded; omitted = unbounded).
+
+        Works on sensor streams (corpus/event sources) and derived streams
+        alike.  A durable stream always stays a bus subject — the fusion
+        pass treats it as a segment barrier rather than folding its subject
+        away into a device program.
+        """
+        try:
+            Retention.of(retention)          # fail at the wiring line
+        except DurableError as e:
+            raise DSLError(f"stream {self.name!r}: {e}") from e
+        for i, s in enumerate(self.app._sensors):
+            if s.name == self.name:
+                self.app._sensors[i] = dataclasses.replace(
+                    s, durable=True, retention=retention)
+                return self
+        index = next((i for i, s in enumerate(self.app._streams)
+                      if s.name == self.name), None)
+        if index is None:
+            raise DSLError(
+                f"{self.name!r} is not a stream of app {self.app.name!r}; "
+                f"external streams are made durable by their owning app")
+        self.app._streams[index] = dataclasses.replace(
+            self.app._streams[index], durable=True, retention=retention)
+        return self
+
+    def replay(self, *, from_: Any = "earliest") -> "StreamHandle":
+        """Start this stream's instances on their inputs' durable logs.
+
+        ``from_`` is an int log offset, a float unix timestamp,
+        ``"earliest"`` (the oldest retained record), or ``"snapshot"`` —
+        resolved at spawn time against the stream's platform database to
+        the suffix after the last exactly-once recovery watermark (the
+        crash-recovery mode for keyed stateful stages).  History is served
+        first, then the subscription switches to live delivery with no gap
+        and no duplicate at the handoff.
+
+        Every input subject must be durable (:meth:`durable` upstream);
+        inputs owned by other apps are checked at deploy by the operator.
+        """
+        if isinstance(from_, bool) or not (
+                isinstance(from_, (int, float))
+                or from_ in ("earliest", "snapshot")):
+            raise DSLError(
+                f"replay(from_={from_!r}): expected an int offset, a float "
+                f"timestamp, 'earliest' or 'snapshot'")
+        index = next((i for i, s in enumerate(self.app._streams)
+                      if s.name == self.name), None)
+        if index is None:
+            raise DSLError(
+                f"{self.name!r} is not a derived stream of app "
+                f"{self.app.name!r}; .replay() configures where a stream's "
+                f"instances START on their inputs — sensors have no inputs "
+                f"(use op.subscribe(..., replay_from=...) for external "
+                f"subscribers)")
+        spec = self.app._streams[index]
+        durable_here = ({s.name for s in self.app._sensors if s.durable}
+                        | {s.name for s in self.app._streams if s.durable})
+        declared = ({s.name for s in self.app._sensors}
+                    | {s.name for s in self.app._streams})
+        missing = [i for i in spec.inputs
+                   if i in declared and i not in durable_here]
+        if missing:
+            raise DSLError(
+                f"stream {self.name!r}: .replay() needs durable inputs, but "
+                f"{missing} are not durable — mark them with "
+                f".durable(retention=...) first")
+        self.app._streams[index] = dataclasses.replace(spec,
+                                                       replay_from=from_)
+        return self
+
     def scaled(self, *, delivery: str | None = None,
                instances: int | None = None,
                max_instances: int | None = None,
@@ -421,7 +504,9 @@ class StreamHandle:
 
     def reduce(self, fn: Callable[[Any, dict], Any], *, init: Any = None,
                name: str | None = None,
-               emits: StreamSchema | None = None) -> "StreamHandle":
+               emits: StreamSchema | None = None,
+               ttl: float | None = None, max_keys: int | None = None,
+               snapshot_every: int = 64) -> "StreamHandle":
         """Per-key running reduction: for each payload emit
         ``{<key_field>: k, "value": fn(acc, payload)}`` where ``acc`` is the
         key's previous accumulator (``init`` the first time).
@@ -432,20 +517,60 @@ class StreamHandle:
         pins each key to one instance (exactly-once, in-order folds) and a
         scale event re-homes a partition's keys to an instance that reads
         the same store — no state is lost or forked.
+
+        ``ttl`` / ``max_keys`` bound the store for long-tail key spaces
+        (seconds of idle before a key's accumulator expires / oldest-written
+        eviction above the cap).
+
+        On a durable input the fold is **exactly-once through crashes**:
+        each update is applied via :meth:`~.state.KeyedStore.apply_once`
+        keyed by the message's durable-log offset, so a recovery replay
+        (``.replay(from_="snapshot")``) re-delivers history without
+        double-applying or re-emitting anything already folded in.  Every
+        ``snapshot_every`` applied updates the instance records a recovery
+        watermark (:meth:`~.state.KeyedStore.snapshot`), bounding how much
+        log a restarted member has to replay.
         """
         if self.key is None:
             raise DSLError(
                 f"stream {self.name!r}: .reduce() is a per-key combinator; "
                 f"declare the partition field with .key_by(field) first")
+        if snapshot_every < 1:
+            raise DSLError(
+                f"snapshot_every must be >= 1, got {snapshot_every}")
         field = self.key
 
         def factory(ctx):
-            store = KeyedStore(ctx.db, "reduce")
+            store = KeyedStore(ctx.db, "reduce", ttl=ttl, max_keys=max_keys)
+            stats = {"snapshots": 0, "last_snapshot_ts": None}
+            # watermark = highest durable-log offset this instance applied;
+            # since_snapshot counts applied updates since the last watermark
+            state = {"watermark": -1, "since_snapshot": 0}
 
-            def process(stream, payload):
-                acc = fn(store.get(payload.get(field), init), payload)
-                store.put(payload.get(field), acc)
-                return {field: payload.get(field), "value": acc}
+            def process(stream, payload, headers=None):
+                k = payload.get(field)
+                offset = (headers or {}).get("offset")
+                acc, applied = store.apply_once(
+                    k, offset, lambda prev: fn(prev, payload), init=init)
+                if not applied:
+                    # this log position is already folded into the store
+                    # (recovery replay overlapping live delivery, or a
+                    # rebalance racing a recovery): emitting again would
+                    # duplicate downstream — exactly-once means skipping
+                    # the side effect too
+                    return None
+                if offset is not None:
+                    if offset > state["watermark"]:
+                        state["watermark"] = offset
+                    state["since_snapshot"] += 1
+                    if state["since_snapshot"] >= snapshot_every:
+                        store.snapshot(ctx.instance_id, state["watermark"])
+                        state["since_snapshot"] = 0
+                        stats["snapshots"] += 1
+                        stats["last_snapshot_ts"] = time.time()
+                return {field: k, "value": acc}
+            process.wants_headers = True
+            process.stats = stats
             return process
         factory.__name__ = getattr(fn, "__name__", "reduce")
         out_schema = emits or StreamSchema.untyped()
@@ -597,9 +722,15 @@ class StreamHandle:
         gadget._attach(self)
         return gadget
 
-    def subscribe(self, op: Operator, *, maxsize: int = 256):
-        """Third-party subscription to this stream on a live operator (§3)."""
-        return op.subscribe(self.name, maxsize=maxsize)
+    def subscribe(self, op: Operator, *, maxsize: int = 256,
+                  replay_from: Any = None):
+        """Third-party subscription to this stream on a live operator (§3).
+
+        On a durable stream, ``replay_from`` (offset / timestamp /
+        ``"earliest"``) serves the retained history first, then switches to
+        live delivery — late-joining consumers see the full past."""
+        return op.subscribe(self.name, maxsize=maxsize,
+                            replay_from=replay_from)
 
 
 class GadgetHandle:

@@ -122,6 +122,14 @@ class SensorSpec:
     name: str
     driver: str
     config: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    #: Attach an append-only log to the sensor's output subject: every
+    #: published reading is retained (subject to ``retention``) and late
+    #: consumers can ``replay_from`` it.  Corpus/event sources set this so
+    #: analytics added after the fact still see history.
+    durable: bool = False
+    #: Retention knobs for the durable log — a dict with any of
+    #: ``max_records`` / ``max_age_s`` / ``max_bytes`` (None = unbounded).
+    retention: Mapping[str, Any] | None = None
 
     kind = EntityKind.SENSOR
 
@@ -160,6 +168,20 @@ class StreamSpec:
     #: defers to the unit's default; 1 forces per-message dispatch.  Set via
     #: the DSL's ``.scaled(max_batch=)``.
     max_batch: int | None = None
+    #: Attach an append-only log to this stream's OUTPUT subject (DSL
+    #: ``.durable(retention=...)``): downstream consumers may arrive late
+    #: and replay, and the subject's history survives consumer churn.
+    durable: bool = False
+    #: Retention for the durable output log (dict of ``max_records`` /
+    #: ``max_age_s`` / ``max_bytes``; None = unbounded).
+    retention: Mapping[str, Any] | None = None
+    #: Where this stream's instances START on their (durable) INPUT
+    #: subjects: ``None`` = live only (fire-and-forget semantics), an int
+    #: log offset, a float timestamp, ``"earliest"``, or ``"snapshot"`` —
+    #: resolved by the operator against the stream's state database to the
+    #: suffix after the last recovery watermark (exactly-once keyed
+    #: recovery).  Requires every input subject to be durable.
+    replay_from: Any = None
 
     kind = EntityKind.STREAM
 

@@ -168,8 +168,19 @@ def plan_segments(app: Application,
         """The unique fusible successor of ``upstream``, or None (barrier)."""
         if consumers.get(upstream.name, 0) != 1 or upstream.name in taps:
             return None  # multi-subscriber tap / promised bus subject
+        if upstream.durable:
+            # a durable interior stream is a promise just like a tap: its
+            # append-only log only fills if publishes hit the bus subject,
+            # so it must stay a segment boundary
+            return None
         nxt = next((s for s in app.streams if upstream.name in s.inputs), None)
         if nxt is None or not _fusible(nxt, aus):
+            return None
+        if nxt.replay_from is not None:
+            # a replaying consumer starts on its OWN input subjects' logs;
+            # folding it mid-segment would re-anchor the replay onto the
+            # segment entry's subject.  It may still head its own segment
+            # (the fused unit inherits the entry's replay_from).
             return None
         if nxt.delivery == "keyed" and not (upstream.delivery == "keyed"
                                             and upstream.key == nxt.key):
@@ -558,12 +569,19 @@ def fuse_application(app: Application, *,
         # key policy is inherited wholesale (each key sticks to one fused
         # instance).  Mid-chain keyed streams never get here — they are
         # segment barriers in plan_segments.
+        # durability follows the edges that remain on the bus: the ENTRY's
+        # replay_from (the fused unit consumes the entry's input subjects)
+        # and the EXIT's durable log (the fused stream publishes under the
+        # exit's name).  Interior durable streams never get here — they are
+        # segment barriers in plan_segments.
         fused_streams.append(StreamSpec(
             name=exit_.name, analytics_unit=name, inputs=tuple(entry.inputs),
             fixed_instances=1 if any(s.fixed_instances == 1 for s in segment)
             else None,
             delivery=entry.delivery, key=entry.key,
-            max_batch=seg_max_batch))
+            max_batch=seg_max_batch,
+            durable=exit_.durable, retention=exit_.retention,
+            replay_from=entry.replay_from))
         folded.update(s.name for s in segment)
 
     streams = [s for s in app.streams if s.name not in folded] + fused_streams

@@ -27,11 +27,13 @@ would make it unrecoverable.  Faithfully implemented rules:
 """
 from __future__ import annotations
 
+import os
 import threading
 import time
 from typing import Any, Callable, Mapping
 
 from .bus import MessageBus
+from .durable import DurableError, Retention, resolve_replay_from
 from .entities import (ActuatorSpec, AnalyticsUnitSpec, DatabaseSpec,
                        DriverSpec, GadgetSpec, Placement, SensorSpec,
                        StreamSpec)
@@ -57,6 +59,7 @@ class Operator:
                  reconcile_interval_s: float = 0.2):
         self.bus = bus or MessageBus()
         self.store = StateStore(root=state_root)
+        self._state_root = state_root
         self.executor = Executor(self.bus)
         self.autoscaler = AutoScaler(scale_policy)
         self.straggler_factor = straggler_factor
@@ -88,6 +91,23 @@ class Operator:
     def _stream_names(self) -> set[str]:
         with self._lock:
             return set(self._sensors) | set(self._streams)
+
+    def _durable_root(self, subject: str) -> str | None:
+        """On-disk home for a subject's durable log (None = memory-only —
+        history then lives as long as the deployment, like memkv state)."""
+        if not self._state_root:
+            return None
+        return os.path.join(self._state_root, "durable", subject)
+
+    def _make_durable(self, subject: str,
+                      retention: Mapping[str, Any] | None) -> None:
+        try:
+            Retention.of(dict(retention) if retention else None)
+        except DurableError as e:
+            raise OperatorError(f"stream {subject!r}: {e}") from None
+        self.bus.make_durable(subject, retention=dict(retention)
+                              if retention else None,
+                              root=self._durable_root(subject))
 
     # =====================================================================
     # Code entities: drivers, AUs, actuators
@@ -232,6 +252,8 @@ class Operator:
             self._resolved[spec.name] = resolved
         # a registered sensor always generates a stream with the sensor's name
         self.bus.register_subject(spec.name, driver.output_schema)
+        if spec.durable:
+            self._make_durable(spec.name, spec.retention)
         if start:
             self._spawn_driver(spec, driver, resolved)
         else:
@@ -284,10 +306,24 @@ class Operator:
                 raise OperatorError(
                     f"stream {spec.name!r}: max_batch must be >= 1, "
                     f"got {spec.max_batch}")
+            if spec.retention is not None and not spec.durable:
+                raise OperatorError(
+                    f"stream {spec.name!r}: retention= requires durable=True")
             missing = [s for s in spec.inputs if s not in self._stream_names()]
             if missing:
                 raise CoherenceError(
                     f"stream {spec.name!r}: input streams not registered: {missing}")
+            if spec.replay_from is not None:
+                # replay reads history from the INPUT subjects' logs — every
+                # input must be durable, or the history simply does not exist
+                non_durable = [s for s in spec.inputs
+                               if self.bus.durable_log(s) is None]
+                if non_durable:
+                    raise CoherenceError(
+                        f"stream {spec.name!r}: replay_from="
+                        f"{spec.replay_from!r} requires durable inputs, but "
+                        f"{non_durable} are fire-and-forget (declare them "
+                        f"with durable=True)")
             if spec.delivery == "keyed":
                 # the hashed field must be a declared field of every typed
                 # input — a missing key would silently pile every message
@@ -311,6 +347,8 @@ class Operator:
             self._streams[spec.name] = spec
             self._resolved[spec.name] = resolved
         self.bus.register_subject(spec.name, au.output_schema)
+        if spec.durable:
+            self._make_durable(spec.name, spec.retention)
         n = spec.fixed_instances if spec.fixed_instances is not None else au.min_instances
         for _ in range(max(1, n)):
             self._spawn_au(spec, au, resolved)
@@ -325,6 +363,14 @@ class Operator:
             db_name = f"au-{spec.name}"
             db = (self.store.get(db_name) if self.store.exists(db_name)
                   else self.store.create(db_name))
+        # replay_from="snapshot" resolves at SPAWN time against the stream's
+        # state database: a restarted/crashed member replays only the log
+        # suffix after the last recovery watermark (falling back to
+        # "earliest" before any snapshot exists).  Replaying from an
+        # older-than-necessary offset is safe — KeyedStore.apply_once
+        # discards already-applied offsets — so the watermark is purely an
+        # efficiency bound, never a correctness one.
+        replay_from = resolve_replay_from(spec.replay_from, db)
         # group/keyed delivery: every instance of this stream (fused units
         # included — one member per instance) joins the queue group named
         # after the stream, so scaled instances form a worker pool on their
@@ -339,7 +385,7 @@ class Operator:
             output=spec.name, db=db or self._db_for(resolved),
             group=spec.name if spec.delivery in ("group", "keyed") else None,
             key=spec.key if spec.delivery == "keyed" else None,
-            max_batch=spec.max_batch)
+            max_batch=spec.max_batch, replay_from=replay_from)
 
     def register_gadget(self, spec: GadgetSpec) -> None:
         with self._lock:
@@ -575,10 +621,16 @@ class Operator:
         return {h.instance_id: h.sidecar.metrics()
                 for h in self.executor.all_instances()}
 
-    def subscribe(self, stream: str, *, name: str = "external", maxsize: int = 256):
-        """Third-party subscription to any registered stream (§3 reuse)."""
+    def subscribe(self, stream: str, *, name: str = "external",
+                  maxsize: int = 256, replay_from=None):
+        """Third-party subscription to any registered stream (§3 reuse).
+
+        On a durable stream, ``replay_from`` (offset / timestamp /
+        ``"earliest"``) serves the retained history first, then flips to
+        live delivery — the late-joining-consumer story."""
         token = self.bus.issue_token(name, [stream])
-        return self.bus.subscribe(stream, token=token, maxsize=maxsize, name=name)
+        return self.bus.subscribe(stream, token=token, maxsize=maxsize,
+                                  name=name, replay_from=replay_from)
 
     def shutdown(self) -> None:
         self._stop.set()

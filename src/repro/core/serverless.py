@@ -68,7 +68,8 @@ class Executor:
                        queue_size: int = 256,
                        group: str | None = None,
                        key: str | None = None,
-                       max_batch: int | None = None) -> InstanceHandle:
+                       max_batch: int | None = None,
+                       replay_from=None) -> InstanceHandle:
         """``group`` puts this instance's input subscriptions into the named
         bus queue group: all instances started with the same group form a
         single-delivery worker pool (scaling adds capacity, not copies).
@@ -77,11 +78,14 @@ class Executor:
         member (stateful workers scale without splitting a key's state).
         ``max_batch`` bounds the mailbox burst handed to a batching-capable
         process (one exposing ``process_batch``) per pull; None defers to the
-        process's own ``default_max_batch`` (1 = per-message pulls)."""
+        process's own ``default_max_batch`` (1 = per-message pulls).
+        ``replay_from`` (durable inputs only) starts the input subscriptions
+        on the subjects' logs — history is served before live delivery."""
         iid = f"{owner}/{entity_name}-{next(self._ids):04d}"
         stop_event = threading.Event()
         sidecar = Sidecar(iid, self._bus, inputs=inputs, output=output,
-                          queue_size=queue_size, group=group, key=key)
+                          queue_size=queue_size, group=group, key=key,
+                          replay_from=replay_from)
 
         handle = InstanceHandle(
             instance_id=iid, entity_kind=entity_kind, entity_name=entity_name,
@@ -178,6 +182,10 @@ class Executor:
             sidecar.record_warmup(time.monotonic() - t0)
         sidecar.attach_process_stats(getattr(process, "stats", None))
         batch_fn = getattr(process, "process_batch", None)
+        # a process marked ``wants_headers`` receives the message headers —
+        # the durable-log offset rides there, which is how exactly-once
+        # keyed stages pair each update with its log position
+        wants_headers = bool(getattr(process, "wants_headers", False))
         if max_batch is None:
             max_batch = int(getattr(process, "default_max_batch", 1) or 1)
         burst = max(1, max_batch) if batch_fn is not None else 1
@@ -207,7 +215,11 @@ class Executor:
             t0 = time.monotonic()
             try:
                 if len(msgs) == 1:
-                    outs = [process(stream, msgs[0].payload)]
+                    if wants_headers:
+                        outs = [process(stream, msgs[0].payload,
+                                        headers=msgs[0].headers)]
+                    else:
+                        outs = [process(stream, msgs[0].payload)]
                 else:
                     outs = batch_fn(stream, [m.payload for m in msgs])
             except BatchInterrupted as bi:

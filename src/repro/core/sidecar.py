@@ -28,21 +28,25 @@ class Sidecar:
                  inputs: Sequence[str] = (), output: str | None = None,
                  token: str | None = None, queue_size: int = 256,
                  wire: bool = False, group: str | None = None,
-                 key: str | None = None):
+                 key: str | None = None, replay_from=None):
         self.instance_id = instance_id
         self._bus = bus
         self._output = output
         self.group = group
         self.key = key
+        self.replay_from = replay_from
         self._token = token or bus.issue_token(
             instance_id, list(inputs) + ([output] if output else []))
         # group: scaled instances of one entity join the same queue group on
         # every input subject — each message reaches exactly one of them (a
         # worker pool); key upgrades the group to keyed delivery (each key
-        # sticks to one member); group=None keeps broadcast replicas
+        # sticks to one member); group=None keeps broadcast replicas.
+        # replay_from starts each subscription on the (durable) subject's
+        # log — the pump then serves history before live messages.
         self._subs: list[Subscription] = [
             bus.subscribe(s, token=self._token, maxsize=queue_size, wire=wire,
-                          name=f"{instance_id}:{s}", group=group, key=key)
+                          name=f"{instance_id}:{s}", group=group, key=key,
+                          replay_from=replay_from)
             for s in inputs
         ]
         self._rr = 0  # round-robin cursor over input subscriptions
@@ -186,11 +190,30 @@ class Sidecar:
             out[s.subject] = info
         return out
 
+    def _durable_metrics(self) -> dict:
+        """Per-subject durable-log catalog for every durable input/output
+        (depth, segments, retention evictions, offsets) — the REST surface
+        for the durability layer."""
+        out = {}
+        subjects = [s.subject for s in self._subs]
+        if self._output is not None:
+            subjects.append(self._output)
+        for subject in subjects:
+            log = self._bus.durable_log(subject)
+            if log is not None and subject not in out:
+                out[subject] = log.info()
+        return out
+
     def metrics(self) -> dict:
         received = sum(s.received for s in self._subs)
         dropped = sum(s.dropped for s in self._subs)
         backlog = sum(s.qsize() for s in self._subs)
         groups = self._group_metrics() if self.group else {}
+        durable = self._durable_metrics()
+        replaying = any(s.replaying for s in self._subs)
+        replayed = sum(s.replayed for s in self._subs)
+        replay_lag = max((s.replay_lag() for s in self._subs), default=0)
+        deduped = sum(s.deduped for s in self._subs)
         with self._lock:
             stats = self._process_stats or {}
             return {
@@ -219,6 +242,19 @@ class Sidecar:
                 "unstackable_bursts": int(stats.get("unstackable_bursts", 0)),
                 "batched_bursts": int(stats.get("batched_bursts", 0)),
                 "batched_msgs": int(stats.get("batched_msgs", 0)),
+                # durability surface: log catalogs per durable subject,
+                # replay progress of this instance's subscriptions, and the
+                # age of the newest exactly-once recovery snapshot (logic-
+                # owned — keyed stateful stages stamp last_snapshot_ts)
+                "durable": durable,
+                "replaying": replaying,
+                "replayed": replayed,
+                "replay_lag": replay_lag,
+                "deduped": deduped,
+                "snapshots": int(stats.get("snapshots", 0)),
+                "snapshot_age_s": (
+                    time.time() - stats["last_snapshot_ts"]
+                    if stats.get("last_snapshot_ts") else None),
                 "uptime_s": time.monotonic() - self.started_at,
                 "idle_s": time.monotonic() - self.last_activity,
             }

@@ -62,6 +62,15 @@ class Table:
             self._rows[key].update(fields)
             return dict(self._rows[key])
 
+    def widen(self, columns: Iterable[str]) -> None:
+        """Add declared columns (idempotent) — schema evolution for tables
+        loaded from an older on-disk layout (e.g. KeyedStore rows that
+        predate ts/offset tracking)."""
+        with self._lock:
+            if self.columns is None:
+                return
+            self.columns = tuple(dict.fromkeys((*self.columns, *columns)))
+
     def delete(self, key: Any) -> None:
         with self._lock:
             self._rows.pop(key, None)
@@ -160,6 +169,12 @@ class Database:
             self._tables[t.name] = t
 
 
+#: Table where KeyedStore.snapshot records per-owner watermarks — kept in
+#: sync with durable.SNAPSHOT_TABLE (duplicated literal to avoid an import
+#: cycle at module load; asserted equal in the test suite).
+SNAPSHOT_TABLE = "__snapshots__"
+
+
 class KeyedStore:
     """Per-key state over a platform table — the keyed-combinator backbone.
 
@@ -172,30 +187,194 @@ class KeyedStore:
     is only ever processed by one instance at a time, so per-key get/put
     needs no cross-instance coordination.
 
+    Rows carry bookkeeping beyond the value: ``ts`` (last write, drives TTL
+    expiry) and ``offset`` (the durable-log position of the last applied
+    update — the exactly-once recovery watermark).
+
+    **Bounded growth** (long-tail keys must not grow the platform DB
+    forever): ``ttl=`` seconds expires keys lazily on access and in a
+    :meth:`compact` sweep; ``max_keys=`` evicts the oldest-written keys on
+    insert.  Snapshots purge expired keys before persisting.
+
+    **Exactly-once application** (:meth:`apply_once`): the per-key fold runs
+    atomically under the key's stripe lock, guarded by the row's applied
+    offset — a durable-log replay that overlaps live delivery (or a
+    rebalance racing a recovery) can never double-apply an update, no
+    matter which copy arrives first.  Distinct keys fold in parallel; only
+    the brief row read/write takes the table-wide lock.
+
     ``db=None`` falls back to a private in-memory database (unit tests /
     factories exercised outside an operator); state then lives only as long
     as the process, exactly like the old closure dicts.
     """
 
-    def __init__(self, db: Database | None, name: str):
-        self._db = db or Database(f"local-{name}")
-        self._table = self._db.ensure_table(name, ["value"])
+    COLUMNS = ("value", "ts", "offset")
 
+    def __init__(self, db: Database | None, name: str, *,
+                 ttl: float | None = None, max_keys: int | None = None):
+        if ttl is not None and ttl <= 0:
+            raise StateError(f"ttl must be positive, got {ttl}")
+        if max_keys is not None and max_keys < 1:
+            raise StateError(f"max_keys must be >= 1, got {max_keys}")
+        self._db = db or Database(f"local-{name}")
+        self._table = self._db.ensure_table(name, self.COLUMNS)
+        self._table.widen(self.COLUMNS)  # pre-TTL tables lack ts/offset
+        self.ttl = ttl
+        self.max_keys = max_keys
+        self.expired = 0   # keys dropped by TTL (lazy + compaction)
+        self.evicted = 0   # keys dropped by max_keys pressure
+        # stripe locks serialize apply_once per KEY while letting distinct
+        # keys fold in parallel — user fold fns can be slow (I/O, service
+        # time) and must not hold the table-wide lock
+        self._stripes = [threading.Lock() for _ in range(16)]
+
+    # -- TTL / eviction internals -------------------------------------------
+    def _fresh(self, row: dict | None, now: float | None = None) -> bool:
+        if row is None:
+            return False
+        if self.ttl is None:
+            return True
+        ts = row.get("ts")
+        if ts is None:  # legacy row written before ts tracking: never expires
+            return True
+        return (now if now is not None else time.time()) - ts <= self.ttl
+
+    def _expire_locked(self, key: Any, row: dict | None) -> dict | None:
+        if row is not None and not self._fresh(row):
+            self._table.delete(key)
+            self.expired += 1
+            return None
+        return row
+
+    def _evict_overflow_locked(self, keep: Any) -> None:
+        if self.max_keys is None:
+            return
+        while len(self._table) > self.max_keys:
+            victim, oldest = None, None
+            for k, row in self._table.scan():
+                if k == keep:
+                    continue
+                ts = row.get("ts") or 0.0
+                if oldest is None or ts < oldest:
+                    victim, oldest = k, ts
+            if victim is None:
+                return
+            self._table.delete(victim)
+            self.evicted += 1
+
+    # -- per-key API ---------------------------------------------------------
     def get(self, key: Any, default: Any = None) -> Any:
-        row = self._table.get(key)
+        with self._table._lock:
+            row = self._expire_locked(key, self._table.get(key))
         return row["value"] if row is not None else default
 
-    def put(self, key: Any, value: Any) -> None:
-        self._table.put(key, {"value": value})
+    def put(self, key: Any, value: Any, *, offset: int | None = None) -> None:
+        with self._table._lock:
+            if offset is None:
+                prev = self._table.get(key)
+                if prev is not None:
+                    offset = prev.get("offset")
+            self._table.put(key, {"value": value, "ts": time.time(),
+                                  "offset": offset})
+            self._evict_overflow_locked(keep=key)
+
+    def applied_offset(self, key: Any) -> int | None:
+        """The durable-log offset of the last update applied to ``key``."""
+        row = self._table.get(key)
+        return row.get("offset") if row is not None else None
+
+    def apply_once(self, key: Any, offset: int | None, fn,
+                   init: Any = None) -> tuple[Any, bool]:
+        """Atomically fold ``fn(current_value) -> new_value`` into ``key``,
+        unless log position ``offset`` was already applied.
+
+        Returns ``(value, applied)``.  ``applied=False`` means the update at
+        ``offset`` is already reflected in ``value`` — the caller must also
+        skip its side effects (downstream emission) to keep the whole stage
+        exactly-once.  The check-and-fold holds the key's stripe lock, so a
+        replay racing live delivery of the same offset applies it exactly
+        once regardless of interleaving — but NOT the table-wide lock while
+        ``fn`` runs, so slow folds on distinct keys proceed in parallel
+        (the whole point of keyed scaling).  ``offset=None`` (non-durable
+        input) always applies.
+        """
+        with self._stripes[hash(key) % len(self._stripes)]:
+            with self._table._lock:
+                row = self._expire_locked(key, self._table.get(key))
+            applied = row.get("offset") if row is not None else None
+            if offset is not None and applied is not None \
+                    and offset <= applied:
+                return row["value"], False
+            value = fn(row["value"] if row is not None else init)
+            with self._table._lock:
+                self._table.put(key, {
+                    "value": value, "ts": time.time(),
+                    "offset": offset if offset is not None else applied})
+                self._evict_overflow_locked(keep=key)
+            return value, True
 
     def delete(self, key: Any) -> None:
         self._table.delete(key)
 
     def keys(self) -> list:
-        return [k for k, _ in self._table.scan()]
+        now = time.time()
+        return [k for k, row in self._table.scan()
+                if self._fresh(row, now)]
 
     def __len__(self) -> int:
         return len(self._table)
+
+    # -- maintenance ---------------------------------------------------------
+    def compact(self) -> int:
+        """Sweep expired keys out (the compaction hook — called by the
+        sidecar's housekeeping and before snapshots); returns keys removed."""
+        if self.ttl is None:
+            return 0
+        removed = 0
+        now = time.time()
+        with self._table._lock:
+            for k, row in self._table.scan():
+                if not self._fresh(row, now):
+                    self._table.delete(k)
+                    removed += 1
+        self.expired += removed
+        return removed
+
+    def stats(self) -> dict:
+        return {"keys": len(self._table), "ttl": self.ttl,
+                "max_keys": self.max_keys, "expired": self.expired,
+                "evicted": self.evicted}
+
+    # -- exactly-once recovery snapshots -------------------------------------
+    def snapshot(self, owner: str, offset: int) -> dict:
+        """Record that every durable-log offset <= ``offset`` is reflected
+        in this store (the recovery watermark for ``owner``), purging
+        expired keys first and flushing the database if it persists.
+
+        The platform database itself *is* the state snapshot — instances of
+        a stream share it, so recovery only needs the watermark: a restarted
+        member replays the log suffix after ``min(watermarks)`` and
+        :meth:`apply_once` discards the prefix each key already absorbed.
+        """
+        self.compact()
+        marks = self._db.ensure_table(SNAPSHOT_TABLE, ["watermark", "ts"])
+        marks.put(owner, {"watermark": int(offset), "ts": time.time()})
+        self._db.flush()
+        return {"owner": owner, "watermark": int(offset),
+                "keys": len(self._table)}
+
+    def last_snapshot(self, owner: str | None = None) -> dict | None:
+        """The newest watermark row (for ``owner``, or any) — the sidecar's
+        snapshot-age metric reads this."""
+        try:
+            marks = self._db.table(SNAPSHOT_TABLE)
+        except StateError:
+            return None
+        rows = [row for k, row in marks.scan()
+                if owner is None or k == owner]
+        if not rows:
+            return None
+        return max(rows, key=lambda r: r.get("ts", 0.0))
 
 
 class StateStore:

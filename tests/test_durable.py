@@ -1,0 +1,812 @@
+"""Durable streams (tentpole PR 6): append-only subject logs with replay,
+retention, and exactly-once keyed recovery.
+
+Log level: ``DurableLog`` appends codec-tagged compressed records into
+rolling segments, enforces retention by count/age/bytes (whole sealed
+segments), persists a catalog + segments + trained dictionary under a root
+directory, and serves offset/timestamp/earliest reads.
+
+Bus level: ``make_durable`` attaches a log to a subject; ``publish`` appends
+BEFORE delivery and stamps ``headers["offset"]``; ``subscribe(replay_from=)``
+serves history first and flips to live with no gap and no duplicate; a
+replaying member of a round-robin group is not picked for live delivery
+until caught up (the group-guard regression).
+
+Recovery level: ``KeyedStore.apply_once`` + snapshot watermarks +
+``resolve_replay_from("snapshot")`` give keyed stateful stages exactly-once
+state and emissions through forced crashes — asserted per message.
+"""
+import collections
+import os
+import threading
+import time
+
+import pytest
+
+from repro.core import (App, BusError, CoherenceError, DSLError, DurableError,
+                        DurableLog, FieldSpec, KeyedStore, Message, MessageBus,
+                        Operator, OperatorError, Retention, StreamSchema,
+                        StreamSpec, connect, iter_log, resolve_replay_from,
+                        schema_fingerprint)
+from repro.core.compression import (CompressionError, codec_name, compress,
+                                    decompress, train_dictionary)
+from repro.core.durable import SNAPSHOT_TABLE as DURABLE_SNAPSHOT_TABLE
+from repro.core.state import SNAPSHOT_TABLE as STATE_SNAPSHOT_TABLE
+from repro.core.state import Database, StateError
+
+KV = StreamSchema.of(k=FieldSpec("str"), v=FieldSpec("int"))
+
+
+def _msg(subject: str, payload: dict, seq: int = 0) -> Message:
+    return Message(subject=subject, payload=payload, seq=seq, ts=time.time())
+
+
+def _drain(sub, timeout: float = 0.25):
+    out = []
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        m = sub.next(timeout=0.02)
+        if m is not None:
+            out.append(m)
+            deadline = time.monotonic() + timeout
+    return out
+
+
+# ---------------------------------------------------------------------------
+# DurableLog unit behavior
+# ---------------------------------------------------------------------------
+
+def test_append_read_roundtrip_offsets():
+    log = DurableLog("s", segment_records=4)
+    for i in range(10):
+        assert log.append(_msg("s", {"k": "a", "v": i}, seq=i)) == i
+    assert log.next_offset() == 10
+    assert log.earliest_offset() == 0
+    msgs = log.read(0, max_n=100)
+    assert [m.payload["v"] for m in msgs] == list(range(10))
+    assert [m.headers["offset"] for m in msgs] == list(range(10))
+    # mid-log reads honor the offset
+    assert [m.payload["v"] for m in log.read(7)] == [7, 8, 9]
+    # reads past the head are empty (caught up)
+    assert log.read(10) == []
+
+
+def test_segments_roll_and_retention_by_records():
+    log = DurableLog("s", segment_records=4,
+                     retention={"max_records": 8}, train_dict_after=0)
+    for i in range(20):
+        log.append(_msg("s", {"k": "a", "v": i}, seq=i))
+    info = log.info()
+    # whole sealed segments evicted oldest-first; the bound is approximate
+    # by up to one segment but never exceeded by one full segment's worth
+    assert info["depth"] <= 8 + 4
+    assert info["evicted_segments"] >= 1
+    assert info["evicted_records"] == info["evicted_segments"] * 4
+    assert info["earliest_offset"] == info["evicted_records"]
+    # reads below the earliest retained offset clamp instead of failing
+    msgs = log.read(0, max_n=100)
+    assert msgs[0].headers["offset"] == info["earliest_offset"]
+    assert msgs[-1].headers["offset"] == 19
+
+
+def test_retention_by_bytes_and_age():
+    log = DurableLog("s", segment_records=2,
+                     retention={"max_bytes": 1}, train_dict_after=0)
+    for i in range(6):
+        log.append(_msg("s", {"k": "a", "v": i}, seq=i))
+    # every sealed segment is over a 1-byte budget; only the active remains
+    assert log.info()["segments"] == 1
+    log2 = DurableLog("s2", segment_records=2,
+                      retention={"max_age_s": 3600}, train_dict_after=0)
+    for i in range(6):
+        log2.append(_msg("s2", {"k": "a", "v": i}, seq=i))
+    assert log2.info()["evicted_segments"] == 0  # nothing is an hour old
+
+
+def test_retention_validation():
+    with pytest.raises(DurableError, match="unknown retention keys"):
+        Retention.of({"max_msgs": 10})
+    assert Retention.of(None) == Retention()
+    r = Retention(max_records=5)
+    assert Retention.of(r) is r
+
+
+def test_offset_at_ts():
+    log = DurableLog("s", segment_records=3, train_dict_after=0)
+    for i in range(4):
+        log.append(_msg("s", {"k": "a", "v": i}, seq=i))
+    cut = time.time()
+    time.sleep(0.01)
+    for i in range(4, 8):
+        log.append(_msg("s", {"k": "a", "v": i}, seq=i))
+    assert log.offset_at_ts(0.0) == 0
+    assert log.offset_at_ts(cut) == 4
+    assert log.offset_at_ts(time.time() + 60) == 8  # future ts -> head
+
+
+def test_persistence_roundtrip(tmp_path):
+    root = str(tmp_path / "log")
+    log = DurableLog("s", root=root, segment_records=4, train_dict_after=0)
+    for i in range(10):
+        log.append(_msg("s", {"k": "a", "v": i}, seq=i))
+    log.close()
+    assert os.path.exists(os.path.join(root, "catalog.dxc"))
+    revived = DurableLog("s", root=root, segment_records=4,
+                         train_dict_after=0)
+    assert revived.next_offset() == 10
+    assert [m.payload["v"] for m in revived.read(0, 100)] == list(range(10))
+    # offsets continue where the previous incarnation stopped
+    assert revived.append(_msg("s", {"k": "a", "v": 10}, seq=10)) == 10
+    revived.drop()
+    assert not os.path.exists(os.path.join(root, "catalog.dxc"))
+
+
+def test_iter_log_and_fingerprint():
+    log = DurableLog("s", segment_records=4, schema=KV, train_dict_after=0)
+    for i in range(9):
+        log.append(_msg("s", {"k": "a", "v": i}, seq=i))
+    assert [m.payload["v"] for m in iter_log(log)] == list(range(9))
+    assert [m.payload["v"] for m in iter_log(log, from_offset=5)] == [5, 6, 7, 8]
+    assert log.info()["schema_fingerprint"] == schema_fingerprint(KV)
+    assert schema_fingerprint(KV) == schema_fingerprint(KV)
+    other = StreamSchema.of(k=FieldSpec("str"))
+    assert schema_fingerprint(KV) != schema_fingerprint(other)
+    assert schema_fingerprint(None) == "untyped"
+
+
+# ---------------------------------------------------------------------------
+# Dictionary-trained compression (satellite)
+# ---------------------------------------------------------------------------
+
+def test_train_dictionary_contract():
+    samples = [f'{{"sensor": "lab-{i % 3}", "reading": {i}}}'.encode() * 4
+               for i in range(32)]
+    d = train_dictionary(samples)
+    if codec_name() != "zstd":
+        assert d is None
+        return
+    assert d is not None
+    blob = compress(samples[0], dictionary=d)
+    assert blob[:4] == b"DXZ2"
+    assert decompress(blob, dictionary=d) == samples[0]
+    # a dictionary blob is NOT self-describing: no/wrong dictionary fails
+    with pytest.raises(CompressionError):
+        decompress(blob)
+    # too few samples -> no dictionary (graceful)
+    assert train_dictionary(samples[:3]) is None
+
+
+def test_log_trains_dictionary_and_reads_back():
+    log = DurableLog("s", segment_records=8, train_dict_after=16)
+    for i in range(40):
+        log.append(_msg("s", {"k": f"sensor-{i % 4}", "v": i}, seq=i))
+    info = log.info()
+    assert info["dict_trained"] == (codec_name() == "zstd")
+    # records written before AND after training decode fine
+    assert [m.payload["v"] for m in log.read(0, 100)] == list(range(40))
+
+
+def test_dictionary_persists_for_replay(tmp_path):
+    if codec_name() != "zstd":
+        pytest.skip("zstd not available — no dictionary to persist")
+    root = str(tmp_path / "log")
+    log = DurableLog("s", root=root, segment_records=8, train_dict_after=16)
+    for i in range(30):
+        log.append(_msg("s", {"k": f"sensor-{i % 4}", "v": i}, seq=i))
+    log.close()
+    assert os.path.exists(os.path.join(root, "dict.bin"))
+    revived = DurableLog("s", root=root, segment_records=8)
+    assert revived.info()["dict_trained"]
+    assert [m.payload["v"] for m in revived.read(0, 100)] == list(range(30))
+
+
+# ---------------------------------------------------------------------------
+# Bus integration: publish appends, replay_from, gapless handoff
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def bus():
+    b = MessageBus()
+    b.register_subject("s", KV)
+    b.make_durable("s", retention={"max_records": 10_000})
+    yield b
+    b.close()
+
+
+def test_publish_appends_and_stamps_offset(bus):
+    tok = bus.issue_token("t", ["s"])
+    sub = bus.subscribe("s", token=tok)
+    for i in range(5):
+        bus.publish("s", {"k": "a", "v": i}, token=tok)
+    msgs = _drain(sub)
+    assert [m.headers["offset"] for m in msgs] == list(range(5))
+    assert bus.durable_log("s").next_offset() == 5
+    with pytest.raises(BusError):
+        bus.make_durable("s")  # one log per subject
+
+
+def test_replay_then_live_no_gap_no_dup(bus):
+    tok = bus.issue_token("t", ["s"])
+    for i in range(50):
+        bus.publish("s", {"k": "a", "v": i}, token=tok)
+    sub = bus.subscribe("s", token=tok, replay_from="earliest")
+    assert sub.replaying
+    # publish MORE while the replay is still draining
+    got, published = [], 50
+    while True:
+        batch = sub.next_batch(8, timeout=0.05)
+        if published < 80:  # interleave publishes with replay reads
+            for _ in range(10):
+                bus.publish("s", {"k": "a", "v": published}, token=tok)
+                published += 1
+        if not batch and published >= 80:
+            break
+        got.extend(batch)
+    assert [m.payload["v"] for m in got] == list(range(80))  # no gap, no dup
+    assert not sub.replaying
+    assert sub.replayed >= 50
+    # and the flip is permanent: later publishes arrive live (the mailbox
+    # first dedupes the live copies that queued during the replay)
+    bus.publish("s", {"k": "a", "v": 80}, token=tok)
+    live = _drain(sub, timeout=0.5)
+    assert [m.payload["v"] for m in live] == [80]
+    assert sub.deduped > 0
+
+
+def test_replay_from_offset_and_timestamp(bus):
+    tok = bus.issue_token("t", ["s"])
+    for i in range(6):
+        bus.publish("s", {"k": "a", "v": i}, token=tok)
+    cut = time.time()
+    time.sleep(0.01)
+    for i in range(6, 10):
+        bus.publish("s", {"k": "a", "v": i}, token=tok)
+    by_offset = bus.subscribe("s", token=tok, replay_from=7)
+    assert [m.payload["v"] for m in _drain(by_offset)] == [7, 8, 9]
+    by_ts = bus.subscribe("s", token=tok, replay_from=cut)
+    assert [m.payload["v"] for m in _drain(by_ts)] == [6, 7, 8, 9]
+
+
+def test_replay_requires_durable_subject():
+    b = MessageBus()
+    b.register_subject("fire", KV)
+    tok = b.issue_token("t", ["fire"])
+    with pytest.raises(BusError, match="not durable"):
+        b.subscribe("fire", token=tok, replay_from="earliest")
+    with pytest.raises(BusError):
+        b.subscribe("fire", token=tok, replay_from=True)  # bool is not an offset
+    b.close()
+
+
+def test_broadcast_overflow_heals_from_log(bus):
+    tok = bus.issue_token("t", ["s"])
+    sub = bus.subscribe("s", token=tok, maxsize=4)
+    for i in range(32):  # overflows the 4-deep mailbox -> drop-oldest
+        bus.publish("s", {"k": "a", "v": i}, token=tok)
+    msgs = _drain(sub, timeout=0.5)
+    # the gap left by drop-oldest is healed from the durable log: the
+    # subscriber still observes every offset exactly once, in order
+    assert [m.payload["v"] for m in msgs] == list(range(32))
+    assert sub.healed > 0
+
+
+def test_durable_stats_surface(bus):
+    tok = bus.issue_token("t", ["s"])
+    sub = bus.subscribe("s", token=tok, replay_from="earliest", name="r")
+    for i in range(3):
+        bus.publish("s", {"k": "a", "v": i}, token=tok)
+    _drain(sub)
+    st = bus.stats()["s"]
+    assert st["durable"]["depth"] == 3
+    assert st["durable"]["next_offset"] == 3
+    rsub = st["subscriptions"]["r"]
+    assert rsub["replayed"] == 3
+    assert rsub["replaying"] is False
+
+
+# ---------------------------------------------------------------------------
+# Group guard (satellite bugfix): replaying member is not a live target
+# ---------------------------------------------------------------------------
+
+def test_replaying_member_not_picked_until_caught_up(bus):
+    tok = bus.issue_token("t", ["s"])
+    a = bus.subscribe("s", token=tok, group="pool", name="a")
+    for i in range(12):
+        bus.publish("s", {"k": "a", "v": i}, token=tok)
+    assert len(_drain(a)) == 12
+    # b joins late and replays; while catching up it must NOT count as a
+    # healthy member for live round-robin — its share of live traffic
+    # would sit behind the whole history (and the overlap would be duped)
+    b = bus.subscribe("s", token=tok, group="pool", name="b",
+                      replay_from="earliest")
+    assert b.replaying
+    bus.publish("s", {"k": "a", "v": 12}, token=tok)
+    live = a.next(timeout=0.5)
+    assert live is not None and live.payload["v"] == 12  # a got it, not b
+    snap = bus.group_info("s", "pool")
+    assert snap["replaying"] == ["b"]
+    # b replays the full history (including v=12, published after its
+    # replay started) and flips
+    got_b = _drain(b, timeout=0.5)
+    assert [m.payload["v"] for m in got_b] == list(range(13))
+    assert not b.replaying
+    # once caught up, b shares live round-robin again
+    for i in range(13, 21):
+        bus.publish("s", {"k": "a", "v": i}, token=tok)
+    more_a, more_b = _drain(a), _drain(b)
+    assert len(more_a) > 0 and len(more_b) > 0
+    assert sorted(m.payload["v"] for m in more_a + more_b) == list(range(13, 21))
+
+
+def test_keyed_member_replay_overlap_is_deduped(bus):
+    tok = bus.issue_token("t", ["s"])
+    a = bus.subscribe("s", token=tok, group="pool", key="k", name="a")
+    for i in range(10):
+        bus.publish("s", {"k": f"key-{i % 4}", "v": i}, token=tok)
+    assert len(_drain(a)) == 10
+    # a keyed member STAYS in the ring while replaying (its partitions must
+    # not move twice); live messages queue behind the replay and the
+    # overlap is dropped by the frozen dedupe window at the flip
+    b = bus.subscribe("s", token=tok, group="pool", key="k", name="b",
+                      replay_from="earliest")
+    for i in range(10, 20):
+        bus.publish("s", {"k": f"key-{i % 4}", "v": i}, token=tok)
+    got_a = [m.payload["v"] for m in _drain(a, timeout=0.5)]
+    got_b = [m.payload["v"] for m in _drain(b, timeout=0.5)]
+    # b replays 0..9 (+ any of 10..19 read from the log before its flip);
+    # between them every message is seen, and b never sees one twice
+    assert sorted(set(got_b)) == got_b  # no dup within b
+    assert sorted(got_a + [v for v in got_b if v >= 10]) == list(range(10, 20))
+    assert set(got_b) >= set(range(10)) - set(got_a)
+
+
+# ---------------------------------------------------------------------------
+# KeyedStore: TTL / max_keys / exactly-once apply (satellite)
+# ---------------------------------------------------------------------------
+
+def test_snapshot_table_constants_agree():
+    assert STATE_SNAPSHOT_TABLE == DURABLE_SNAPSHOT_TABLE
+
+
+def test_keyed_store_ttl_expiry_and_compaction():
+    store = KeyedStore(None, "t", ttl=0.05)
+    store.put("a", 1)
+    store.put("b", 2)
+    assert store.get("a") == 1
+    time.sleep(0.08)
+    assert store.get("a", "gone") == "gone"   # lazy expiry on access
+    assert store.expired >= 1
+    removed = store.compact()                  # sweep the rest
+    assert removed >= 1
+    assert len(store) == 0
+    assert store.stats()["expired"] == 2
+
+
+def test_keyed_store_max_keys_evicts_oldest():
+    store = KeyedStore(None, "t", max_keys=3)
+    for i in range(5):
+        store.put(f"k{i}", i)
+        time.sleep(0.002)  # distinct write ts -> deterministic eviction order
+    assert len(store) == 3
+    assert store.get("k0") is None and store.get("k1") is None
+    assert store.get("k4") == 4
+    assert store.evicted == 2
+    with pytest.raises(StateError):
+        KeyedStore(None, "t2", max_keys=0)
+    with pytest.raises(StateError):
+        KeyedStore(None, "t3", ttl=-1)
+
+
+def test_apply_once_offset_dedupe():
+    store = KeyedStore(None, "t")
+    v, applied = store.apply_once("a", 5, lambda acc: (acc or 0) + 1)
+    assert (v, applied) == (1, True)
+    # same offset again (replay overlapping live): skipped, value unchanged
+    v, applied = store.apply_once("a", 5, lambda acc: (acc or 0) + 1)
+    assert (v, applied) == (1, False)
+    # stale offset: also skipped
+    v, applied = store.apply_once("a", 3, lambda acc: (acc or 0) + 1)
+    assert (v, applied) == (1, False)
+    # newer offset applies
+    v, applied = store.apply_once("a", 6, lambda acc: (acc or 0) + 1)
+    assert (v, applied) == (2, True)
+    assert store.applied_offset("a") == 6
+    # offset=None (non-durable input) always applies, keeps the watermark
+    v, applied = store.apply_once("a", None, lambda acc: acc + 10)
+    assert (v, applied) == (12, True)
+    assert store.applied_offset("a") == 6
+
+
+def test_snapshot_watermark_resolution(tmp_path):
+    db = Database("d", "filekv", str(tmp_path / "d.dxdb"))
+    store = KeyedStore(db, "reduce", ttl=1000)
+    store.apply_once("a", 7, lambda acc: 1)
+    info = store.snapshot("inst-0", 7)
+    assert info["watermark"] == 7
+    store.apply_once("b", 9, lambda acc: 2)
+    store.snapshot("inst-1", 9)
+    # resolution replays the suffix after the OLDEST watermark — the
+    # conservative member bounds everyone (apply_once makes the extra
+    # replay harmless)
+    assert resolve_replay_from("snapshot", db) == 8
+    assert store.last_snapshot()["watermark"] == 9
+    assert store.last_snapshot("inst-0")["watermark"] == 7
+    # snapshots survive a process restart (the db IS the state snapshot)
+    db2 = Database("d", "filekv", str(tmp_path / "d.dxdb"))
+    assert resolve_replay_from("snapshot", db2) == 8
+    # no snapshots / no db -> replay everything
+    assert resolve_replay_from("snapshot", None) == "earliest"
+    assert resolve_replay_from("snapshot", Database("empty")) == "earliest"
+    # passthrough for every other form
+    assert resolve_replay_from(17, db) == 17
+    assert resolve_replay_from("earliest", db) == "earliest"
+    assert resolve_replay_from(None, db) is None
+
+
+def test_snapshot_skips_expired_keys():
+    store = KeyedStore(None, "t", ttl=0.05)
+    store.apply_once("a", 1, lambda acc: 1)
+    time.sleep(0.08)
+    store.apply_once("b", 2, lambda acc: 2)
+    info = store.snapshot("inst-0", 2)
+    assert info["keys"] == 1  # "a" expired and was compacted away
+    assert store.get("a") is None
+
+
+# ---------------------------------------------------------------------------
+# Forced crash: exactly-once keyed recovery, asserted per message
+# ---------------------------------------------------------------------------
+
+def test_forced_crash_recovery_zero_lost_zero_duped():
+    """A keyed stateful member crashes mid-run WITH unprocessed in-flight
+    messages (popped from its mailbox, never applied — fire-and-forget would
+    lose them).  A replacement replays from the snapshot watermark; per-key
+    sequences must come out with 0 lost, 0 double-applied, 0 out-of-order —
+    asserted on every single message by the fold itself."""
+    bus = MessageBus()
+    bus.register_subject("ev", KV)
+    bus.make_durable("ev")
+    tok = bus.issue_token("t", ["ev"])
+    db = Database("recov")
+    store = KeyedStore(db, "reduce")
+    violations: list[str] = []
+    emitted: collections.Counter = collections.Counter()
+    seq_of: collections.Counter = collections.Counter()
+
+    def fold(payload):
+        def _fn(acc):
+            acc = list(acc or [])
+            if payload["v"] != len(acc):   # per-message order/gap assertion
+                violations.append(f"key {payload['k']}: got {payload['v']} "
+                                  f"after {len(acc)} applies")
+            return acc + [payload["v"]]
+        return _fn
+
+    def pump(sub, n=10_000):
+        for m in sub.next_batch(n, timeout=0.2) or []:
+            value, applied = store.apply_once(
+                m.payload["k"], m.headers["offset"], fold(m.payload))
+            if applied:
+                emitted[(m.payload["k"], m.payload["v"])] += 1
+
+    def publish(count):
+        for _ in range(count):
+            k = f"key-{sum(seq_of.values()) % 5}"
+            bus.publish("ev", {"k": k, "v": seq_of[k]}, token=tok)
+            seq_of[k] += 1
+
+    a = bus.subscribe("ev", token=tok, group="pool", key="k", name="a")
+    b = bus.subscribe("ev", token=tok, group="pool", key="k", name="b")
+    publish(40)
+    pump(a), pump(b)
+    store.snapshot("a", 39)  # both members are caught up through offset 39
+
+    publish(30)
+    pump(a)                  # the survivor keeps applying its partitions
+    # CRASH: b pops its entire backlog and dies before applying any of it —
+    # those messages are destroyed in flight (single delivery: the popped
+    # copies were the only ones)
+    doomed = b.next_batch(10_000, timeout=0.2) or []
+    assert doomed, "crash scenario needs in-flight messages to destroy"
+    bus.unsubscribe(b)
+
+    # RECOVERY: replacement member replays the suffix after the snapshot
+    # watermark; apply_once discards everything the store already absorbed
+    start = resolve_replay_from("snapshot", db)
+    assert start == 40
+    b2 = bus.subscribe("ev", token=tok, group="pool", key="k", name="b2",
+                       replay_from=start)
+    publish(30)              # traffic continues during recovery
+    deadline = time.monotonic() + 5.0
+    total = sum(seq_of.values())
+    while time.monotonic() < deadline:
+        pump(a), pump(b2)
+        done = sum(len(store.get(k) or []) for k in list(seq_of))
+        if done >= total and not b2.replaying:
+            break
+
+    assert violations == []                                # 0 out-of-order
+    for k, n in seq_of.items():
+        assert store.get(k) == list(range(n)), f"lost updates on {k}"  # 0 lost
+    assert all(c == 1 for c in emitted.values())            # 0 double-emitted
+    assert len(emitted) == sum(seq_of.values())
+    bus.close()
+
+
+# ---------------------------------------------------------------------------
+# Property test: any publish/crash/replay schedule keeps per-key order
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - minimal CI leg
+    HAS_HYPOTHESIS = False
+
+
+def _run_schedule(schedule):
+    """Random interleavings of publishes and member crashes (with
+    snapshot recovery) must deliver, per key, exactly the durable log's
+    per-key sequence — no gaps, no dupes at any handoff."""
+    bus = MessageBus()
+    bus.register_subject("ev", KV)
+    bus.make_durable("ev")
+    tok = bus.issue_token("t", ["ev"])
+    db = Database("prop")
+    store = KeyedStore(db, "reduce")
+    seq_of: collections.Counter = collections.Counter()
+    applied_seqs: dict[str, list[int]] = collections.defaultdict(list)
+    # single member + in-order delivery/replay => applied offsets are
+    # contiguous, so the member's true recovery watermark is simply the
+    # highest offset it applied
+    hwm = [-1]
+
+    def pump(sub):
+        for m in sub.next_batch(10_000, timeout=0) or []:
+            off = m.headers["offset"]
+
+            def _fn(acc, p=m.payload, off=off):
+                applied_seqs[p["k"]].append(p["v"])
+                hwm[0] = max(hwm[0], off)
+                return (acc or 0) + 1
+            store.apply_once(m.payload["k"], off, _fn)
+
+    member = bus.subscribe("ev", token=tok, group="pool", key="k",
+                           name="m0")
+    generation = 1
+    pumped = 0
+    for op in schedule:
+        if op[0] == "pub":
+            k = f"key-{op[1]}"
+            bus.publish("ev", {"k": k, "v": seq_of[k]}, token=tok)
+            seq_of[k] += 1
+            pumped += 1
+            if pumped % 3 == 0:  # drain periodically, not every publish
+                pump(member)
+        else:
+            # crash: destroy the member's in-flight backlog, then
+            # recover a replacement from the snapshot watermark
+            member.next_batch(10_000, timeout=0)  # popped, never applied
+            bus.unsubscribe(member)
+            if hwm[0] >= 0:
+                store.snapshot(f"m{generation - 1}", hwm[0])
+            member = bus.subscribe(
+                "ev", token=tok, group="pool", key="k",
+                name=f"m{generation}",
+                replay_from=resolve_replay_from("snapshot", db))
+            generation += 1
+    # drive replay + live to quiescence
+    for _ in range(200):
+        pump(member)
+        done = all(len(applied_seqs[k]) >= n for k, n in seq_of.items())
+        if done and not member.replaying:
+            break
+    for k, n in seq_of.items():
+        assert applied_seqs[k] == list(range(n)), \
+            f"{k}: applied {applied_seqs[k]} != published {list(range(n))}"
+    bus.close()
+
+
+if HAS_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(
+        st.one_of(
+            st.tuples(st.just("pub"), st.integers(min_value=0, max_value=3)),
+            st.just(("crash",)),
+        ),
+        min_size=4, max_size=60))
+    def test_any_schedule_matches_log_order(schedule):
+        _run_schedule(schedule)
+
+
+def test_seeded_schedules_match_log_order():
+    """Seeded stand-in for the hypothesis property when hypothesis is not
+    installed (the minimal CI leg): 50 reproducible random publish/crash
+    schedules through the same runner."""
+    import random
+    rng = random.Random(0xDA7A)
+    for _ in range(50):
+        schedule = [("crash",) if rng.random() < 0.15
+                    else ("pub", rng.randrange(4))
+                    for _ in range(rng.randint(4, 60))]
+        _run_schedule(schedule)
+
+
+# ---------------------------------------------------------------------------
+# Operator / DSL plumbing
+# ---------------------------------------------------------------------------
+
+def _identity_au(name="ident"):
+    from repro.core import AnalyticsUnitSpec
+    return AnalyticsUnitSpec(name=name,
+                             logic=lambda ctx: lambda s, p: p)
+
+
+def test_operator_validates_durability_coherence():
+    from repro.core import DriverSpec, SensorSpec
+    op = Operator()
+    op.register_analytics_unit(_identity_au())
+    op.register_driver(DriverSpec(name="feed", logic=lambda ctx: iter(())))
+    op.register_sensor(SensorSpec(name="ext", driver="feed"))  # fire-and-forget
+    # retention without durable is a contradiction
+    with pytest.raises(OperatorError, match="retention"):
+        op.create_stream(StreamSpec(name="out", analytics_unit="ident",
+                                    inputs=("ext",),
+                                    retention={"max_records": 10}))
+    # replay_from demands durable inputs
+    with pytest.raises(CoherenceError, match="durable"):
+        op.create_stream(StreamSpec(name="out", analytics_unit="ident",
+                                    inputs=("ext",), replay_from="earliest"))
+    op.shutdown()
+
+
+def test_dsl_eager_checks():
+    app = App("checks")
+
+    @app.driver
+    def feed(ctx):
+        return iter(())
+
+    s = app.sense("src", feed)
+    with pytest.raises(DSLError, match="retention"):
+        s.durable(retention={"bogus": 1})
+    m = s.map(lambda p: p, name="m")
+    with pytest.raises(DSLError, match="durable inputs"):
+        m.replay(from_="earliest")
+    with pytest.raises(DSLError):
+        m.replay(from_=True)           # bool is not an offset
+    with pytest.raises(DSLError):
+        s.replay(from_="earliest")     # sensors have no inputs to replay
+    with pytest.raises(DSLError):
+        app.external("other").durable()  # not ours to make durable
+    s.durable()                        # sensor streams can be durable
+    m.replay(from_="snapshot")         # now the input is durable
+    with pytest.raises(DSLError, match="snapshot_every"):
+        s.key_by("k").reduce(lambda a, p: a, snapshot_every=0)
+
+
+def test_dsl_durable_replay_end_to_end():
+    app = App("e2e")
+
+    @app.driver
+    def feeder(ctx, n=30):
+        def gen():
+            for i in range(n):
+                yield {"k": f"k{i % 3}", "v": i}
+        return gen()
+
+    src = app.sense("events", feeder).durable(
+        retention={"max_records": 1000})
+    totals = src.key_by("k").reduce(
+        lambda acc, p: (acc or 0) + p["v"], name="totals", snapshot_every=5)
+    totals.durable().replay(from_="snapshot")
+
+    with connect() as op:
+        app.deploy(op)
+        time.sleep(1.5)
+        st = op.bus.stats()
+        assert st["events"]["durable"]["depth"] == 30
+        assert st["totals"]["durable"]["depth"] == 30
+        # the reduce instance snapshots its watermark as it folds
+        h = next(h for iid, h in op.executor._instances.items()
+                 if iid.startswith("totals/"))
+        m = h.sidecar.metrics()
+        assert m["snapshots"] >= 5
+        assert m["snapshot_age_s"] is not None
+        assert set(m["durable"]) == {"events", "totals"}
+        # a late joiner replays the full durable output
+        late = op.subscribe("totals", replay_from="earliest")
+        vals = collections.defaultdict(int)
+        got = _drain(late, timeout=0.5)
+        assert len(got) == 30            # every fold emitted exactly once
+        for msg in got:
+            vals[msg.payload["k"]] = msg.payload["value"]
+        assert vals == {f"k{r}": sum(range(r, 30, 3)) for r in range(3)}
+
+
+def test_operator_restart_resumes_from_snapshot(tmp_path):
+    """Durable logs + snapshot watermarks survive an operator restart: the
+    second incarnation replays only the unapplied suffix and emits nothing
+    twice, even though replay_from="snapshot" re-reads applied history."""
+    def run(phase, lo, hi):
+        app = App("restart")
+
+        @app.driver
+        def feeder(ctx, lo=0, hi=0):
+            def gen():
+                time.sleep(0.3)  # let the test's live subscriber attach
+                for i in range(lo, hi):
+                    yield {"k": f"k{i % 2}", "v": i}
+            return gen()
+
+        src = app.sense("events", feeder, lo=lo, hi=hi).durable()
+        totals = src.key_by("k").reduce(
+            lambda acc, p: (acc or 0) + 1, name="totals", snapshot_every=2)
+        totals.replay(from_="snapshot")
+        with connect(state_root=str(tmp_path / "state")) as op:
+            app.deploy(op)
+            sub = op.subscribe("totals")
+            time.sleep(1.5)
+            return [m.payload for m in _drain(sub, timeout=0.5)]
+
+    first = run(1, 0, 12)
+    assert len(first) == 12
+    second = run(2, 12, 20)
+    # run 2 replays the log suffix from the snapshot; everything already
+    # folded in run 1 is skipped (0 duplicate emissions), the 8 new
+    # messages are folded ON TOP of the recovered counts
+    assert len(second) == 8
+    finals = {}
+    for p in second:
+        finals[p["k"]] = p["value"]
+    assert finals == {"k0": 10, "k1": 10}  # 20 messages, 2 keys, counted once
+
+
+# ---------------------------------------------------------------------------
+# Fusion barriers
+# ---------------------------------------------------------------------------
+
+def _device_chain_app(durable_mid=False):
+    app = App("fuse")
+
+    @app.driver
+    def feed(ctx):
+        return iter(())
+
+    s = app.sense("src", feed)
+    a = s.map(lambda p: p, name="a", device=True)
+    if durable_mid:
+        a.durable()
+    a.map(lambda p: p, name="b", device=True) \
+     .map(lambda p: p, name="c", device=True)
+    return app
+
+
+def test_durable_interior_stream_is_fusion_barrier():
+    base = _device_chain_app().build()
+    assert sorted(s.name for s in base.streams) == ["c"]  # a+b+c fuse
+    split = _device_chain_app(durable_mid=True).build()
+    names = sorted(s.name for s in split.streams)
+    assert names == ["a", "c"]  # durable 'a' stays a subject; b+c fuse
+    a_spec = next(s for s in split.streams if s.name == "a")
+    assert a_spec.durable
+
+
+def test_fused_segment_carries_entry_replay_and_exit_durability():
+    app = App("carry")
+
+    @app.driver
+    def feed(ctx):
+        return iter(())
+
+    src = app.sense("src", feed).durable()
+    a = src.map(lambda p: p, name="a", device=True).replay(from_="earliest")
+    b = a.map(lambda p: p, name="b", device=True)
+    b.durable(retention={"max_records": 64})
+    appl = app.build()
+    assert [s.name for s in appl.streams] == ["b"]
+    fused = appl.streams[0]
+    assert fused.replay_from == "earliest"     # entry's replay
+    assert fused.durable                       # exit's log
+    assert fused.retention == {"max_records": 64}
+    assert fused.inputs == ("src",)
