@@ -1,0 +1,189 @@
+"""Claim (tentpole PR 7): the bus crosses processes without losing its
+semantics.
+
+A 2-process pipeline — driver publishing on the host bus in THIS process,
+grouped/keyed consumers in SEPARATE worker processes attached through
+:class:`~repro.core.transport.RemoteBus` — must deliver every message exactly
+once, and a forced worker-process kill (``os._exit``, no goodbye) must
+re-home that member's unacknowledged backlog to survivors with zero loss,
+zero double-delivery, and zero per-key ordering violations.  Measured:
+
+* ``delivered_msgs_per_s`` — wire throughput of a 2-worker queue group
+  (publish on host, consume + ack over TCP, fsync per batch).
+* ``lost`` / ``duplicates`` — exactly-once accounting across the kill
+  (CI gates both at 0, and ``delivered == published``).
+* ``ordering_violations`` — per-key order across the keyed re-home (gate: 0).
+
+``run()`` returns the metric dict written to ``BENCH_transport.json``.  Pure
+platform code + stdlib subprocess — runs on BOTH CI matrix legs (no jax).
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+import subprocess
+import sys
+import tempfile
+import time
+
+from repro.core import FieldSpec, MessageBus, StreamSchema
+from repro.core.transport import BusServer
+
+from .common import emit
+
+SCHEMA = StreamSchema.of(k=FieldSpec("str"), v=FieldSpec("int"),
+                         i=FieldSpec("int"))
+_REPO = pathlib.Path(__file__).resolve().parent.parent
+WORKER = _REPO / "benchmarks" / "transport_worker.py"
+N = 2000
+KEYS = 16
+WAIT_S = 60.0
+
+
+def spawn_worker(addr: tuple[str, int], subject: str, group: str, name: str,
+                 outfile: str, *, key: str | None = None,
+                 kill_after: int | None = None) -> subprocess.Popen:
+    """Start one consumer process (see transport_worker.py) against a served
+    bus; reused verbatim by tests/test_transport.py."""
+    cmd = [sys.executable, str(WORKER), "--addr", f"{addr[0]}:{addr[1]}",
+           "--subject", subject, "--group", group, "--name", name,
+           "--outfile", outfile]
+    if key:
+        cmd += ["--key", key]
+    if kill_after is not None:
+        cmd += ["--kill-after", str(kill_after)]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(_REPO / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    return subprocess.Popen(cmd, env=env, cwd=str(_REPO))
+
+
+def read_records(*outfiles: str) -> list[tuple[str, int]]:
+    """Every ``(key, i)`` record the workers wrote (order preserved per
+    file, files concatenated)."""
+    records = []
+    for path in outfiles:
+        try:
+            with open(path) as f:
+                for line in f:
+                    k, _, i = line.strip().partition(",")
+                    if i:
+                        records.append((k, int(i)))
+        except FileNotFoundError:
+            pass
+    return records
+
+
+def wait_for(published: set, outfiles: list[str],
+             timeout: float = WAIT_S) -> list[tuple[str, int]]:
+    """Poll worker outfiles until every published record appears (or
+    timeout); returns the full record list (duplicates included)."""
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        records = read_records(*outfiles)
+        if set(records) >= published:
+            return records
+        time.sleep(0.05)
+    return read_records(*outfiles)
+
+
+def ordering_violations(outfiles: list[str]) -> int:
+    """Per-key order regressions within each worker's own record stream.
+    Keyed delivery pins a key to one member at a time and re-homes whole
+    partitions in order, so each file must see every key's ``i`` strictly
+    increasing."""
+    bad = 0
+    for path in outfiles:
+        last: dict[str, int] = {}
+        for k, i in read_records(path):
+            if i <= last.get(k, -1):
+                bad += 1
+            last[k] = i
+    return bad
+
+
+def await_members(bus, subject: str, group: str, n: int,
+                  timeout: float = WAIT_S) -> None:
+    """Block until ``n`` members joined the group — the bus is
+    fire-and-forget for subscriber-less subjects, so the driver must not
+    start publishing before the remote members' subscriptions land (worker
+    startup pays a multi-second interpreter+import cost)."""
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        info = bus.group_info(subject, group)
+        if info is not None and len(info["members"]) >= n:
+            return
+        time.sleep(0.05)
+    raise TimeoutError(
+        f"{n} remote members did not join {subject}/{group} in {timeout}s")
+
+
+def _publish_all(bus, tok, subject: str) -> set:
+    published = set()
+    per_key = [0] * KEYS
+    for n in range(N):
+        j = n % KEYS
+        k = f"key-{j}"
+        bus.publish(subject, {"k": k, "v": n, "i": per_key[j]}, token=tok)
+        published.add((k, per_key[j]))
+        per_key[j] += 1
+    return published
+
+
+def run() -> dict:
+    bus = MessageBus(default_queue_size=4096)
+    bus.register_subject("ticks", SCHEMA)
+    bus.register_subject("kticks", SCHEMA)
+    server = BusServer(bus, hb_timeout=8.0)
+    tok = bus.issue_token("driver", ["ticks", "kticks"])
+    tmp = tempfile.mkdtemp(prefix="bench_transport_")
+    procs: list[subprocess.Popen] = []
+    try:
+        # -- phase 1: 2-worker group throughput over the wire --------------
+        outs = [os.path.join(tmp, "g1.log"), os.path.join(tmp, "g2.log")]
+        procs += [spawn_worker(server.address, "ticks", "pool", f"g{i+1}",
+                               outs[i]) for i in range(2)]
+        await_members(bus, "ticks", "pool", 2)
+        t0 = time.perf_counter()
+        published = _publish_all(bus, tok, "ticks")
+        records = wait_for(published, outs)
+        wire_rate = len(set(records)) / (time.perf_counter() - t0)
+        phase1_lost = len(published - set(records))
+        phase1_dups = len(records) - len(set(records))
+
+        # -- phase 2: keyed consumers, one killed mid-stream ---------------
+        kouts = [os.path.join(tmp, "k1.log"), os.path.join(tmp, "k2.log")]
+        procs.append(spawn_worker(server.address, "kticks", "kpool", "k1",
+                                  kouts[0], key="k", kill_after=150))
+        procs.append(spawn_worker(server.address, "kticks", "kpool", "k2",
+                                  kouts[1], key="k"))
+        await_members(bus, "kticks", "kpool", 2)
+        kpublished = _publish_all(bus, tok, "kticks")
+        krecords = wait_for(kpublished, kouts)
+        lost = len(kpublished - set(krecords))
+        duplicates = len(krecords) - len(set(krecords))
+        violations = ordering_violations(kouts)
+
+        emit("transport_wire", 0.0,
+             f"2-worker wire rate={wire_rate:.0f}msg/s "
+             f"kill: lost={lost} dup={duplicates} ooo={violations}")
+        return {
+            "published": N,
+            "delivered": len(set(krecords)),
+            "delivered_msgs_per_s": round(wire_rate, 1),
+            "lost": lost + phase1_lost,
+            "duplicates": duplicates + phase1_dups,
+            "ordering_violations": violations,
+            "reaped_peers": server.stats()["disconnects"],
+        }
+    finally:
+        for p in procs:
+            if p.poll() is None:
+                p.terminate()
+        for p in procs:
+            try:
+                p.wait(timeout=5.0)
+            except subprocess.TimeoutExpired:
+                p.kill()
+        server.close()
+        bus.close()

@@ -36,6 +36,7 @@ ALL = {
     "scaling": "bench_scaling",
     "keyed": "bench_keyed",
     "durable": "bench_durable",
+    "transport": "bench_transport",
     "loc": "bench_loc",
     "reuse": "bench_reuse",
     "fusion": "bench_fusion",
@@ -97,6 +98,25 @@ def _gate(results: dict[str, dict]) -> list[str]:
             failures.append(
                 f"keyed: benchmark pipeline dropped "
                 f"{keyed.get('dropped')} messages (should be lossless)")
+    transport = results.get("transport")
+    if transport is not None:
+        if transport.get("lost", 1) != 0:
+            failures.append(
+                f"transport: {transport.get('lost')} messages lost across "
+                f"the worker-process kill (must be 0)")
+        if transport.get("duplicates", 1) != 0:
+            failures.append(
+                f"transport: {transport.get('duplicates')} double-deliveries "
+                f"across the worker-process kill (must be 0)")
+        if transport.get("ordering_violations", 1) != 0:
+            failures.append(
+                f"transport: {transport.get('ordering_violations')} per-key "
+                f"ordering violations across the cross-process re-home "
+                f"(must be 0)")
+        if transport.get("delivered", -1) != transport.get("published", 0):
+            failures.append(
+                f"transport: delivered {transport.get('delivered')} of "
+                f"{transport.get('published')} published messages")
     durable = results.get("durable")
     if durable is not None:
         if durable.get("publish_overhead_x", 99.0) > 2.0:

@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # CI entrypoint: deps + tier-1 tests + headless runs of the shipped examples
-# + benchmark artifacts with the fusion and queue-group scaling regression
-# gates.  Runs on two matrix
+# + benchmark artifacts with the per-claim regression gates (fusion, grouped
+# and keyed scaling, cross-process transport, durable overhead) + the docs
+# link/fence check.  Runs on two matrix
 # legs (.github/workflows/ci.yml): full deps, and minimal deps via
 # CI_SKIP_INSTALL=1 (no jax/zstandard/hypothesis) to exercise every
 # graceful-degradation path.
@@ -52,6 +53,14 @@ echo "== benchmarks: keyed stateful scaling gate =="
 # forced mid-run scale-down (pure platform code — runs on both matrix legs)
 python -m benchmarks.run --only keyed --gate
 
+echo "== benchmarks: cross-process transport gate =="
+# writes BENCH_transport.json; a 2-process pipeline (driver here, grouped +
+# keyed consumers in worker processes over TCP) must deliver every message
+# exactly once — zero loss, zero double-delivery, zero per-key ordering
+# violations — across a forced consumer-process kill (pure platform code —
+# runs on both matrix legs)
+python -m benchmarks.run --only transport --gate
+
 echo "== benchmarks: durable publish overhead gate =="
 # writes BENCH_durable.json; fails if publishing on a durable subject costs
 # more than 2x fire-and-forget, or a late joiner's replay does not drain the
@@ -61,5 +70,10 @@ python -m benchmarks.run --only durable --gate
 echo "== benchmarks: productivity claim =="
 # writes BENCH_loc.json
 python -m benchmarks.run --only loc
+
+echo "== docs check =="
+# docs/ + README relative links must resolve; python fences in docs/*.md
+# must compile (stdlib only — both matrix legs, also a standalone CI job)
+python tools/check_docs.py
 
 echo "ci.sh: OK"

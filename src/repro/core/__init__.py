@@ -4,7 +4,7 @@ Entities (§2), Operator coherence + lifecycle (§4), message bus (NATS analog),
 sidecar metrics, serverless autoscaling, platform state, and the 3-method SDK.
 """
 from .app import Application, AppValidationError
-from .bus import (KEYED_PARTITIONS, BusError, KeyedGroup, MessageBus,
+from .bus import (KEYED_PARTITIONS, BusError, BusLike, KeyedGroup, MessageBus,
                   QueueGroup, Subscription, Unauthorized, UnknownSubject,
                   decode_message, decode_payload, encode_message,
                   encode_payload, drain, partition_of, partition_owner,
@@ -20,9 +20,12 @@ from .fusion import FusedStage, fuse_application, plan_segments
 from .operator import CoherenceError, Operator, OperatorError
 from .schema import ConfigSchema, FieldSpec, Message, StreamSchema
 from .sdk import BatchInterrupted, DataX, LogicContext, sdk_entrypoint
-from .serverless import AutoScaler, Executor, InstanceHandle, ScalePolicy
+from .serverless import (AutoScaler, Executor, InstanceHandle, RemoteWorker,
+                         ScalePolicy)
 from .sidecar import Sidecar
 from .state import Database, KeyedStore, StateError, StateStore, Table
+from .transport import (BusServer, RemoteBus, RemoteSubscription,
+                        TransportError)
 
 __all__ = [
     "App", "DSLError", "GadgetHandle", "SchemaMismatch", "StreamHandle",
@@ -31,8 +34,8 @@ __all__ = [
     "CompressionError", "codec_name", "train_dictionary",
     "SNAPSHOT_TABLE", "DurableError", "DurableLog", "Retention",
     "iter_log", "resolve_replay_from", "schema_fingerprint",
-    "KEYED_PARTITIONS", "BusError", "KeyedGroup", "MessageBus", "QueueGroup",
-    "Subscription", "Unauthorized", "UnknownSubject",
+    "KEYED_PARTITIONS", "BusError", "BusLike", "KeyedGroup", "MessageBus",
+    "QueueGroup", "Subscription", "Unauthorized", "UnknownSubject",
     "decode_message", "decode_payload", "encode_message", "encode_payload",
     "drain", "partition_of", "partition_owner", "ring_assignment",
     "stable_hash",
@@ -42,7 +45,8 @@ __all__ = [
     "CoherenceError", "Operator", "OperatorError",
     "ConfigSchema", "FieldSpec", "Message", "StreamSchema",
     "BatchInterrupted", "DataX", "LogicContext", "sdk_entrypoint",
-    "AutoScaler", "Executor", "InstanceHandle", "ScalePolicy",
+    "AutoScaler", "Executor", "InstanceHandle", "RemoteWorker", "ScalePolicy",
     "Sidecar",
     "Database", "KeyedStore", "StateError", "StateStore", "Table",
+    "BusServer", "RemoteBus", "RemoteSubscription", "TransportError",
 ]

@@ -51,8 +51,14 @@ Subject-based pub/sub with:
   queue behind the replay and the cursor dedupe drops the overlap at the
   flip, which also keeps partitions from moving twice per recovery.
 
-This is deliberately an in-process bus: the container is one host.  The class
-is factored so a NATS-backed implementation only replaces ``_deliver``.
+:class:`MessageBus` is the in-process implementation of the platform's
+**transport seam** (:class:`BusLike`): everything instance-facing — the
+sidecar's subscriptions and publishes, the executor's worker pools — is
+written against that surface, so a process can swap in
+:class:`~.transport.RemoteBus` (a TCP client speaking length-prefixed
+codec-tagged frames to a :class:`~.transport.BusServer` wrapping a bus like
+this one) and join queue groups and keyed rings across host boundaries
+without any other code changing.  See ``docs/wire-protocol.md``.
 """
 from __future__ import annotations
 
@@ -62,7 +68,7 @@ import queue
 import threading
 import time
 from collections import deque
-from typing import TYPE_CHECKING, Iterable, Sequence
+from typing import TYPE_CHECKING, Iterable, Protocol, Sequence
 
 import msgpack
 import numpy as np
@@ -101,14 +107,20 @@ def _ext_hook(code, data):
 
 
 def encode_payload(payload: dict) -> bytes:
+    """Wire-encode one payload dict: numpy-aware msgpack (ndarrays travel
+    as ExtType 42 ``.npy`` bytes, ``allow_pickle=False``)."""
     return msgpack.packb(payload, default=_default, use_bin_type=True)
 
 
 def decode_payload(raw: bytes) -> dict:
+    """Inverse of :func:`encode_payload`."""
     return msgpack.unpackb(raw, ext_hook=_ext_hook, raw=False, strict_map_key=False)
 
 
 def encode_message(msg: Message) -> bytes:
+    """Wire-encode a full :class:`Message` envelope (subject, seq, ts,
+    headers, payload) — the byte format shared by ``wire=True``
+    subscriptions, durable-log records, and transport ``msg`` frames."""
     return msgpack.packb(
         {"subject": msg.subject, "seq": msg.seq, "ts": msg.ts,
          "headers": msg.headers, "payload": msg.payload},
@@ -116,6 +128,7 @@ def encode_message(msg: Message) -> bytes:
 
 
 def decode_message(raw: bytes) -> Message:
+    """Inverse of :func:`encode_message`."""
     d = msgpack.unpackb(raw, ext_hook=_ext_hook, raw=False, strict_map_key=False)
     return Message(subject=d["subject"], payload=d["payload"], seq=d["seq"],
                    ts=d["ts"], headers=d.get("headers", {}))
@@ -135,6 +148,61 @@ class Unauthorized(BusError):
 
 class UnknownSubject(BusError):
     pass
+
+
+# ---------------------------------------------------------------------------
+# The transport seam
+# ---------------------------------------------------------------------------
+
+class BusLike(Protocol):
+    """The transport seam: what an instance-facing bus must provide.
+
+    :class:`MessageBus` (in-process delivery) and
+    :class:`~.transport.RemoteBus` (a TCP client whose subscriptions are
+    first-class queue-group / keyed-ring members on a remote host's bus)
+    both satisfy this surface, and :class:`~.sidecar.Sidecar` /
+    :class:`~.serverless.Executor` are written against it alone — which is
+    what makes the platform's data plane transport-pluggable (the DataX
+    claim that the *platform* owns the communication mechanism).
+    """
+
+    def subscribe(self, subject: str, *, token: str,
+                  maxsize: int | None = None, wire: bool = False,
+                  name: str = "", group: str | None = None,
+                  key: str | None = None, partitions: int = 64,
+                  replay_from=None):
+        """Open a subscription; kwargs match :meth:`MessageBus.subscribe`."""
+        ...
+
+    def unsubscribe(self, sub) -> None:
+        """Leave the subject (group members re-home their backlog)."""
+        ...
+
+    def publish(self, subject: str, payload: dict, *, token: str,
+                headers: dict | None = None):
+        """Publish one payload; raises on authz/schema/subject errors."""
+        ...
+
+    def issue_token(self, name: str,
+                    subjects: Iterable[str] | None = None) -> str:
+        """Mint an auth token scoped to ``subjects`` (None = all)."""
+        ...
+
+    def revoke_token(self, token: str) -> None:
+        """Invalidate a token."""
+        ...
+
+    def note_lost(self, subject: str, n: int = 1) -> None:
+        """Account messages destroyed after delivery (poison messages)."""
+        ...
+
+    def group_info(self, subject: str, group: str) -> dict | None:
+        """Snapshot of one queue group (None if it does not exist)."""
+        ...
+
+    def durable_log(self, subject: str):
+        """The subject's durable log (or a remote handle to it), or None."""
+        ...
 
 
 # ---------------------------------------------------------------------------
@@ -461,6 +529,35 @@ class Subscription:
         self.healed += len(healed)
         return healed
 
+    def requeue_front(self, pairs: Sequence[tuple]) -> int:
+        """Re-insert undelivered ``(tag, item)`` pairs at the FRONT of the
+        mailbox, oldest first, restoring keyed per-partition backlog counts.
+
+        The transport layer uses this when a remote peer drops: frames that
+        were shipped over the wire but never acknowledged go back ahead of
+        the still-queued backlog *before* the peer's proxy subscription
+        departs, so the group's atomic hand-off re-homes them to survivors
+        in their original order (per-key order holds across a peer crash
+        exactly as it does across an in-process departure).  The mailbox may
+        temporarily exceed ``maxsize`` — requeued items are never dropped.
+        Returns the number requeued (0 when the mailbox is already closed;
+        the caller's departure path then accounts them as lost)."""
+        if not pairs:
+            return 0
+        with self._lock:
+            if self.closed:
+                self.dropped += len(pairs)
+                return 0
+            q = self._q
+            with q.mutex:
+                for tag, item in reversed(pairs):
+                    q.queue.appendleft((tag, item))
+                q.not_empty.notify(len(pairs))
+            for tag, _ in pairs:
+                if tag is not None and self._keyed_group is not None:
+                    self._keyed_group.note_requeued(tag)
+            return len(pairs)
+
     def qsize(self) -> int:
         return self._q.qsize() + len(self._pending)
 
@@ -638,6 +735,11 @@ class QueueGroup:
 
     def note_consumed(self, tag) -> None:
         """A mailbox popped (or evicted) an item tagged ``tag``."""
+        pass
+
+    def note_requeued(self, tag) -> None:
+        """A popped item tagged ``tag`` went back into a mailbox unconsumed
+        (transport redelivery via :meth:`Subscription.requeue_front`)."""
         pass
 
     def depart(self, sub: Subscription, reoffer, lost) -> bool:
@@ -848,6 +950,11 @@ class KeyedGroup(QueueGroup):
             else:
                 self._partition_backlog.pop(tag, None)
 
+    def note_requeued(self, tag) -> None:
+        with self._pb_lock:
+            self._partition_backlog[tag] = \
+                self._partition_backlog.get(tag, 0) + 1
+
     def _assignment_locked(self) -> dict[int, str]:
         return dict(self._ring_locked())
 
@@ -918,6 +1025,8 @@ class MessageBus:
 
     # -- administration (called by the Operator, not by user code) ----------
     def register_subject(self, subject: str, schema: StreamSchema | None = None) -> None:
+        """Create a subject (optionally schema-validated); publishing to or
+        subscribing on an unregistered subject raises UnknownSubject."""
         with self._lock:
             if subject in self._subjects:
                 raise BusError(f"subject {subject!r} already registered")
@@ -928,6 +1037,8 @@ class MessageBus:
             self._lost[subject] = 0
 
     def unregister_subject(self, subject: str) -> None:
+        """Remove a subject, closing every subscription on it; a durable
+        subject's log flushes and its on-disk history stays readable."""
         with self._lock:
             if subject not in self._subjects:
                 raise UnknownSubject(subject)
@@ -967,10 +1078,13 @@ class MessageBus:
             return self._durable.get(subject)
 
     def subjects(self) -> list[str]:
+        """All registered subject names, sorted."""
         with self._lock:
             return sorted(self._subjects)
 
     def schema_of(self, subject: str) -> StreamSchema:
+        """The subject's declared :class:`StreamSchema` (untyped when none
+        was registered); raises UnknownSubject for unregistered names."""
         with self._lock:
             if subject not in self._subjects:
                 raise UnknownSubject(subject)
@@ -984,6 +1098,8 @@ class MessageBus:
         return token
 
     def revoke_token(self, token: str) -> None:
+        """Invalidate a token; later publishes/subscribes with it raise
+        Unauthorized (idempotent for unknown tokens)."""
         with self._lock:
             self._tokens.pop(token, None)
 
@@ -1000,6 +1116,12 @@ class MessageBus:
     # -- data plane ----------------------------------------------------------
     def publish(self, subject: str, payload: dict, *, token: str,
                 headers: dict | None = None) -> Message:
+        """Publish one payload to a subject and deliver per policy:
+        broadcast to ungrouped subscribers, one member per queue group
+        (round-robin or keyed).  Validates authz + schema eagerly; on a
+        durable subject the record is appended BEFORE delivery and the
+        returned message carries ``headers["offset"]``.  Fire-and-forget:
+        a message no subscriber could take is dropped (and counted)."""
         if self._closed:
             raise BusError("bus closed")
         with self._lock:
@@ -1145,6 +1267,9 @@ class MessageBus:
             return sub
 
     def unsubscribe(self, sub: Subscription) -> None:
+        """Close a subscription and leave its group; a group member's
+        queued backlog re-homes atomically to surviving members (per-key
+        order preserved for keyed groups)."""
         g: QueueGroup | None = None
         with self._lock:
             subs = self._subs.get(sub.subject)
@@ -1241,6 +1366,8 @@ class MessageBus:
             return max(solo, pooled)
 
     def close(self) -> None:
+        """Shut the bus down: refuse further publishes, close every
+        subscription, flush root-backed durable-log tails to disk."""
         with self._lock:
             self._closed = True
             for subs in self._subs.values():

@@ -879,6 +879,9 @@ class App:
 
     def database(self, name: str, *, engine: str = "memkv",
                  tables: Mapping[str, Sequence[str]] | None = None) -> "App":
+        """Declare a platform-managed database for this app's entities
+        (``engine``: ``"memkv"`` or ``"filekv"``); instances reach it as
+        ``ctx.db`` / ``dx.db``."""
         if any(d.name == name for d in self._databases):
             raise DSLError(f"database {name!r} already declared "
                            f"in app {self.name!r}")
@@ -1014,8 +1017,12 @@ class App:
 # ---------------------------------------------------------------------------
 
 @contextlib.contextmanager
-def connect(*, start: bool = True, **operator_kwargs: Any) -> Iterator[Operator]:
-    """Context manager owning an Operator's lifecycle::
+def connect(*, start: bool = True, serve: bool | int | tuple | None = None,
+            remote: str | tuple | None = None, peer: str = "",
+            **operator_kwargs: Any) -> Iterator[Any]:
+    """Context manager owning one process's attachment to a deployment.
+
+    The default form owns a fresh in-process :class:`Operator`::
 
         with connect() as op:
             app.deploy(op)
@@ -1024,8 +1031,37 @@ def connect(*, start: bool = True, **operator_kwargs: Any) -> Iterator[Operator]
 
     ``start=False`` skips the reconcile loop (unit-test topologies that only
     need deploy + bus flow).  Extra kwargs go to :class:`Operator`.
+
+    ``serve=True`` (or a port, or a ``(host, port)`` tuple) additionally
+    exposes the operator's bus over TCP — read the bound address from
+    ``op.bus_address`` — so other processes can join.
+
+    ``remote="host:port"`` attaches to an EXISTING deployment instead of
+    creating one: yields a :class:`~.serverless.RemoteWorker` whose
+    instances run in this process but subscribe/publish over the wire as
+    first-class queue-group / keyed-ring members (``peer`` names this
+    process in the host's per-peer transport metrics).  Mutually exclusive
+    with ``serve`` and operator kwargs.
     """
+    if remote is not None:
+        if serve is not None or operator_kwargs:
+            raise DSLError("connect(remote=...) attaches to an existing "
+                           "deployment: serve=/Operator kwargs do not apply")
+        from .serverless import RemoteWorker
+        worker = RemoteWorker(remote, peer=peer)
+        try:
+            yield worker
+        finally:
+            worker.close()
+        return
     op = Operator(**operator_kwargs)
+    if serve:
+        if serve is True:
+            op.serve()
+        elif isinstance(serve, tuple):
+            op.serve(*serve)
+        else:
+            op.serve(port=int(serve))
     if start:
         op.start()
     try:

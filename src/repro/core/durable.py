@@ -50,7 +50,8 @@ from typing import TYPE_CHECKING, Iterable
 
 import msgpack
 
-from .compression import compress, decompress, train_dictionary
+from .compression import (HAS_ZSTD, TAG_ZLIB, TAG_ZSTD_DICT, compress,
+                          decompress, train_dictionary)
 from .schema import Message, StreamSchema
 
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard (state -> bus)
@@ -477,6 +478,19 @@ class DurableLog:
             self._write_file(f"seg-{seg.base_offset:012d}.dxl", seg.to_bytes())
             self._write_catalog_locked()
 
+    def _blob_readable(self, blob: bytes | None) -> bool:
+        """Can a sealed blob be decompressed in THIS environment?  Raw-record
+        segments (no blob) always can; ``DXL1`` is stdlib; ``DXZ1``/legacy
+        frames need zstd; ``DXZ2`` needs the (already validated) dictionary."""
+        if blob is None:
+            return True
+        tag = bytes(blob[:4])
+        if tag == TAG_ZLIB:
+            return True
+        if tag == TAG_ZSTD_DICT:
+            return HAS_ZSTD and self._dict is not None
+        return HAS_ZSTD   # DXZ1 or a legacy untagged zstd frame
+
     def _load_locked(self) -> None:
         cat_path = os.path.join(self.root, _CATALOG_FILE)  # type: ignore[arg-type]
         if not os.path.exists(cat_path):
@@ -485,19 +499,46 @@ class DurableLog:
             cat = msgpack.unpackb(decompress(f.read()), raw=False,
                                   strict_map_key=False)
         if cat.get("has_dict"):
+            # A missing dict.bin must not fail the catalog load: DXZ2
+            # segments become unreadable (dropped below, counted as
+            # evictions) but self-describing history still loads.
             dict_path = os.path.join(self.root, _DICT_FILE)  # type: ignore[arg-type]
             if os.path.exists(dict_path):
                 with open(dict_path, "rb") as f:
                     self._dict = f.read()
-                self._train_after = 0
         segments: list[Segment] = []
         for name in sorted(os.listdir(self.root)):       # type: ignore[arg-type]
             if not (name.startswith("seg-") and name.endswith(".dxl")):
                 continue
             with open(os.path.join(self.root, name), "rb") as f:  # type: ignore[arg-type]
                 segments.append(Segment.from_bytes(f.read()))
-        if segments:
-            self._segments = segments
+        if self._dict is not None:
+            # A present-but-corrupt dict.bin must degrade exactly like a
+            # missing one — validate against the first dictionary-tagged
+            # blob before trusting it for every later read
+            probe = next((s.blob for s in segments if s.blob is not None
+                          and bytes(s.blob[:4]) == TAG_ZSTD_DICT), None)
+            try:
+                if probe is not None:
+                    decompress(probe, dictionary=self._dict)
+            except Exception:   # zstd raises its own types on garbage dicts
+                self._dict = None
+        if self._dict is not None:
+            self._train_after = 0   # keep using the persisted dictionary
+        kept: list[Segment] = []
+        dropped_records = dropped_segments = 0
+        for seg in segments:
+            if self._blob_readable(seg.blob):
+                kept.append(seg)
+                continue
+            dropped_records += len(seg)
+            dropped_segments += 1
+            path = os.path.join(self.root,               # type: ignore[arg-type]
+                                f"seg-{seg.base_offset:012d}.dxl")
+            if os.path.exists(path):
+                os.remove(path)
+        if kept and kept[-1] is segments[-1]:
+            self._segments = kept
             tail = self._segments[-1]
             if tail.records is None:
                 # the tail rolled (blob form) before the process died —
@@ -510,8 +551,14 @@ class DurableLog:
                 tail.blob = None
                 tail.tss = []
             tail.sealed = False   # resume appending to the tail
-        self.evicted_records = cat.get("evicted_records", 0)
-        self.evicted_segments = cat.get("evicted_segments", 0)
+        elif segments:
+            # the on-disk tail was unreadable (or nothing survived): resume
+            # appending at the old head so offsets stay dense and monotone
+            head = max(cat.get("next_offset", 0), segments[-1].next_offset)
+            self._segments = kept + [Segment(head)]
+        self.evicted_records = cat.get("evicted_records", 0) + dropped_records
+        self.evicted_segments = (cat.get("evicted_segments", 0)
+                                 + dropped_segments)
         self.last_update = cat.get("last_update", 0.0)
 
     def close(self) -> None:

@@ -82,6 +82,7 @@ class Operator:
         self._pending_sensors: list[str] = []
         self._reconciler: threading.Thread | None = None
         self._stop = threading.Event()
+        self._bus_server = None  # transport.BusServer once serve() is called
 
     # ------------------------------------------------------------------ util
     def _event(self, kind: str, detail: str) -> None:
@@ -114,6 +115,7 @@ class Operator:
     # =====================================================================
 
     def register_driver(self, spec: DriverSpec) -> None:
+        """Register a driver (sensor logic) spec; name must be new."""
         with self._lock:
             if spec.name in self._drivers:
                 raise OperatorError(f"driver {spec.name!r} already registered")
@@ -121,6 +123,7 @@ class Operator:
         self._event("register", f"driver/{spec.name}@v{spec.version}")
 
     def register_analytics_unit(self, spec: AnalyticsUnitSpec) -> None:
+        """Register an analytics-unit spec; name must be new."""
         with self._lock:
             if spec.name in self._aus:
                 raise OperatorError(f"analytics unit {spec.name!r} already registered")
@@ -128,6 +131,7 @@ class Operator:
         self._event("register", f"au/{spec.name}@v{spec.version}")
 
     def register_actuator(self, spec: ActuatorSpec) -> None:
+        """Register an actuator (gadget logic) spec; name must be new."""
         with self._lock:
             if spec.name in self._actuators:
                 raise OperatorError(f"actuator {spec.name!r} already registered")
@@ -137,18 +141,26 @@ class Operator:
     # -- upgrades (§4: cascade + compatibility or converter) -----------------
     def upgrade_analytics_unit(self, spec: AnalyticsUnitSpec,
                                converter: Callable[[dict], dict] | None = None) -> None:
+        """Upgrade an AU to a higher version and cascade to every running
+        stream using it; an incompatible config schema needs a
+        ``converter(old_cfg) -> new_cfg`` that succeeds for all users
+        (paper §4)."""
         self._upgrade_code_entity("au", self._aus, spec, converter,
                                   users=lambda: [s for s in self._streams.values()
                                                  if s.analytics_unit == spec.name])
 
     def upgrade_driver(self, spec: DriverSpec,
                        converter: Callable[[dict], dict] | None = None) -> None:
+        """Upgrade a driver and cascade to its sensors; see
+        :meth:`upgrade_analytics_unit` for converter semantics."""
         self._upgrade_code_entity("driver", self._drivers, spec, converter,
                                   users=lambda: [s for s in self._sensors.values()
                                                  if s.driver == spec.name])
 
     def upgrade_actuator(self, spec: ActuatorSpec,
                          converter: Callable[[dict], dict] | None = None) -> None:
+        """Upgrade an actuator and cascade to its gadgets; see
+        :meth:`upgrade_analytics_unit` for converter semantics."""
         self._upgrade_code_entity("actuator", self._actuators, spec, converter,
                                   users=lambda: [g for g in self._gadgets.values()
                                                  if g.actuator == spec.name])
@@ -198,6 +210,7 @@ class Operator:
 
     # -- deletion (§4: refuse while in use) -----------------------------------
     def delete_driver(self, name: str) -> None:
+        """Remove a driver; refused (CoherenceError) while sensors use it."""
         with self._lock:
             if name not in self._drivers:
                 raise OperatorError(f"driver {name!r} not registered")
@@ -209,6 +222,7 @@ class Operator:
         self._event("delete", f"driver/{name}")
 
     def delete_analytics_unit(self, name: str) -> None:
+        """Remove an AU; refused (CoherenceError) while streams use it."""
         with self._lock:
             if name not in self._aus:
                 raise OperatorError(f"analytics unit {name!r} not registered")
@@ -221,6 +235,7 @@ class Operator:
         self._event("delete", f"au/{name}")
 
     def delete_actuator(self, name: str) -> None:
+        """Remove an actuator; refused (CoherenceError) while gadgets use it."""
         with self._lock:
             if name not in self._actuators:
                 raise OperatorError(f"actuator {name!r} not registered")
@@ -262,6 +277,8 @@ class Operator:
         self._event("register", f"sensor/{spec.name} (driver={spec.driver})")
 
     def start_pending_sensors(self) -> None:
+        """Spawn the driver instances of sensors registered with
+        ``start=False`` (deferred so a topology can be staged first)."""
         with self._lock:
             pending, self._pending_sensors = self._pending_sensors, []
         for name in pending:
@@ -282,6 +299,9 @@ class Operator:
             node=driver.node_affinity)
 
     def create_stream(self, spec: StreamSpec) -> None:
+        """Create a stream: validate coherence (AU exists, inputs
+        registered, delivery/key/replay settings consistent), register its
+        bus subject, and start its instances."""
         with self._lock:
             if spec.name in self._stream_names():
                 raise OperatorError(f"name {spec.name!r} already a stream/sensor")
@@ -388,6 +408,8 @@ class Operator:
             max_batch=spec.max_batch, replay_from=replay_from)
 
     def register_gadget(self, spec: GadgetSpec) -> None:
+        """Create a gadget: validate its actuator + input streams and
+        start actuator instances pooled under the gadget's name."""
         with self._lock:
             if spec.name in self._gadgets:
                 raise OperatorError(f"gadget {spec.name!r} already registered")
@@ -415,6 +437,7 @@ class Operator:
         self._event("register", f"gadget/{spec.name} (actuator={spec.actuator})")
 
     def create_database(self, spec: DatabaseSpec) -> Database:
+        """Create a platform-managed database entity (memkv or filekv)."""
         with self._lock:
             if spec.name in self._databases:
                 raise OperatorError(f"database {spec.name!r} already registered")
@@ -432,6 +455,8 @@ class Operator:
 
     # -- deletion with coherence ------------------------------------------------
     def delete_sensor(self, name: str) -> None:
+        """Remove a sensor and its subject; refused while downstream
+        streams/gadgets consume it."""
         with self._lock:
             if name not in self._sensors:
                 raise OperatorError(f"sensor {name!r} not registered")
@@ -443,6 +468,8 @@ class Operator:
         self._event("delete", f"sensor/{name}")
 
     def delete_stream(self, name: str) -> None:
+        """Remove a stream and its subject; refused while downstream
+        streams/gadgets consume it."""
         with self._lock:
             if name not in self._streams:
                 raise OperatorError(f"stream {name!r} not registered")
@@ -454,6 +481,7 @@ class Operator:
         self._event("delete", f"stream/{name}")
 
     def delete_gadget(self, name: str) -> None:
+        """Remove a gadget and tear down its actuator instances."""
         with self._lock:
             if name not in self._gadgets:
                 raise OperatorError(f"gadget {name!r} not registered")
@@ -499,6 +527,8 @@ class Operator:
     # =====================================================================
 
     def start(self) -> None:
+        """Start the background reconcile loop (restart crashed
+        instances, autoscale, replace stragglers); idempotent."""
         if self._reconciler is not None:
             return
         self._stop.clear()
@@ -514,6 +544,9 @@ class Operator:
                 self._event("reconcile-error", repr(e))
 
     def reconcile_once(self) -> None:
+        """One reconcile pass: restart crashed instances, apply
+        autoscaling decisions, replace stragglers.  The loop started by
+        :meth:`start` calls this; tests call it directly."""
         self._restart_crashed()
         self._apply_autoscale()
         self._replace_stragglers()
@@ -597,10 +630,52 @@ class Operator:
                                              f"vs median {median:.4f}s)")
 
     # =====================================================================
+    # Cross-host transport
+    # =====================================================================
+
+    def serve(self, host: str = "127.0.0.1", port: int = 0, *,
+              window: int | None = None,
+              hb_timeout: float = 10.0) -> tuple[str, int]:
+        """Expose this deployment's bus over TCP so other processes can join.
+
+        Starts a :class:`~.transport.BusServer` wrapping :attr:`bus`; remote
+        processes (:class:`~.serverless.RemoteWorker`, or a bare
+        :class:`~.transport.RemoteBus`) then subscribe to any registered
+        stream as first-class queue-group / keyed-ring members — the
+        cross-host worker-pool story.  Idempotent; returns the bound
+        ``(host, port)`` (``port=0`` lets the OS pick).  The server is torn
+        down by :meth:`shutdown`."""
+        from .transport import DEFAULT_WINDOW, BusServer
+        with self._lock:
+            if self._bus_server is not None:
+                return self._bus_server.address
+            self._bus_server = BusServer(
+                self.bus, host, port, window=window or DEFAULT_WINDOW,
+                hb_timeout=hb_timeout)
+            addr = self._bus_server.address
+        self._event("serve", f"bus exposed at {addr[0]}:{addr[1]}")
+        return addr
+
+    @property
+    def bus_address(self) -> tuple[str, int] | None:
+        """The served bus's ``(host, port)``, or None before :meth:`serve`."""
+        with self._lock:
+            return None if self._bus_server is None else self._bus_server.address
+
+    def transport_stats(self) -> dict | None:
+        """Server-side federated transport metrics (per-peer connection
+        state, frames/bytes in/out, reaps); None before :meth:`serve`."""
+        with self._lock:
+            server = self._bus_server
+        return None if server is None else server.stats()
+
+    # =====================================================================
     # Introspection / shutdown
     # =====================================================================
 
     def describe(self) -> dict:
+        """Registered-entity snapshot: versions per code entity, names of
+        sensors/streams/gadgets/databases, live instance ids."""
         with self._lock:
             return {
                 "drivers": {n: s.version for n, s in self._drivers.items()},
@@ -618,6 +693,7 @@ class Operator:
         return sorted(self._stream_names())
 
     def metrics(self) -> dict:
+        """Per-instance sidecar metrics keyed by instance id (docs/metrics.md)."""
         return {h.instance_id: h.sidecar.metrics()
                 for h in self.executor.all_instances()}
 
@@ -633,9 +709,15 @@ class Operator:
                                   name=name, replay_from=replay_from)
 
     def shutdown(self) -> None:
+        """Stop the reconciler, the bus server (reaping remote members),
+        every instance, and finally the bus itself."""
         self._stop.set()
         if self._reconciler is not None:
             self._reconciler.join(timeout=2.0)
             self._reconciler = None
+        with self._lock:
+            server, self._bus_server = self._bus_server, None
+        if server is not None:
+            server.close()
         self.executor.shutdown()
         self.bus.close()

@@ -18,7 +18,7 @@ import time
 import traceback
 from typing import Any, Callable, Mapping, Sequence
 
-from .bus import MessageBus
+from .bus import BusLike, MessageBus
 from .sdk import BatchInterrupted, DataX, LogicContext, is_sdk_style
 from .sidecar import Sidecar
 from .state import Database
@@ -52,9 +52,14 @@ class InstanceHandle:
 
 
 class Executor:
-    """Thread-backed serverless fabric."""
+    """Thread-backed serverless fabric.
 
-    def __init__(self, bus: MessageBus):
+    ``bus`` is anything satisfying the :class:`~.bus.BusLike` seam — the
+    in-process :class:`~.bus.MessageBus` or a :class:`~.transport.RemoteBus`
+    speaking TCP to another host's bus: instances run identically either
+    way, which is what makes :class:`RemoteWorker` a two-line wrapper."""
+
+    def __init__(self, bus: MessageBus | BusLike):
         self._bus = bus
         self._instances: dict[str, InstanceHandle] = {}
         self._lock = threading.RLock()
@@ -279,6 +284,63 @@ class Executor:
             self._instances.clear()
         for h in handles:
             h.stop()
+
+
+# ---------------------------------------------------------------------------
+# Cross-host workers
+# ---------------------------------------------------------------------------
+
+class RemoteWorker:
+    """A worker process's attachment to a remote deployment: one
+    :class:`~.transport.RemoteBus` connection plus a local :class:`Executor`
+    running instances against it.
+
+    The host process calls :meth:`~.operator.Operator.serve`; a worker
+    process then does::
+
+        worker = RemoteWorker("127.0.0.1:47000", peer="gpu-box-1")
+        worker.start_instance(entity_kind="analytics_unit", ...,
+                              inputs=("readings",), output="scores",
+                              group="scores", key="sensor_id")
+
+    and its instances join the host's queue groups / keyed rings as
+    first-class members — the rendezvous ring hashes their stable
+    subscription names, so cross-host partition hand-off and crashed-worker
+    backlog re-homing behave exactly as in-process.  ``start_instance``
+    takes the same kwargs as :meth:`Executor.start_instance`.
+    """
+
+    def __init__(self, address, *, peer: str = "", connect_timeout: float = 5.0,
+                 **remote_kwargs):
+        from .transport import RemoteBus
+        self.bus = RemoteBus(address, peer=peer,
+                             connect_timeout=connect_timeout, **remote_kwargs)
+        self.executor = Executor(self.bus)
+
+    def start_instance(self, **kwargs) -> InstanceHandle:
+        """Run one instance locally, subscribed/publishing over the wire
+        (same signature as :meth:`Executor.start_instance`)."""
+        return self.executor.start_instance(**kwargs)
+
+    def all_instances(self) -> list[InstanceHandle]:
+        """Handles of every instance this worker is running."""
+        return self.executor.all_instances()
+
+    def metrics(self) -> dict:
+        """Per-instance sidecar metrics, each carrying the federated
+        ``transport`` block (connection state, frames, reconnects)."""
+        return {h.instance_id: h.sidecar.metrics()
+                for h in self.executor.all_instances()}
+
+    def transport_stats(self) -> dict:
+        """This worker's client-side connection counters."""
+        return self.bus.transport_stats()
+
+    def close(self) -> None:
+        """Stop every instance (their unsubscribes re-home backlog to
+        surviving members on the host), then drop the connection."""
+        self.executor.shutdown()
+        self.bus.close()
 
 
 # ---------------------------------------------------------------------------

@@ -17,14 +17,19 @@ import threading
 import time
 from typing import Sequence
 
-from .bus import MessageBus, Subscription
+from .bus import BusLike, MessageBus, Subscription
 from .schema import Message
 
 
 class Sidecar:
-    """Connection + subscription + publish manager, with metrics."""
+    """Connection + subscription + publish manager, with metrics.
 
-    def __init__(self, instance_id: str, bus: MessageBus, *,
+    ``bus`` is any :class:`~.bus.BusLike` — the in-process bus or a
+    :class:`~.transport.RemoteBus`; in the remote case the sidecar's
+    :meth:`metrics` additionally carries the federated ``transport`` block
+    (connection state, frames/bytes in/out, reconnects)."""
+
+    def __init__(self, instance_id: str, bus: MessageBus | BusLike, *,
                  inputs: Sequence[str] = (), output: str | None = None,
                  token: str | None = None, queue_size: int = 256,
                  wire: bool = False, group: str | None = None,
@@ -204,6 +209,14 @@ class Sidecar:
                 out[subject] = log.info()
         return out
 
+    def _transport_metrics(self) -> dict | None:
+        """Client-side wire counters when the bus is remote (None when the
+        bus is in-process): per-peer connection state, frames/bytes in/out,
+        and reconnect count — the federated half of docs/metrics.md's
+        transport section."""
+        stats = getattr(self._bus, "transport_stats", None)
+        return stats() if callable(stats) else None
+
     def metrics(self) -> dict:
         received = sum(s.received for s in self._subs)
         dropped = sum(s.dropped for s in self._subs)
@@ -255,6 +268,8 @@ class Sidecar:
                 "snapshot_age_s": (
                     time.time() - stats["last_snapshot_ts"]
                     if stats.get("last_snapshot_ts") else None),
+                # federated transport view (remote buses only, else None)
+                "transport": self._transport_metrics(),
                 "uptime_s": time.monotonic() - self.started_at,
                 "idle_s": time.monotonic() - self.last_activity,
             }

@@ -264,11 +264,16 @@ class KeyedStore:
 
     # -- per-key API ---------------------------------------------------------
     def get(self, key: Any, default: Any = None) -> Any:
+        """The key's current value (``default`` for absent or TTL-expired
+        keys)."""
         with self._table._lock:
             row = self._expire_locked(key, self._table.get(key))
         return row["value"] if row is not None else default
 
     def put(self, key: Any, value: Any, *, offset: int | None = None) -> None:
+        """Set the key's value; ``offset`` stamps the durable-log position
+        this update reflects (kept from the previous row when omitted) so
+        :meth:`apply_once` can dedupe replays."""
         with self._table._lock:
             if offset is None:
                 prev = self._table.get(key)
@@ -314,9 +319,11 @@ class KeyedStore:
             return value, True
 
     def delete(self, key: Any) -> None:
+        """Drop the key's state (and its applied-offset watermark)."""
         self._table.delete(key)
 
     def keys(self) -> list:
+        """All live (non-expired) keys."""
         now = time.time()
         return [k for k, row in self._table.scan()
                 if self._fresh(row, now)]
@@ -341,6 +348,8 @@ class KeyedStore:
         return removed
 
     def stats(self) -> dict:
+        """Bounded-state accounting: live key count, configured ``ttl`` /
+        ``max_keys``, and how many keys expired or were evicted."""
         return {"keys": len(self._table), "ttl": self.ttl,
                 "max_keys": self.max_keys, "expired": self.expired,
                 "evicted": self.evicted}

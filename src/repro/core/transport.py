@@ -1,0 +1,993 @@
+"""Cross-host bus transport — the platform leaves one process.
+
+Everything the bus does in-process (queue groups, keyed rings, durable
+replay) is membership logic over :class:`~.bus.Subscription` mailboxes; this
+module puts a wire underneath it so a *second process* can join as a
+first-class member.  Two halves:
+
+* :class:`BusServer` — wraps a host's :class:`~.bus.MessageBus` and exposes
+  its subjects over TCP.  Each remote subscription becomes a **proxy**: a
+  normal local ``Subscription`` (so the queue group / keyed ring sees an
+  ordinary member, with the peer-supplied stable name as its ring identity)
+  plus a pump thread that ships popped messages to the peer as frames and
+  tracks them **in flight until acknowledged**.  When a peer drops — socket
+  error, clean ``bye``, or heartbeat silence — its unacknowledged frames are
+  requeued at the front of the proxy mailbox and the proxy departs through
+  the bus's normal atomic hand-off, so a crashed remote member re-homes its
+  backlog to survivors exactly like a crashed thread does (per-key order
+  preserved; a dropped connection is a *reaped member*, not a hang).
+
+* :class:`RemoteBus` — the client half, satisfying the :class:`~.bus.BusLike`
+  transport seam: ``subscribe(group=..., key=...)`` / ``publish`` /
+  ``issue_token`` / metrics RPCs all speak frames to a ``BusServer``, so a
+  :class:`~.sidecar.Sidecar` (and therefore a whole
+  :class:`~.serverless.Executor` worker pool) runs against a remote host's
+  bus unchanged.  Connection establishment retries with exponential backoff;
+  liveness is heartbeat-based (client pings, server pongs, both sides reap
+  silence); client-side counters (frames/bytes in/out, reconnects) surface
+  through the sidecar's federated ``transport`` metrics.
+
+**Wire format** (specified normatively in ``docs/wire-protocol.md``): every
+frame is a 4-byte big-endian length followed by a codec-tagged compressed
+blob (:mod:`~.compression` — zstd when available, zlib otherwise, readers
+dispatch on the tag) containing one msgpack-encoded frame dict.  Message
+payloads ride the existing numpy-aware encoding
+(:func:`~.bus.encode_message`).
+
+Delivery semantics across a peer crash are **at-least-once** at the frame
+level (unacknowledged messages are redelivered to group survivors) and the
+test/benchmark consumers make them exactly-once the same way the durable
+layer does: acknowledge only after the message's effect is recorded.
+"""
+from __future__ import annotations
+
+import itertools
+import os
+import socket
+import struct
+import sys
+import threading
+import time
+from collections import deque
+from typing import Iterable
+
+import msgpack
+
+from .bus import (KEYED_PARTITIONS, BusError, MessageBus, Subscription,
+                  Unauthorized, UnknownSubject, _default, _ext_hook,
+                  decode_message, encode_message, partition_of)
+from .compression import compress, decompress
+from .schema import Message
+
+#: Protocol version carried in the handshake; a server refuses a client
+#: whose major version differs (there is exactly one version today).
+PROTO_VERSION = 1
+
+#: Hard ceiling on one frame's blob size — a corrupted length prefix must
+#: not make a reader allocate gigabytes.
+MAX_FRAME_BYTES = 64 * 1024 * 1024
+
+#: Default max unacknowledged messages per remote subscription (flow
+#: control: the pump stops shipping until the peer acks).
+DEFAULT_WINDOW = 256
+
+
+class TransportError(BusError):
+    """Connection-level failure (refused, dropped, timed out, bad frame)."""
+
+
+_DEBUG = os.environ.get("DATAX_TRANSPORT_DEBUG", "") not in ("", "0")
+
+
+def _dbg(*parts) -> None:
+    """Connection-lifecycle tracing to stderr, enabled by
+    ``DATAX_TRANSPORT_DEBUG=1`` (drops, reaps, reconnects — the events you
+    need when a cross-process test misbehaves)."""
+    if _DEBUG:
+        print("[transport]", *parts, file=sys.stderr, flush=True)
+
+
+_ERROR_KINDS = {
+    "Unauthorized": Unauthorized,
+    "UnknownSubject": UnknownSubject,
+    "BusError": BusError,
+    "TransportError": TransportError,
+}
+
+
+# ---------------------------------------------------------------------------
+# Frames
+# ---------------------------------------------------------------------------
+
+def pack_frame(frame: dict, *, level: int = 1) -> bytes:
+    """Encode one frame dict: msgpack (numpy-aware) → codec-tagged blob →
+    4-byte big-endian length prefix."""
+    blob = compress(msgpack.packb(frame, default=_default, use_bin_type=True),
+                    level=level)
+    if len(blob) > MAX_FRAME_BYTES:
+        raise TransportError(f"frame too large ({len(blob)} bytes)")
+    return struct.pack(">I", len(blob)) + blob
+
+
+def unpack_frame(blob: bytes) -> dict:
+    """Inverse of :func:`pack_frame` minus the length prefix (the reader
+    strips it)."""
+    return msgpack.unpackb(decompress(blob), ext_hook=_ext_hook, raw=False,
+                           strict_map_key=False)
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    """Read exactly ``n`` bytes or raise ``ConnectionError`` on EOF."""
+    chunks = []
+    got = 0
+    while got < n:
+        chunk = sock.recv(n - got)
+        if not chunk:
+            raise ConnectionError("peer closed the connection")
+        chunks.append(chunk)
+        got += len(chunk)
+    return b"".join(chunks)
+
+
+def read_frame(sock: socket.socket) -> tuple[dict, int]:
+    """Read one length-prefixed frame; returns ``(frame, wire_bytes)``."""
+    header = _recv_exact(sock, 4)
+    (length,) = struct.unpack(">I", header)
+    if length > MAX_FRAME_BYTES:
+        raise TransportError(f"frame length {length} exceeds MAX_FRAME_BYTES")
+    blob = _recv_exact(sock, length)
+    return unpack_frame(blob), 4 + length
+
+
+# ---------------------------------------------------------------------------
+# Server side
+# ---------------------------------------------------------------------------
+
+class _ProxySub:
+    """Server-side state for one remote subscription: the local proxy
+    ``Subscription`` (the group/ring member), the in-flight window, and the
+    pump thread shipping popped messages to the peer."""
+
+    def __init__(self, sid: int, sub: Subscription, window: int,
+                 key: str | None, n_partitions: int):
+        self.sid = sid
+        self.sub = sub
+        self.window = max(1, window)
+        self.key = key
+        self.n_partitions = n_partitions
+        self.inflight: deque[tuple[object, Message]] = deque()
+        self.cond = threading.Condition()
+        self.closed = threading.Event()
+        self.thread: threading.Thread | None = None
+        self.acked = 0
+
+    def tag_of(self, msg: Message):
+        if self.key is None:
+            return None
+        return partition_of(msg.payload.get(self.key), self.n_partitions)
+
+    def ack(self, n: int) -> None:
+        with self.cond:
+            for _ in range(min(n, len(self.inflight))):
+                self.inflight.popleft()
+                self.acked += 1
+            self.cond.notify_all()
+
+
+class _Peer:
+    """One connected client: socket, identity, counters, proxy registry."""
+
+    def __init__(self, conn: socket.socket, addr):
+        self.conn = conn
+        self.addr = addr
+        self.name = f"{addr[0]}:{addr[1]}"
+        self.send_lock = threading.Lock()
+        self.subs: dict[int, _ProxySub] = {}
+        self.frames_in = 0
+        self.frames_out = 0
+        self.bytes_in = 0
+        self.bytes_out = 0
+        self.connected_at = time.monotonic()
+        self.last_seen = self.connected_at
+        self.dropped = False
+        self.drop_lock = threading.Lock()
+
+
+class BusServer:
+    """Expose a host's :class:`~.bus.MessageBus` subjects over TCP.
+
+    One listener thread accepts connections; each peer gets a reader thread
+    (frame dispatch) and one pump thread per remote subscription.  A peer
+    whose connection drops — or that stays silent past ``hb_timeout``
+    seconds (clients ping every heartbeat interval) — is *reaped*: every
+    unacknowledged in-flight message is requeued ahead of its proxy's
+    backlog and the proxy departs through the bus's atomic group hand-off,
+    re-homing the peer's share to surviving members.
+
+    ``port=0`` binds an OS-assigned port; read :attr:`address` for the
+    actual one.  The server is data-plane only — it never registers
+    subjects itself; the Operator owning ``bus`` does (see
+    :meth:`~.operator.Operator.serve`).
+    """
+
+    def __init__(self, bus: MessageBus, host: str = "127.0.0.1",
+                 port: int = 0, *, window: int = DEFAULT_WINDOW,
+                 hb_timeout: float = 10.0, compress_level: int = 1):
+        self.bus = bus
+        self.window = window
+        self.hb_timeout = hb_timeout
+        self._level = compress_level
+        self._lock = threading.Lock()
+        self._peers: dict[int, _Peer] = {}
+        self._peer_ids = itertools.count()
+        self._sids = itertools.count()
+        self.accepted = 0
+        self.reaped = 0          # peers dropped for heartbeat silence
+        self.disconnects = 0     # peers gone for any reason
+        self._closed = threading.Event()
+        self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._listener.bind((host, port))
+        self._listener.listen(32)
+        self.address: tuple[str, int] = self._listener.getsockname()
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, name="busserver-accept", daemon=True)
+        self._accept_thread.start()
+        self._reaper_thread = threading.Thread(
+            target=self._reap_loop, name="busserver-reaper", daemon=True)
+        self._reaper_thread.start()
+
+    # -- connection plumbing -------------------------------------------------
+    def _accept_loop(self) -> None:
+        while not self._closed.is_set():
+            try:
+                conn, addr = self._listener.accept()
+            except OSError:
+                return  # listener closed
+            conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            peer = _Peer(conn, addr)
+            pid = next(self._peer_ids)
+            with self._lock:
+                self._peers[pid] = peer
+                self.accepted += 1
+            threading.Thread(target=self._serve_peer, args=(pid, peer),
+                             name=f"busserver-peer-{pid}", daemon=True).start()
+
+    def _serve_peer(self, pid: int, peer: _Peer) -> None:
+        try:
+            while not self._closed.is_set():
+                frame, nbytes = read_frame(peer.conn)
+                peer.frames_in += 1
+                peer.bytes_in += nbytes
+                peer.last_seen = time.monotonic()
+                if not self._dispatch(peer, frame):
+                    break  # clean bye
+        except (ConnectionError, OSError, TransportError,
+                msgpack.UnpackException) as e:
+            _dbg(f"server: peer {peer.name} read loop ended: {e!r}")
+        finally:
+            self._drop_peer(pid, peer)
+
+    def _send(self, peer: _Peer, frame: dict) -> None:
+        data = pack_frame(frame, level=self._level)
+        with peer.send_lock:
+            peer.conn.sendall(data)
+            peer.frames_out += 1
+            peer.bytes_out += len(data)
+
+    def _reply(self, peer: _Peer, rid, **kw) -> None:
+        self._send(peer, {"rid": rid, "ok": True, **kw})
+
+    def _reply_error(self, peer: _Peer, rid, exc: Exception) -> None:
+        kind = type(exc).__name__
+        if kind not in _ERROR_KINDS:
+            kind = "BusError"
+        self._send(peer, {"rid": rid, "ok": False, "kind": kind,
+                          "error": str(exc)})
+
+    # -- frame dispatch ------------------------------------------------------
+    def _dispatch(self, peer: _Peer, frame: dict) -> bool:
+        """Handle one frame; returns False on a clean ``bye``."""
+        op = frame.get("op")
+        rid = frame.get("rid")
+        if op == "ping":
+            self._send(peer, {"op": "pong", "t": frame.get("t")})
+            return True
+        if op == "ack":
+            proxy = peer.subs.get(frame["sid"])
+            if proxy is not None:
+                proxy.ack(int(frame.get("n", 1)))
+            return True
+        if op == "bye":
+            return False
+        try:
+            if op == "hello":
+                if int(frame.get("proto", 0)) != PROTO_VERSION:
+                    raise TransportError(
+                        f"protocol version mismatch: server speaks "
+                        f"{PROTO_VERSION}, client {frame.get('proto')}")
+                if frame.get("peer"):
+                    peer.name = str(frame["peer"])
+                self._reply(peer, rid, proto=PROTO_VERSION,
+                            subjects=self.bus.subjects())
+            elif op == "issue_token":
+                token = self.bus.issue_token(frame.get("name", peer.name),
+                                             frame.get("subjects"))
+                self._reply(peer, rid, token=token)
+            elif op == "revoke_token":
+                self.bus.revoke_token(frame["token"])
+                self._reply(peer, rid)
+            elif op == "subscribe":
+                self._handle_subscribe(peer, rid, frame)
+            elif op == "unsubscribe":
+                self._retire_proxy(peer, frame["sid"], clean=True)
+                self._reply(peer, rid)
+            elif op == "publish":
+                msg = self.bus.publish(frame["subject"], frame["payload"],
+                                       token=frame["token"],
+                                       headers=frame.get("headers"))
+                self._reply(peer, rid, seq=msg.seq,
+                            offset=msg.headers.get("offset"))
+            elif op == "stats":
+                self._reply(peer, rid, stats=self.bus.stats())
+            elif op == "group_info":
+                self._reply(peer, rid, info=self.bus.group_info(
+                    frame["subject"], frame["group"]))
+            elif op == "durable_info":
+                log = self.bus.durable_log(frame["subject"])
+                self._reply(peer, rid,
+                            info=None if log is None else log.info())
+            elif op == "backlog":
+                self._reply(peer, rid, backlog=self.bus.backlog(
+                    frame["subject"]))
+            elif op == "subjects":
+                self._reply(peer, rid, subjects=self.bus.subjects())
+            elif op == "note_lost":
+                self.bus.note_lost(frame["subject"], int(frame.get("n", 1)))
+                if rid is not None:
+                    self._reply(peer, rid)
+            else:
+                raise TransportError(f"unknown op {op!r}")
+        except Exception as e:  # surface bus errors to the caller, not the log
+            if rid is not None:
+                self._reply_error(peer, rid, e)
+        return True
+
+    def _handle_subscribe(self, peer: _Peer, rid, frame: dict) -> None:
+        key = frame.get("key")
+        partitions = int(frame.get("partitions") or KEYED_PARTITIONS)
+        sub = self.bus.subscribe(
+            frame["subject"], token=frame["token"],
+            maxsize=frame.get("maxsize"), wire=False,
+            name=frame.get("name") or f"{peer.name}#{frame.get('sid', '?')}",
+            group=frame.get("group"), key=key, partitions=partitions,
+            replay_from=frame.get("replay_from"))
+        sid = int(frame["sid"])
+        proxy = _ProxySub(sid, sub, min(self.window,
+                                        frame.get("maxsize") or self.window),
+                          key, partitions)
+        peer.subs[sid] = proxy
+        proxy.thread = threading.Thread(
+            target=self._pump, args=(peer, proxy),
+            name=f"busserver-pump-{peer.name}-{sid}", daemon=True)
+        proxy.thread.start()
+        self._reply(peer, rid, sid=sid)
+
+    # -- the pump: proxy mailbox -> wire, with an acked window ---------------
+    def _pump(self, peer: _Peer, proxy: _ProxySub) -> None:
+        sub = proxy.sub
+        while not proxy.closed.is_set():
+            with proxy.cond:
+                while (len(proxy.inflight) >= proxy.window
+                       and not proxy.closed.is_set()):
+                    proxy.cond.wait(0.25)
+                budget = proxy.window - len(proxy.inflight)
+            if proxy.closed.is_set():
+                return
+            msgs = sub.next_batch(max(1, min(budget, 64)), timeout=0.25)
+            if not msgs:
+                if sub.closed and sub.qsize() == 0:
+                    # subject unregistered / bus closed underneath us — tell
+                    # the client so its consumer unblocks instead of hanging
+                    try:
+                        self._send(peer, {"op": "sub_closed",
+                                          "sid": proxy.sid})
+                    except OSError:
+                        pass
+                    return
+                continue
+            # in-flight BEFORE send: if the send fails the messages are
+            # still tracked and will be requeued by the drop path
+            with proxy.cond:
+                for m in msgs:
+                    proxy.inflight.append((proxy.tag_of(m), m))
+            try:
+                for m in msgs:
+                    self._send(peer, {"op": "msg", "sid": proxy.sid,
+                                      "m": encode_message(m)})
+            except OSError as e:
+                # reader thread sees the dead socket too and runs the drop
+                # path; just stop pumping
+                _dbg(f"server: pump {peer.name}#{proxy.sid} send failed: {e!r}")
+                return
+
+    def _retire_proxy(self, peer: _Peer, sid: int, *, clean: bool) -> None:
+        """Stop a proxy's pump, requeue its unacknowledged messages ahead of
+        the backlog, and depart the bus — the single redelivery path for
+        clean unsubscribes, clean byes, and crashed peers alike."""
+        proxy = peer.subs.pop(sid, None)
+        if proxy is None:
+            return
+        proxy.closed.set()
+        with proxy.cond:
+            proxy.cond.notify_all()
+        if proxy.thread is not None and proxy.thread is not \
+                threading.current_thread():
+            proxy.thread.join(timeout=2.0)
+        with proxy.cond:
+            pending = list(proxy.inflight)
+            proxy.inflight.clear()
+        proxy.sub.requeue_front(pending)
+        self.bus.unsubscribe(proxy.sub)
+
+    def _drop_peer(self, pid: int, peer: _Peer) -> None:
+        with peer.drop_lock:
+            if peer.dropped:
+                return
+            peer.dropped = True
+        with self._lock:
+            self._peers.pop(pid, None)
+            self.disconnects += 1
+        for sid in list(peer.subs):
+            self._retire_proxy(peer, sid, clean=False)
+        try:
+            peer.conn.close()
+        except OSError:
+            pass
+
+    def _reap_loop(self) -> None:
+        while not self._closed.wait(min(1.0, self.hb_timeout / 4)):
+            now = time.monotonic()
+            with self._lock:
+                stale = [(pid, p) for pid, p in self._peers.items()
+                         if now - p.last_seen > self.hb_timeout]
+            for pid, peer in stale:
+                self.reaped += 1
+                _dbg(f"server: reaping {peer.name} "
+                     f"(silent {now - peer.last_seen:.1f}s)")
+                try:
+                    peer.conn.shutdown(socket.SHUT_RDWR)
+                except OSError:
+                    pass
+                self._drop_peer(pid, peer)
+
+    # -- introspection / lifecycle -------------------------------------------
+    def stats(self) -> dict:
+        """Federated transport view: per-peer connection state, frame/byte
+        counters, subscription + in-flight depth — the server half of the
+        ``transport`` metrics surface (see ``docs/metrics.md``)."""
+        now = time.monotonic()
+        with self._lock:
+            peers = list(self._peers.values())
+        return {
+            "address": list(self.address),
+            "peers": {
+                p.name: {
+                    "addr": f"{p.addr[0]}:{p.addr[1]}",
+                    "connected_s": now - p.connected_at,
+                    "last_seen_s": now - p.last_seen,
+                    "frames_in": p.frames_in,
+                    "frames_out": p.frames_out,
+                    "bytes_in": p.bytes_in,
+                    "bytes_out": p.bytes_out,
+                    "subscriptions": len(p.subs),
+                    "inflight": sum(len(s.inflight) for s in p.subs.values()),
+                }
+                for p in peers
+            },
+            "accepted": self.accepted,
+            "reaped": self.reaped,
+            "disconnects": self.disconnects,
+        }
+
+    def close(self) -> None:
+        """Stop accepting, drop every peer (reaping their proxies)."""
+        self._closed.set()
+        try:
+            self._listener.close()
+        except OSError:
+            pass
+        with self._lock:
+            peers = list(self._peers.items())
+        for pid, peer in peers:
+            try:
+                peer.conn.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            self._drop_peer(pid, peer)
+
+
+# ---------------------------------------------------------------------------
+# Client side
+# ---------------------------------------------------------------------------
+
+class RemoteSubscription:
+    """Client half of a remote subscription — the :class:`~.bus.Subscription`
+    surface the sidecar reads, backed by frames from the server's proxy.
+
+    Messages are **acknowledged when popped** (``auto_ack=True``, the
+    default — right for the executor's pump, which owns redelivery through
+    the reconciler) or explicitly via :meth:`ack` (``auto_ack=False`` —
+    consumers that must survive their own crash ack only after recording a
+    message's effect, which is what makes redelivery exactly-once
+    end-to-end).  Replay state (``replaying`` etc.) lives server-side on the
+    proxy; the client-side counters exist for metrics compatibility.
+    """
+
+    def __init__(self, bus: "RemoteBus", sid: int, subject: str, name: str,
+                 group: str | None, auto_ack: bool):
+        self._bus = bus
+        self.sid = sid
+        self.subject = subject
+        self.name = name
+        self.group = group
+        self.wire = False
+        self.auto_ack = auto_ack
+        self.received = 0
+        self.dropped = 0
+        self.closed = False
+        self.replayed = 0
+        self.deduped = 0
+        self.healed = 0
+        self._q: deque[Message] = deque()
+        self._cond = threading.Condition()
+
+    @property
+    def replaying(self) -> bool:
+        """Always False client-side: the server proxy drains replay before
+        any frame is shipped, so by the time a message arrives here the
+        replay→live ordering is already settled."""
+        return False
+
+    def replay_lag(self) -> int:
+        """Client-side stub (0); use the ``durable_info`` RPC for the log
+        view."""
+        return 0
+
+    def _deliver(self, msg: Message) -> None:
+        with self._cond:
+            self._q.append(msg)
+            self.received += 1
+            self._cond.notify()
+
+    def _close_local(self) -> None:
+        with self._cond:
+            self.closed = True
+            self._cond.notify_all()
+
+    def next(self, timeout: float | None = None) -> Message | None:
+        """Blocking pop; None on timeout or close."""
+        got = self.next_batch(1, timeout)
+        return got[0] if got else None
+
+    def next_batch(self, max_n: int,
+                   timeout: float | None = None) -> list[Message]:
+        """Pop up to ``max_n`` received messages (blocking up to ``timeout``
+        for the first, like :meth:`.bus.Subscription.next_batch`); with
+        ``auto_ack`` the pop acknowledges them to the server."""
+        if max_n < 1:
+            return []
+        out: list[Message] = []
+        with self._cond:
+            if not self._q and not self.closed:
+                self._cond.wait(timeout)
+            while self._q and len(out) < max_n:
+                out.append(self._q.popleft())
+        if out and self.auto_ack:
+            self._bus._ack(self.sid, len(out))
+        return out
+
+    def ack(self, n: int = 1) -> None:
+        """Acknowledge ``n`` popped messages (``auto_ack=False`` mode).
+        Unacknowledged messages are redelivered to group survivors if this
+        client drops."""
+        self._bus._ack(self.sid, n)
+
+    def qsize(self) -> int:
+        """Messages received but not yet popped."""
+        with self._cond:
+            return len(self._q)
+
+    def close(self) -> None:
+        """Local close; prefer ``RemoteBus.unsubscribe`` for a clean leave."""
+        self._close_local()
+
+
+class _RemoteLogHandle:
+    """Client-side handle to a remote subject's durable log: just enough of
+    the :class:`~.durable.DurableLog` surface for metrics (``info()``)."""
+
+    def __init__(self, bus: "RemoteBus", subject: str):
+        self._bus = bus
+        self.subject = subject
+
+    def info(self) -> dict:
+        """The remote log's catalog entry (RPC per call)."""
+        info = self._bus._rpc("durable_info", subject=self.subject)["info"]
+        return info or {}
+
+
+class RemoteBus:
+    """TCP client satisfying the :class:`~.bus.BusLike` seam against a
+    remote :class:`BusServer`.
+
+    ``address`` is ``"host:port"`` or a ``(host, port)`` tuple.  The
+    constructor connects eagerly, retrying with exponential backoff until
+    ``connect_timeout`` elapses — so a worker process can be started before
+    its server and still come up.  A heartbeat thread pings every
+    ``hb_interval`` seconds; if nothing (pong or data) arrives within
+    ``hb_timeout`` the connection is declared dead: pending RPCs fail,
+    every subscription closes (consumers unblock — the server reaps the
+    member and re-homes its share), and the next RPC attempts a fresh
+    connection (counted in ``reconnects``).  Subscriptions do NOT silently
+    re-subscribe across a reconnect: membership is explicit, a new
+    subscription is a new ring identity.
+    """
+
+    def __init__(self, address, *, peer: str = "",
+                 connect_timeout: float = 5.0, rpc_timeout: float = 10.0,
+                 hb_interval: float = 1.0, hb_timeout: float = 6.0,
+                 compress_level: int = 1):
+        if isinstance(address, str):
+            host, _, port = address.rpartition(":")
+            address = (host or "127.0.0.1", int(port))
+        self.address: tuple[str, int] = tuple(address)
+        self.peer = peer or f"remote-{id(self):x}"
+        self._connect_timeout = connect_timeout
+        self._rpc_timeout = rpc_timeout
+        self._hb_interval = hb_interval
+        self._hb_timeout = hb_timeout
+        self._level = compress_level
+        self._lock = threading.RLock()       # connection state
+        self._send_lock = threading.Lock()
+        self._sock: socket.socket | None = None
+        self._rids = itertools.count()
+        self._sids = itertools.count()
+        self._waiters: dict[int, tuple[threading.Event, list]] = {}
+        self._subs: dict[int, RemoteSubscription] = {}
+        self._closed = False
+        self._last_frame = 0.0
+        # federated metrics (the client half of docs/metrics.md "transport")
+        self.frames_in = 0
+        self.frames_out = 0
+        self.bytes_in = 0
+        self.bytes_out = 0
+        self.reconnects = 0
+        self.subjects_cache: list[str] = []
+        self._connect(initial=True)
+        self._hb_thread = threading.Thread(
+            target=self._hb_loop, name=f"remotebus-hb-{self.peer}",
+            daemon=True)
+        self._hb_thread.start()
+
+    # -- connection management ----------------------------------------------
+    def connected(self) -> bool:
+        """True while a live socket exists."""
+        with self._lock:
+            return self._sock is not None and not self._closed
+
+    def _connect(self, *, initial: bool = False) -> None:
+        """(Re)establish the connection, with exponential backoff up to
+        ``connect_timeout`` total."""
+        deadline = time.monotonic() + self._connect_timeout
+        backoff = 0.05
+        last_err: Exception | None = None
+        while time.monotonic() < deadline and not self._closed:
+            try:
+                sock = socket.create_connection(
+                    self.address, timeout=max(0.2, deadline - time.monotonic()))
+                sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+                sock.settimeout(None)
+                with self._lock:
+                    self._sock = sock
+                    if not initial:
+                        self.reconnects += 1
+                    self._last_frame = time.monotonic()
+                threading.Thread(target=self._read_loop, args=(sock,),
+                                 name=f"remotebus-read-{self.peer}",
+                                 daemon=True).start()
+                hello = self._rpc("hello", peer=self.peer,
+                                  proto=PROTO_VERSION)
+                self.subjects_cache = list(hello.get("subjects", []))
+                return
+            except (OSError, TransportError) as e:
+                last_err = e
+                with self._lock:
+                    self._sock = None
+                time.sleep(backoff)
+                backoff = min(backoff * 2, 1.0)
+        raise TransportError(
+            f"could not connect to bus server at "
+            f"{self.address[0]}:{self.address[1]} within "
+            f"{self._connect_timeout}s: {last_err}")
+
+    def _drop_connection(self, reason: str) -> None:
+        _dbg(f"client {self.peer}: dropping connection: {reason}")
+        with self._lock:
+            sock, self._sock = self._sock, None
+            waiters = list(self._waiters.values())
+            self._waiters.clear()
+            subs = list(self._subs.values())
+            self._subs.clear()
+        if sock is not None:
+            # shutdown() before close(): the reader thread still holds the
+            # fd, so a bare close() would neither send FIN to the server nor
+            # unblock the local recv — the peer would linger until reaped
+            try:
+                sock.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                sock.close()
+            except OSError:
+                pass
+        for event, slot in waiters:
+            slot.append(TransportError(f"connection lost: {reason}"))
+            event.set()
+        for sub in subs:
+            sub._close_local()
+
+    def _read_loop(self, sock: socket.socket) -> None:
+        try:
+            while True:
+                frame, nbytes = read_frame(sock)
+                with self._lock:
+                    if self._sock is not sock:
+                        return  # superseded by a reconnect
+                    self.frames_in += 1
+                    self.bytes_in += nbytes
+                    self._last_frame = time.monotonic()
+                self._handle_frame(frame)
+        except (ConnectionError, OSError, TransportError,
+                msgpack.UnpackException) as e:
+            with self._lock:
+                current = self._sock is sock
+            if current:
+                self._drop_connection(repr(e))
+
+    def _handle_frame(self, frame: dict) -> None:
+        rid = frame.get("rid")
+        if rid is not None:
+            with self._lock:
+                waiter = self._waiters.pop(rid, None)
+            if waiter is not None:
+                event, slot = waiter
+                slot.append(frame)
+                event.set()
+            return
+        op = frame.get("op")
+        if op == "msg":
+            sub = self._subs.get(frame["sid"])
+            if sub is not None:
+                sub._deliver(decode_message(frame["m"]))
+            else:
+                # arrived after a local unsubscribe raced the pump — the
+                # server redelivers it when the unsubscribe lands
+                pass
+        elif op == "sub_closed":
+            sub = self._subs.pop(frame["sid"], None)
+            if sub is not None:
+                sub._close_local()
+        # pongs need no handling beyond the last_frame stamp above
+
+    def _hb_loop(self) -> None:
+        while not self._closed:
+            time.sleep(self._hb_interval)
+            if self._closed:
+                return
+            with self._lock:
+                sock = self._sock
+                stale = (sock is not None and
+                         time.monotonic() - self._last_frame
+                         > self._hb_timeout)
+            if sock is None:
+                continue
+            if stale:
+                self._drop_connection("heartbeat timeout")
+                continue
+            try:
+                self._send_frame({"op": "ping", "t": time.monotonic()})
+            except TransportError:
+                pass  # _send_frame already dropped the connection
+
+    # -- frame / rpc plumbing -------------------------------------------------
+    def _send_frame(self, frame: dict) -> None:
+        data = pack_frame(frame, level=self._level)
+        with self._lock:
+            sock = self._sock
+        if sock is None:
+            raise TransportError("not connected")
+        try:
+            with self._send_lock:
+                sock.sendall(data)
+        except OSError as e:
+            self._drop_connection(repr(e))
+            raise TransportError(f"send failed: {e}") from None
+        with self._lock:
+            self.frames_out += 1
+            self.bytes_out += len(data)
+
+    def _rpc(self, op: str, *, _timeout: float | None = None, **kw) -> dict:
+        """Send a request frame and wait for its correlated reply; maps
+        server-side bus errors back to their exception types.  Attempts one
+        reconnect (with backoff) when the connection is down."""
+        if self._closed:
+            raise TransportError("RemoteBus is closed")
+        if not self.connected() and op != "hello":
+            self._connect()
+        rid = next(self._rids)
+        event, slot = threading.Event(), []
+        with self._lock:
+            self._waiters[rid] = (event, slot)
+        try:
+            self._send_frame({"op": op, "rid": rid, **kw})
+        except TransportError:
+            with self._lock:
+                self._waiters.pop(rid, None)
+            raise
+        if not event.wait(_timeout or self._rpc_timeout):
+            with self._lock:
+                self._waiters.pop(rid, None)
+            raise TransportError(f"rpc {op!r} timed out")
+        reply = slot[0]
+        if isinstance(reply, Exception):
+            raise reply
+        if not reply.get("ok", False):
+            exc = _ERROR_KINDS.get(reply.get("kind", ""), BusError)
+            raise exc(reply.get("error", "remote error"))
+        return reply
+
+    def _ack(self, sid: int, n: int) -> None:
+        try:
+            self._send_frame({"op": "ack", "sid": sid, "n": n})
+        except TransportError:
+            pass  # the server redelivers unacked messages to survivors
+
+    # -- the BusLike surface ---------------------------------------------------
+    def issue_token(self, name: str,
+                    subjects: Iterable[str] | None = None) -> str:
+        """Mint a token on the remote bus (None = allowed everywhere)."""
+        return self._rpc("issue_token", name=name,
+                         subjects=None if subjects is None
+                         else list(subjects))["token"]
+
+    def revoke_token(self, token: str) -> None:
+        """Invalidate a remote token (best-effort when disconnected)."""
+        try:
+            self._rpc("revoke_token", token=token)
+        except TransportError:
+            pass
+
+    def subscribe(self, subject: str, *, token: str,
+                  maxsize: int | None = None, wire: bool = False,
+                  name: str = "", group: str | None = None,
+                  key: str | None = None,
+                  partitions: int = KEYED_PARTITIONS,
+                  replay_from=None, auto_ack: bool = True
+                  ) -> RemoteSubscription:
+        """Join the remote subject — as a first-class queue-group or
+        keyed-ring member when ``group``/``key`` are given (``name`` is the
+        ring identity; pick a stable one for keyed recovery).  ``wire`` is
+        accepted for signature compatibility and ignored: everything here
+        crosses the wire by construction.  ``auto_ack=False`` defers
+        acknowledgement to :meth:`RemoteSubscription.ack` for exactly-once
+        consumers."""
+        del wire  # every remote delivery is wire-encoded already
+        sid = next(self._sids)
+        sub = RemoteSubscription(self, sid, subject,
+                                 name or f"{self.peer}#{sid}", group,
+                                 auto_ack)
+        with self._lock:
+            self._subs[sid] = sub
+        try:
+            self._rpc("subscribe", sid=sid, subject=subject, token=token,
+                      maxsize=maxsize, name=sub.name, group=group, key=key,
+                      partitions=partitions, replay_from=replay_from)
+        except Exception:
+            with self._lock:
+                self._subs.pop(sid, None)
+            raise
+        return sub
+
+    def unsubscribe(self, sub: RemoteSubscription) -> None:
+        """Clean leave: the server requeues anything unacknowledged and
+        departs the proxy (group backlog re-homes to survivors)."""
+        with self._lock:
+            self._subs.pop(sub.sid, None)
+        try:
+            self._rpc("unsubscribe", sid=sub.sid)
+        except TransportError:
+            pass  # connection already gone — the server reaped the proxy
+        sub._close_local()
+
+    def publish(self, subject: str, payload: dict, *, token: str,
+                headers: dict | None = None) -> Message:
+        """Publish through the server's bus (authz + schema validation and
+        durable append happen there); returns the delivered message's
+        envelope with its remote ``seq`` (and ``offset`` when durable)."""
+        reply = self._rpc("publish", subject=subject, payload=payload,
+                          token=token, headers=headers)
+        hdrs = dict(headers or {})
+        if reply.get("offset") is not None:
+            hdrs["offset"] = reply["offset"]
+        return Message(subject=subject, payload=payload, seq=reply["seq"],
+                       headers=hdrs)
+
+    def note_lost(self, subject: str, n: int = 1) -> None:
+        """Forward poison-message loss accounting to the remote subject."""
+        try:
+            self._send_frame({"op": "note_lost", "subject": subject, "n": n})
+        except TransportError:
+            pass
+
+    def group_info(self, subject: str, group: str) -> dict | None:
+        """Snapshot of a remote queue group (RPC)."""
+        return self._rpc("group_info", subject=subject, group=group)["info"]
+
+    def durable_log(self, subject: str):
+        """A metrics handle to the remote subject's durable log, or None
+        for fire-and-forget subjects."""
+        info = self._rpc("durable_info", subject=subject)["info"]
+        return None if info is None else _RemoteLogHandle(self, subject)
+
+    def stats(self) -> dict:
+        """The remote bus's full per-subject stats (RPC)."""
+        return self._rpc("stats")["stats"]
+
+    def backlog(self, subject: str) -> int:
+        """Deepest consumer lag on the remote subject (RPC)."""
+        return self._rpc("backlog", subject=subject)["backlog"]
+
+    def subjects(self) -> list[str]:
+        """Registered subjects on the remote bus (RPC; also cached from the
+        handshake in ``subjects_cache``)."""
+        subjects = self._rpc("subjects")["subjects"]
+        self.subjects_cache = list(subjects)
+        return subjects
+
+    # -- federated metrics -----------------------------------------------------
+    def transport_stats(self) -> dict:
+        """Client-side connection state + frame counters; the sidecar
+        surfaces this under its ``transport`` metric (docs/metrics.md)."""
+        with self._lock:
+            return {
+                "peer": f"{self.address[0]}:{self.address[1]}",
+                "connected": self._sock is not None and not self._closed,
+                "frames_in": self.frames_in,
+                "frames_out": self.frames_out,
+                "bytes_in": self.bytes_in,
+                "bytes_out": self.bytes_out,
+                "reconnects": self.reconnects,
+                "subscriptions": len(self._subs),
+            }
+
+    def close(self) -> None:
+        """Clean shutdown: unsubscribe everything, say bye, drop the
+        socket."""
+        if self._closed:
+            return
+        for sub in list(self._subs.values()):
+            self.unsubscribe(sub)
+        try:
+            self._send_frame({"op": "bye"})
+        except TransportError:
+            pass
+        self._closed = True
+        self._drop_connection("closed")
+
+
+__all__ = [
+    "PROTO_VERSION", "MAX_FRAME_BYTES", "DEFAULT_WINDOW",
+    "BusServer", "RemoteBus", "RemoteSubscription", "TransportError",
+    "pack_frame", "read_frame", "unpack_frame",
+]

@@ -1,0 +1,99 @@
+"""Docs CI check: relative links must resolve, python fences must compile.
+
+Two passes over the prose surface (``docs/*.md`` + ``README.md``):
+
+1. **Link check** — every markdown link/image whose target is relative
+   (not ``http(s)://``, ``mailto:``, or a pure ``#anchor``) must point at
+   an existing file or directory, resolved against the page that links
+   it.  Catches the classic docs rot: a module rename or file move that
+   silently strands ``[bus.py](../src/repro/core/bus.py)``.
+
+2. **Fence check** — every fenced ```` ```python ```` block in
+   ``docs/*.md`` is extracted to a scratch file and run through
+   ``python -m compileall``: examples in the docs must at least be valid
+   syntax.  (README fences stay exempt — they show fragments mid-page —
+   docs pages are held to the higher bar.)
+
+Run from the repo root (CI does)::
+
+    python tools/check_docs.py
+
+Exit status 0 = clean; 1 = broken links and/or uncompilable fences, each
+listed on stderr.  Stdlib only, so it runs on both CI matrix legs.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import subprocess
+import sys
+import tempfile
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+#: Markdown inline links/images: ``[text](target)`` — title suffixes
+#: (``(target "title")``) and angle brackets are stripped afterwards.
+_LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_FENCE_RE = re.compile(r"^```python\s*$(.*?)^```\s*$",
+                       re.MULTILINE | re.DOTALL)
+
+
+def _pages() -> list[pathlib.Path]:
+    return sorted((REPO / "docs").glob("*.md")) + [REPO / "README.md"]
+
+
+def check_links() -> list[str]:
+    problems = []
+    for page in _pages():
+        if not page.exists():
+            problems.append(f"{page.relative_to(REPO)}: page missing")
+            continue
+        for target in _LINK_RE.findall(page.read_text()):
+            target = target.strip("<>")
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:            # pure in-page anchor
+                continue
+            resolved = (page.parent / path).resolve()
+            if not resolved.exists():
+                problems.append(
+                    f"{page.relative_to(REPO)}: broken link -> {target}")
+    return problems
+
+
+def check_fences() -> list[str]:
+    problems = []
+    with tempfile.TemporaryDirectory(prefix="docs_fences_") as tmp:
+        sources: list[tuple[pathlib.Path, str]] = []
+        for page in sorted((REPO / "docs").glob("*.md")):
+            for i, block in enumerate(_FENCE_RE.findall(page.read_text())):
+                out = pathlib.Path(tmp) / f"{page.stem}_{i}.py"
+                out.write_text(block)
+                sources.append((page, str(out)))
+        if not sources:
+            return problems
+        proc = subprocess.run(
+            [sys.executable, "-m", "compileall", "-q", tmp],
+            capture_output=True, text=True)
+        if proc.returncode != 0:
+            pages = sorted({str(p.relative_to(REPO)) for p, _ in sources})
+            problems.append(
+                f"python fence(s) failed to compile (from {', '.join(pages)})"
+                f":\n{proc.stdout}{proc.stderr}")
+    return problems
+
+
+def main() -> int:
+    problems = check_links() + check_fences()
+    for p in problems:
+        print(f"check_docs: {p}", file=sys.stderr)
+    if problems:
+        return 1
+    n_pages = len(_pages())
+    print(f"check_docs: OK ({n_pages} pages)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
