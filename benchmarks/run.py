@@ -40,6 +40,7 @@ ALL = {
     "loc": "bench_loc",
     "reuse": "bench_reuse",
     "fusion": "bench_fusion",
+    "mesh": "bench_mesh",
     "kernels": "bench_kernels",
     "compression": "bench_compression",
     "serve": "bench_serve",
@@ -65,6 +66,24 @@ def _gate(results: dict[str, dict]) -> list[str]:
             f"(batched={fusion.get('batched_msgs_per_s')} msgs/s, "
             f"per-message={fusion.get('fused_jit_msgs_per_s')} msgs/s, "
             f"max_batch={fusion.get('max_batch')})")
+    mesh = results.get("mesh")
+    if mesh is not None and "skipped" not in mesh:
+        if mesh.get("bit_identical") is not True:
+            failures.append(
+                "mesh: sharded outputs must be bit-identical to the "
+                "single-device batched program and the host-composed chain")
+        if mesh.get("sharded_bursts", 0) <= 0:
+            failures.append(
+                "mesh: the sharded path never executed (silent fallback to "
+                "the single-device batched program)")
+        if mesh.get("speedup", 0.0) < 1.0:
+            failures.append(
+                f"mesh: sharded fused bursts must not be slower than "
+                f"single-device batched under "
+                f"{mesh.get('devices')} devices (got "
+                f"{mesh.get('speedup')}x; "
+                f"sharded={mesh.get('sharded_msgs_per_s')} msgs/s, "
+                f"batched={mesh.get('batched_msgs_per_s')} msgs/s)")
     scaling = results.get("scaling")
     if scaling is not None and scaling.get("speedup", 0.0) < 2.0:
         workers = scaling.get("workers", 4)

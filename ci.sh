@@ -42,6 +42,14 @@ echo "== benchmarks: fusion regression gate =="
 # (batched_msgs_per_s >= fused_jit_msgs_per_s)
 python -m benchmarks.run --only fusion --gate
 
+echo "== benchmarks: mesh-sharded fusion gate =="
+# writes BENCH_mesh.json; a subprocess with
+# XLA_FLAGS=--xla_force_host_platform_device_count=4 simulates a 4-device
+# mesh — sharded fused bursts must not be slower than single-device batched
+# and must be bit-identical to the host-composed chain (no jax -> the
+# benchmark records "skipped" and the gate passes vacuously)
+python -m benchmarks.run --only mesh --gate
+
 echo "== benchmarks: queue-group scaling gate =="
 # writes BENCH_scaling.json; fails unless 4 grouped workers beat 1 by >=2x
 # on the 4-stage pipeline (pure platform code — runs on both matrix legs)
@@ -75,5 +83,10 @@ echo "== docs check =="
 # docs/ + README relative links must resolve; python fences in docs/*.md
 # must compile (stdlib only — both matrix legs, also a standalone CI job)
 python tools/check_docs.py
+
+echo "== api surface check =="
+# repro.core's public names + signatures must match the committed snapshot
+# (docs/api-surface.txt); intentional changes rerun with --update and commit
+python tools/check_api.py
 
 echo "ci.sh: OK"

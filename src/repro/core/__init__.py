@@ -10,15 +10,19 @@ from .bus import (KEYED_PARTITIONS, BusError, BusLike, KeyedGroup, MessageBus,
                   encode_payload, drain, partition_of, partition_owner,
                   ring_assignment, stable_hash)
 from .compression import CompressionError, codec_name, train_dictionary
+from .delivery import (Broadcast, DeliveryPolicy, Group, Keyed, Listen, Peer,
+                       ReplayFrom)
 from .dsl import App, DSLError, GadgetHandle, SchemaMismatch, StreamHandle, connect
 from .durable import (SNAPSHOT_TABLE, DurableError, DurableLog, Retention,
                       iter_log, resolve_replay_from, schema_fingerprint)
 from .entities import (ActuatorSpec, AnalyticsUnitSpec, DatabaseSpec,
                        DriverSpec, EntityKind, GadgetSpec, Placement,
                        SensorSpec, StreamSpec)
-from .fusion import FusedStage, fuse_application, plan_segments
+from .fusion import (FusedStage, ResidentArray, fuse_application, fusion_mesh,
+                     mesh_axis_names, plan_segments)
 from .operator import CoherenceError, Operator, OperatorError
-from .schema import ConfigSchema, FieldSpec, Message, StreamSchema
+from .schema import (KNOWN_MESH_AXES, ConfigSchema, FieldSpec, Message,
+                     ShardSpec, StreamSchema)
 from .sdk import BatchInterrupted, DataX, LogicContext, sdk_entrypoint
 from .serverless import (AutoScaler, Executor, InstanceHandle, RemoteWorker,
                          ScalePolicy)
@@ -34,6 +38,8 @@ __all__ = [
     "CompressionError", "codec_name", "train_dictionary",
     "SNAPSHOT_TABLE", "DurableError", "DurableLog", "Retention",
     "iter_log", "resolve_replay_from", "schema_fingerprint",
+    "Broadcast", "DeliveryPolicy", "Group", "Keyed", "Listen", "Peer",
+    "ReplayFrom",
     "KEYED_PARTITIONS", "BusError", "BusLike", "KeyedGroup", "MessageBus",
     "QueueGroup", "Subscription", "Unauthorized", "UnknownSubject",
     "decode_message", "decode_payload", "encode_message", "encode_payload",
@@ -41,9 +47,11 @@ __all__ = [
     "stable_hash",
     "ActuatorSpec", "AnalyticsUnitSpec", "DatabaseSpec", "DriverSpec",
     "EntityKind", "GadgetSpec", "Placement", "SensorSpec", "StreamSpec",
-    "FusedStage", "fuse_application", "plan_segments",
+    "FusedStage", "ResidentArray", "fuse_application", "fusion_mesh",
+    "mesh_axis_names", "plan_segments",
     "CoherenceError", "Operator", "OperatorError",
-    "ConfigSchema", "FieldSpec", "Message", "StreamSchema",
+    "KNOWN_MESH_AXES", "ConfigSchema", "FieldSpec", "Message", "ShardSpec",
+    "StreamSchema",
     "BatchInterrupted", "DataX", "LogicContext", "sdk_entrypoint",
     "AutoScaler", "Executor", "InstanceHandle", "RemoteWorker", "ScalePolicy",
     "Sidecar",

@@ -73,6 +73,8 @@ from typing import TYPE_CHECKING, Iterable, Protocol, Sequence
 import msgpack
 import numpy as np
 
+from .delivery import (KEYED_PARTITIONS, DeliveryPolicy, ReplayFrom,
+                       resolve_policy, resolve_replay)
 from .schema import Message, StreamSchema
 
 if TYPE_CHECKING:  # pragma: no cover - durable imports encode_message from us
@@ -168,10 +170,13 @@ class BusLike(Protocol):
 
     def subscribe(self, subject: str, *, token: str,
                   maxsize: int | None = None, wire: bool = False,
-                  name: str = "", group: str | None = None,
-                  key: str | None = None, partitions: int = 64,
-                  replay_from=None):
-        """Open a subscription; kwargs match :meth:`MessageBus.subscribe`."""
+                  name: str = "", policy: DeliveryPolicy | None = None,
+                  replay: ReplayFrom | None = None,
+                  group: str | None = None, key: str | None = None,
+                  partitions: int | None = None, replay_from=None):
+        """Open a subscription; kwargs match :meth:`MessageBus.subscribe`
+        (``policy``/``replay`` are the typed forms; the bare kwargs are the
+        deprecated spelling)."""
         ...
 
     def unsubscribe(self, sub) -> None:
@@ -209,12 +214,9 @@ class BusLike(Protocol):
 # The partition ring (pure functions — property-tested)
 # ---------------------------------------------------------------------------
 
-#: Default number of hash partitions per keyed group.  Partitions, not
-#: members, are the unit of assignment: keys map to partitions permanently
-#: (stable hash), and only the partition->member mapping changes on
-#: membership churn.  64 keeps the rendezvous spread within ~25% of fair for
-#: small pools while the assignment map stays cheap to snapshot.
-KEYED_PARTITIONS = 64
+# KEYED_PARTITIONS (the default ring size) now lives in delivery.py next to
+# the Keyed policy that carries it; imported above and re-exported here for
+# the long-standing `from repro.core.bus import KEYED_PARTITIONS` spelling.
 
 
 def stable_hash(value) -> int:
@@ -1191,22 +1193,32 @@ class MessageBus:
 
     def subscribe(self, subject: str, *, token: str, maxsize: int | None = None,
                   wire: bool = False, name: str = "",
+                  policy: DeliveryPolicy | None = None,
+                  replay: ReplayFrom | None = None,
                   group: str | None = None, key: str | None = None,
-                  partitions: int = KEYED_PARTITIONS,
+                  partitions: int | None = None,
                   replay_from=None) -> Subscription:
-        """``group`` joins the named queue group on this subject: each message
-        goes to exactly one healthy member of each group, while ungrouped
-        subscriptions keep broadcast semantics.  ``key`` upgrades the group to
-        keyed delivery: the named payload field is hashed onto a partition
-        ring and every message for a key goes to the same member.  All
-        members of one group must agree on the policy (and key).
+        """``policy`` selects how this subject's messages reach the new
+        subscription: :class:`~.delivery.Broadcast` (the default — every
+        subscriber sees every message), :class:`~.delivery.Group` (a named
+        single-delivery pool: each message goes to exactly one healthy
+        member per group), or :class:`~.delivery.Keyed` (a group whose
+        declared payload field is hashed onto a partition ring so every
+        message for a key goes to the same member).  All members of one
+        group must agree on the policy (and key).  The pre-policy kwargs —
+        ``group=``, ``key=``, ``partitions=`` — still map onto these types,
+        with a :class:`DeprecationWarning` per call site.
 
-        ``replay_from`` (durable subjects only) starts the subscription on
-        the log instead of live: an ``int`` is a log offset, a ``float`` is
-        a timestamp (first record at-or-after it), ``"earliest"`` is the
-        oldest retained offset.  ``next``/``next_batch`` serve history until
-        the cursor reaches the head, then flip to live delivery — no gaps,
-        no duplicates across the handoff."""
+        ``replay`` (:class:`~.delivery.ReplayFrom`, durable subjects only)
+        starts the subscription on the log instead of live —
+        ``ReplayFrom.offset(n)`` / ``.timestamp(ts)`` / ``.earliest()``.
+        ``next``/``next_batch`` serve history until the cursor reaches the
+        head, then flip to live delivery — no gaps, no duplicates across
+        the handoff.  The deprecated ``replay_from=`` raw values (int
+        offset / float timestamp / ``"earliest"``) keep working."""
+        group, key, partitions = resolve_policy(policy, group, key,
+                                                partitions)
+        replay_from = resolve_replay(replay, replay_from)
         self._authorize(token, subject)
         if key is not None and group is None:
             raise BusError("keyed delivery needs a group name")

@@ -1,0 +1,265 @@
+"""Typed delivery, replay, and addressing API (the subscribe/connect surface).
+
+Subscription behaviour used to be spelled as loose kwargs — ``group=``,
+``key=``, ``partitions=``, ``replay_from=`` on ``subscribe()`` and
+``serve=``/``remote=``/``peer=`` unions on :func:`~.dsl.connect`.  This module
+gives each concept one small value type:
+
+* :class:`DeliveryPolicy` — how a subject's messages reach a set of
+  subscribers: :class:`Broadcast` (every subscriber sees every message),
+  :class:`Group` (named single-delivery worker pool), :class:`Keyed` (a
+  group whose messages are rendezvous-hashed on a payload field so each key
+  sticks to one member).
+* :class:`ReplayFrom` — where a subscription on a durable subject starts in
+  the retained log before flipping to live delivery.
+* :class:`Listen` / :class:`Peer` — the two sides of a cross-process
+  attachment: expose this operator's bus over TCP, or join another host's.
+
+The old kwarg spellings keep working everywhere they did before — each call
+site gets a single :class:`DeprecationWarning` (python's default warning
+filter de-duplicates per call site) and is mapped onto these types by
+:func:`resolve_policy` / :func:`resolve_replay`, so the runtime only ever
+sees the typed form.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+
+#: Default number of hash partitions per keyed group.  Partitions, not
+#: members, are the unit of assignment: keys map to partitions permanently
+#: (stable hash), and only the partition->member mapping changes on
+#: membership churn.  64 keeps the rendezvous spread within ~25% of fair for
+#: small pools while the assignment map stays cheap to snapshot.
+KEYED_PARTITIONS = 64
+
+
+# ---------------------------------------------------------------------------
+# Delivery policies
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DeliveryPolicy:
+    """Base class of the typed delivery policies accepted by ``subscribe()``.
+
+    Concrete policies: :class:`Broadcast`, :class:`Group`, :class:`Keyed`.
+    A policy is a pure value — it fully determines the legacy
+    ``(group, key, partitions)`` triple via :meth:`legacy_args`, which is
+    what the bus layers consume internally.
+    """
+
+    def legacy_args(self) -> tuple:
+        """The ``(group, key, partitions)`` triple this policy denotes."""
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class Broadcast(DeliveryPolicy):
+    """Every subscriber receives every message (the bus default).
+
+    Equivalent to subscribing with no group at all; scaled instances under
+    broadcast are *replicas* (redundant/speculative execution), not a pool.
+    """
+
+    def legacy_args(self) -> tuple:
+        """``(None, None, None)`` — no group, no key."""
+        return (None, None, None)
+
+
+@dataclasses.dataclass(frozen=True)
+class Group(DeliveryPolicy):
+    """Named single-delivery queue group (NATS-style worker pool).
+
+    All subscriptions sharing ``name`` on a subject form one pool: each
+    message reaches exactly one healthy member, departing members re-home
+    their backlog to survivors.
+    """
+
+    name: str
+
+    def __post_init__(self) -> None:
+        if not self.name:
+            raise ValueError("Group needs a non-empty name")
+
+    def legacy_args(self) -> tuple:
+        """``(name, None, None)`` — plain queue-group delivery."""
+        return (self.name, None, None)
+
+
+@dataclasses.dataclass(frozen=True)
+class Keyed(DeliveryPolicy):
+    """Keyed single delivery: hash ``field`` onto a partition ring.
+
+    A :class:`Group` upgraded so every message whose payload ``field``
+    hashes to a given partition reaches the same member — stateful stages
+    scale without splitting a key's state.  ``partitions`` fixes the ring
+    size at group creation (all members must agree).
+    """
+
+    group: str
+    field: str
+    partitions: int = KEYED_PARTITIONS
+
+    def __post_init__(self) -> None:
+        if not self.group:
+            raise ValueError("Keyed needs a non-empty group name")
+        if not self.field:
+            raise ValueError("Keyed needs the payload field to hash")
+        if self.partitions < 1:
+            raise ValueError(f"Keyed needs partitions >= 1, "
+                             f"got {self.partitions}")
+
+    def legacy_args(self) -> tuple:
+        """``(group, field, partitions)`` — keyed-ring delivery."""
+        return (self.group, self.field, self.partitions)
+
+
+# ---------------------------------------------------------------------------
+# Replay start positions
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ReplayFrom:
+    """Typed start position in a durable subject's log.
+
+    Wraps the raw replay vocabulary (``int`` offset / ``float`` timestamp /
+    ``"earliest"`` / ``"snapshot"``) the durability layer resolves; build
+    one with :meth:`offset`, :meth:`timestamp`, :meth:`earliest` or
+    :meth:`snapshot`.
+    """
+
+    start: object
+
+    @staticmethod
+    def offset(n: int) -> "ReplayFrom":
+        """Start at log offset ``n`` (the ``n``-th appended record)."""
+        return ReplayFrom(int(n))
+
+    @staticmethod
+    def timestamp(ts: float) -> "ReplayFrom":
+        """Start at the first record appended at-or-after wall time ``ts``."""
+        return ReplayFrom(float(ts))
+
+    @staticmethod
+    def earliest() -> "ReplayFrom":
+        """Start at the oldest retained offset."""
+        return ReplayFrom("earliest")
+
+    @staticmethod
+    def snapshot() -> "ReplayFrom":
+        """Start at the newest exactly-once recovery watermark (resolved
+        against the stream's state database at spawn time)."""
+        return ReplayFrom("snapshot")
+
+
+# ---------------------------------------------------------------------------
+# Cross-process addressing
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Listen:
+    """TCP listen address for exposing an operator's bus over the wire.
+
+    ``connect(listen=Listen())`` binds an ephemeral port on localhost; read
+    the bound address from ``op.bus_address``.
+    """
+
+    host: str = "127.0.0.1"
+    port: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Peer:
+    """Attachment address of an EXISTING deployment's bus server.
+
+    ``connect(peer=Peer("host:port", name="edge-1"))`` joins the remote bus
+    as a first-class member; ``name`` identifies this process in the host's
+    per-peer transport metrics (pick a stable one for keyed recovery).
+    """
+
+    address: str
+    name: str = ""
+
+    def __post_init__(self) -> None:
+        if not self.address:
+            raise ValueError("Peer needs a 'host:port' address")
+
+
+# ---------------------------------------------------------------------------
+# Legacy-kwarg shims
+# ---------------------------------------------------------------------------
+
+def _warn(message: str, stacklevel: int) -> None:
+    warnings.warn(message, DeprecationWarning, stacklevel=stacklevel + 1)
+
+
+def policy_from_legacy(group: str | None, key: str | None,
+                       partitions: int | None = None
+                       ) -> DeliveryPolicy | None:
+    """The typed policy a legacy ``(group, key, partitions)`` triple denotes
+    (None for plain broadcast).  Used by runtime layers that carry the triple
+    internally — no deprecation note."""
+    if key is not None:
+        return Keyed(group or "", key,
+                     partitions if partitions is not None else KEYED_PARTITIONS)
+    if group is not None:
+        return Group(group)
+    return None
+
+
+def resolve_policy(policy: DeliveryPolicy | None,
+                   group: str | None, key: str | None,
+                   partitions: int | None, *,
+                   stacklevel: int = 3) -> tuple:
+    """Canonical ``(group, key, partitions)`` from a policy OR legacy kwargs.
+
+    Exactly one spelling may be used; the legacy one warns (once per call
+    site under the default warning filter).  ``stacklevel`` should point the
+    warning at the caller of the subscribing API, not at this helper.
+    """
+    legacy = (group is not None or key is not None or partitions is not None)
+    if policy is not None:
+        if legacy:
+            raise TypeError(
+                "pass either policy= or the legacy group=/key=/partitions= "
+                "kwargs, not both")
+        if not isinstance(policy, DeliveryPolicy):
+            raise TypeError(f"policy must be a DeliveryPolicy "
+                            f"(Broadcast/Group/Keyed), got "
+                            f"{type(policy).__name__}")
+        g, k, p = policy.legacy_args()
+        return (g, k, p if p is not None else KEYED_PARTITIONS)
+    if legacy:
+        if key is not None:
+            repl = (f"Keyed({group!r}, {key!r}"
+                    + (f", partitions={partitions}"
+                       if partitions is not None else "") + ")")
+        elif group is not None:
+            repl = f"Group({group!r})"
+        else:
+            repl = "Keyed(..., partitions=...)"
+        _warn(f"subscribe(group=/key=/partitions=) is deprecated; pass "
+              f"policy={repl}", stacklevel)
+    return (group, key,
+            partitions if partitions is not None else KEYED_PARTITIONS)
+
+
+def resolve_replay(replay: ReplayFrom | None, replay_from,
+                   *, stacklevel: int = 3):
+    """Canonical raw replay value from ``replay=ReplayFrom(...)`` OR the
+    legacy ``replay_from=`` kwarg (which warns once per call site)."""
+    if replay is not None:
+        if replay_from is not None:
+            raise TypeError("pass either replay= or the legacy replay_from= "
+                            "kwarg, not both")
+        if not isinstance(replay, ReplayFrom):
+            raise TypeError(f"replay must be a ReplayFrom, got "
+                            f"{type(replay).__name__}")
+        return replay.start
+    if replay_from is not None:
+        if isinstance(replay_from, ReplayFrom):
+            # tolerate the typed value under the old kwarg, silently
+            return replay_from.start
+        _warn("replay_from= is deprecated; pass replay=ReplayFrom.offset(n) "
+              "/ .timestamp(ts) / .earliest() / .snapshot()", stacklevel)
+    return replay_from

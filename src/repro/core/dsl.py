@@ -64,17 +64,19 @@ import contextlib
 import dataclasses
 import inspect
 import time
+import warnings
 from collections import deque
 from typing import Any, Callable, Iterator, Mapping, Sequence
 
 from .app import Application, AppValidationError
+from .delivery import Listen, Peer, ReplayFrom, resolve_replay
 from .durable import DurableError, Retention
 from .entities import (ActuatorSpec, AnalyticsUnitSpec, DatabaseSpec,
                        DriverSpec, GadgetSpec, Placement, SensorSpec,
                        StreamSpec)
-from .fusion import fuse_application
+from .fusion import fuse_application, mesh_axis_names
 from .operator import Operator
-from .schema import ConfigSchema, StreamSchema
+from .schema import KNOWN_MESH_AXES, ConfigSchema, StreamSchema
 from .state import KeyedStore
 
 
@@ -723,14 +725,21 @@ class StreamHandle:
         return gadget
 
     def subscribe(self, op: Operator, *, maxsize: int = 256,
+                  policy: Any = None, replay: Any = None,
                   replay_from: Any = None):
         """Third-party subscription to this stream on a live operator (§3).
 
-        On a durable stream, ``replay_from`` (offset / timestamp /
-        ``"earliest"``) serves the retained history first, then switches to
-        live delivery — late-joining consumers see the full past."""
-        return op.subscribe(self.name, maxsize=maxsize,
-                            replay_from=replay_from)
+        ``policy`` (a typed :class:`~.delivery.DeliveryPolicy`) lets the
+        consumer join under group/keyed delivery; broadcast by default.  On
+        a durable stream, ``replay=ReplayFrom.offset(n)`` /
+        ``.timestamp(ts)`` / ``.earliest()`` serves the retained history
+        first, then switches to live delivery — late-joining consumers see
+        the full past.  The deprecated raw ``replay_from=`` values keep
+        working with a warning."""
+        replay_value = resolve_replay(replay, replay_from)
+        return op.subscribe(self.name, maxsize=maxsize, policy=policy,
+                            replay=ReplayFrom(replay_value)
+                            if replay_value is not None else None)
 
 
 class GadgetHandle:
@@ -963,6 +972,28 @@ class App:
                            f"in app {self.name!r}")
         self._stream_names.add(name)
 
+    def _validate_sharding(self) -> None:
+        """Check every device field's ShardSpec against the mesh axes."""
+        allowed = set(KNOWN_MESH_AXES) | set(mesh_axis_names())
+        schemas = []
+        for d in self._drivers.values():
+            schemas.append((f"driver {d.name!r}", d.output_schema))
+        for a in self._aus.values():
+            schemas.append((f"analytics_unit {a.name!r}", a.output_schema))
+            schemas.extend((f"analytics_unit {a.name!r} input", s)
+                           for s in a.input_schemas)
+        for where, schema in schemas:
+            if schema is None:
+                continue
+            for fname, spec in schema.sharding_hints().items():
+                if spec is None:
+                    continue
+                try:
+                    spec.validate_axes(allowed,
+                                       where=f"{where} field {fname!r}")
+                except ValueError as e:
+                    raise DSLError(str(e)) from None
+
     # ================================================================ build
     def build(self, *, fuse: bool = True) -> Application:
         """Compile to the v1 spec graph (deterministic: declaration order).
@@ -971,7 +1002,14 @@ class App:
         linear chains of DEVICE-placement stages collapse into single jitted
         units and their interior streams never reach the bus.  ``fuse=False``
         keeps every hop a bus subject (debugging / A-B benchmarking).
+
+        Sharding hints are validated here: every device field's
+        :class:`~.schema.ShardSpec` axis names must exist in the platform's
+        mesh vocabulary (plus whatever axes the live device mesh actually
+        has) — a typo'd axis fails the build, not a silent replicate at
+        runtime.
         """
+        self._validate_sharding()
         application = Application(
             name=self.name,
             drivers=list(self._drivers.values()),
@@ -1016,9 +1054,57 @@ class App:
 # Operator lifecycle
 # ---------------------------------------------------------------------------
 
+def _resolve_listen(listen: Listen | None,
+                    serve: bool | int | tuple | None) -> Listen | None:
+    """One Listen address from the typed kwarg OR the legacy ``serve=``
+    union (bool / port / (host, port)), which warns once per call site."""
+    if listen is not None:
+        if serve is not None:
+            raise DSLError("pass either listen=Listen(...) or the legacy "
+                           "serve= kwarg, not both")
+        if not isinstance(listen, Listen):
+            raise DSLError(f"listen must be a Listen address, got "
+                           f"{type(listen).__name__}")
+        return listen
+    if serve is None or serve is False:
+        return None
+    if serve is True:
+        resolved = Listen()
+    elif isinstance(serve, tuple):
+        resolved = Listen(*serve)
+    else:
+        resolved = Listen(port=int(serve))
+    warnings.warn(
+        f"connect(serve=...) is deprecated; pass listen=Listen("
+        f"{resolved.host!r}, {resolved.port})",
+        DeprecationWarning, stacklevel=4)
+    return resolved
+
+
+def _resolve_peer(peer: str | Peer, remote: str | tuple | None
+                  ) -> Peer | None:
+    """One Peer address from the typed kwarg OR the legacy ``remote=`` +
+    ``peer=<str name>`` pair, which warns once per call site."""
+    if isinstance(peer, Peer):
+        if remote is not None:
+            raise DSLError("pass either peer=Peer(...) or the legacy "
+                           "remote= kwarg, not both")
+        return peer
+    if remote is None:
+        return None
+    address = remote if isinstance(remote, str) \
+        else f"{remote[0]}:{remote[1]}"
+    warnings.warn(
+        f"connect(remote=...) is deprecated; pass peer=Peer({address!r}"
+        + (f", name={peer!r}" if peer else "") + ")",
+        DeprecationWarning, stacklevel=4)
+    return Peer(address, name=peer)
+
+
 @contextlib.contextmanager
-def connect(*, start: bool = True, serve: bool | int | tuple | None = None,
-            remote: str | tuple | None = None, peer: str = "",
+def connect(*, start: bool = True, listen: Listen | None = None,
+            serve: bool | int | tuple | None = None,
+            remote: str | tuple | None = None, peer: str | Peer = "",
             **operator_kwargs: Any) -> Iterator[Any]:
     """Context manager owning one process's attachment to a deployment.
 
@@ -1032,36 +1118,40 @@ def connect(*, start: bool = True, serve: bool | int | tuple | None = None,
     ``start=False`` skips the reconcile loop (unit-test topologies that only
     need deploy + bus flow).  Extra kwargs go to :class:`Operator`.
 
-    ``serve=True`` (or a port, or a ``(host, port)`` tuple) additionally
-    exposes the operator's bus over TCP — read the bound address from
-    ``op.bus_address`` — so other processes can join.
+    ``listen=Listen(host, port)`` additionally exposes the operator's bus
+    over TCP — read the bound address from ``op.bus_address`` — so other
+    processes can join.
 
-    ``remote="host:port"`` attaches to an EXISTING deployment instead of
-    creating one: yields a :class:`~.serverless.RemoteWorker` whose
-    instances run in this process but subscribe/publish over the wire as
-    first-class queue-group / keyed-ring members (``peer`` names this
-    process in the host's per-peer transport metrics).  Mutually exclusive
-    with ``serve`` and operator kwargs.
+    ``peer=Peer("host:port", name="edge-1")`` attaches to an EXISTING
+    deployment instead of creating one: yields a
+    :class:`~.serverless.RemoteWorker` whose instances run in this process
+    but subscribe/publish over the wire as first-class queue-group /
+    keyed-ring members (``name`` identifies this process in the host's
+    per-peer transport metrics).  Mutually exclusive with ``listen`` and
+    operator kwargs.
+
+    The pre-dataclass spellings — ``serve=True|port|(host, port)`` and
+    ``remote="host:port", peer="name"`` — keep working and map onto
+    :class:`~.delivery.Listen` / :class:`~.delivery.Peer` with a
+    :class:`DeprecationWarning` per call site.
     """
-    if remote is not None:
-        if serve is not None or operator_kwargs:
-            raise DSLError("connect(remote=...) attaches to an existing "
-                           "deployment: serve=/Operator kwargs do not apply")
+    attach = _resolve_peer(peer, remote)
+    if attach is not None:
+        if listen is not None or serve is not None or operator_kwargs:
+            raise DSLError("connect(peer=...) attaches to an existing "
+                           "deployment: listen=/serve=/Operator kwargs do "
+                           "not apply")
         from .serverless import RemoteWorker
-        worker = RemoteWorker(remote, peer=peer)
+        worker = RemoteWorker(attach.address, peer=attach.name)
         try:
             yield worker
         finally:
             worker.close()
         return
+    bind = _resolve_listen(listen, serve)
     op = Operator(**operator_kwargs)
-    if serve:
-        if serve is True:
-            op.serve()
-        elif isinstance(serve, tuple):
-            op.serve(*serve)
-        else:
-            op.serve(port=int(serve))
+    if bind is not None:
+        op.serve(bind.host, bind.port)
     if start:
         op.start()
     try:

@@ -54,6 +54,33 @@ runtime.  It operates on the compiled v1 :class:`~.app.Application` spec graph
    log2(max_batch) batch shapes compile; ragged / mixed-shape / non-numeric
    bursts degrade per-message, bit-identical to the host chain.
 
+5. **Mesh-sharded execution** — when more than one device is visible
+   (:func:`fusion_mesh` — a 1-D ``data`` mesh over ``jax.local_devices()``,
+   disable with ``DATAX_FUSION_MESH=0``) and the padded burst divides the
+   mesh, the burst runs through the SPMD-partitioned program instead
+   (:func:`repro.kernels.ops.jit_chain_sharded`): each field is committed
+   to a ``NamedSharding`` whose leading burst dim splits over the data
+   axis — trailing dims follow the stream schema's per-field
+   :class:`~.schema.ShardSpec` hints via
+   :func:`repro.distributed.sharding.burst_spec` — so every device
+   computes its slice of the burst.  vmap rows are independent, so the
+   sharded path is bit-identical to the single-device batched program; any
+   indivisible burst (and any sharded-lowering failure) transparently
+   stays on / returns to the single-device path.  Two ride-alongs:
+
+   * **device residency** — a segment whose exit feeds ANOTHER fused
+     segment's entry emits its array fields as :class:`ResidentArray`
+     rows (plain ndarrays that remember the stacked device burst they
+     came from); when the downstream unit re-stacks an intact burst it
+     reuses the device array directly and the linked hop pays zero
+     host->device transfer (``resident_links`` in sidecar metrics);
+   * **burst autotune** — streams that declare no ``max_batch`` start at
+     :data:`DEFAULT_MAX_BATCH` and double their ceiling (up to
+     :data:`AUTOTUNE_MAX_BATCH`) after :data:`AUTOTUNE_STREAK` consecutive
+     ceiling-filling bursts — sustained full occupancy means the mailbox
+     is backlogged and a bigger program amortizes further.  The Executor
+     re-reads the tuned ceiling (``process.current_max_batch``) each pump.
+
 Upgrading an individual stage AU after fusion does not cascade into already-
 deployed fused units (the fused AU snapshots stage logic at build time);
 redeploy the app to pick up new stage versions.
@@ -97,10 +124,59 @@ JIT_MODE = "auto"
 #: log2(max_batch) batch shapes ever compile (no retrace storm).
 DEFAULT_MAX_BATCH = 32
 
+#: Ceiling for the burst autotuner.  A stream that declares no ``max_batch``
+#: starts at :data:`DEFAULT_MAX_BATCH` and doubles under sustained full
+#: occupancy — but never beyond this, bounding both per-burst latency and
+#: the number of compiled batch shapes (log2(AUTOTUNE_MAX_BATCH) total).
+AUTOTUNE_MAX_BATCH = 256
+
+#: Consecutive ceiling-filling device bursts before the autotuner doubles
+#: ``max_batch`` — one full burst can be a blip; a streak means the mailbox
+#: is genuinely backlogged at the current ceiling.
+AUTOTUNE_STREAK = 4
+
 
 def jax_available() -> bool:
     """Gate for the jitted path (module-level so tests can monkeypatch)."""
     return _HAS_JAX
+
+
+_MESH_CACHE: list = []  # memo cell: [Mesh | None] once resolved
+
+
+def fusion_mesh():
+    """The device mesh fused programs shard over, or None.
+
+    A 1-D ``("data",)`` :class:`jax.sharding.Mesh` spanning every locally
+    visible device — built once and cached.  None (single-device semantics)
+    when jax is unavailable, when only one device is visible, or when
+    ``DATAX_FUSION_MESH=0`` disables sharding outright.  CI simulates a
+    multi-device host with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+    """
+    import os
+    if os.environ.get("DATAX_FUSION_MESH", "1") in ("0", "off", "never"):
+        return None
+    if not jax_available():
+        return None
+    if not _MESH_CACHE:
+        import jax
+        devices = jax.local_devices()
+        if len(devices) > 1:
+            from jax.sharding import Mesh
+            _MESH_CACHE.append(Mesh(np.array(devices), ("data",)))
+        else:
+            _MESH_CACHE.append(None)
+    return _MESH_CACHE[0]
+
+
+def mesh_axis_names() -> tuple:
+    """Axis names of the active fusion mesh (empty when single-device).
+
+    :meth:`~.dsl.App.build` unions these with the architectural axis
+    vocabulary (:data:`~.schema.KNOWN_MESH_AXES`) when validating
+    :class:`~.schema.ShardSpec` hints."""
+    mesh = fusion_mesh()
+    return tuple(mesh.axis_names) if mesh is not None else ()
 
 
 def _want_jit() -> bool:
@@ -275,15 +351,74 @@ def _round_up_pow2(n: int) -> int:
     return 1 << max(0, n - 1).bit_length()
 
 
+class ResidentArray(np.ndarray):
+    """A host ndarray that remembers the device burst it was unstacked from.
+
+    Fused segments whose exit feeds ANOTHER fused segment's entry emit
+    their array fields as ResidentArrays: to every host-side consumer
+    (schema validation, taps, wire transport) this is a plain numpy array,
+    but it additionally holds the stacked device array it is row
+    ``_datax_row`` of (``_datax_dev``).  When the downstream fused unit
+    stacks a burst whose rows are exactly that still-resident device burst,
+    :func:`_to_device_batched` hands the device array straight back to the
+    next program — the linked hop pays zero host->device transfer
+    (``resident_links`` in sidecar metrics).
+    """
+
+    _datax_dev: Any = None
+    _datax_row: int = -1
+
+    def __array_finalize__(self, obj):
+        # Residency is NEVER inherited by views, slices, or copies: a
+        # derived array is not the row the device burst holds, so it must
+        # not claim the link.  wrap() is the only residency source.
+        self._datax_dev = None
+        self._datax_row = -1
+
+    @classmethod
+    def wrap(cls, row: np.ndarray, dev: Any, index: int) -> "ResidentArray":
+        """Tag host ``row`` as row ``index`` of device array ``dev``."""
+        out = np.asarray(row).view(cls)
+        out._datax_dev = dev
+        out._datax_row = index
+        return out
+
+
+def _resident_burst(rows: Sequence[Any], pad_to: int):
+    """The shared device array behind a burst of ResidentArray rows, or None.
+
+    Reuse demands an INTACT burst: every row resident, all from the same
+    device array, indices exactly 0..N-1 (a filtered or reordered burst
+    skips indices), full-row shapes, and the producer's padded batch equal
+    to the consumer's ``pad_to`` (vmap rows are independent, so the
+    producer's pad rows — repeats of its last input — are computed and
+    discarded exactly like pad rows the consumer would have stacked)."""
+    first = rows[0]
+    if not isinstance(first, ResidentArray) or first._datax_dev is None:
+        return None
+    dev = first._datax_dev
+    if getattr(dev, "shape", (0,))[0] != pad_to:
+        return None
+    for i, r in enumerate(rows):
+        if (not isinstance(r, ResidentArray) or r._datax_dev is not dev
+                or r._datax_row != i or r.shape != dev.shape[1:]):
+            return None
+    return dev
+
+
 def _to_device_batched(payloads: Sequence[Mapping[str, Any]],
-                       pad_to: int) -> dict:
+                       pad_to: int, stats: dict | None = None) -> dict:
     """Stack N payloads field-wise into one leading-batch-dim device payload.
 
     Raises TypeError on heterogeneous field sets, non-numeric fields, or
     ragged/mixed shapes-dtypes across the burst — the caller degrades that
     burst to per-message execution, bit-identical to the host chain.  Tails
     shorter than ``pad_to`` are padded by repeating the last row (the pad
-    rows' outputs are discarded) so batch shapes stay canonical."""
+    rows' outputs are discarded) so batch shapes stay canonical.
+
+    Fields whose rows form an intact :class:`ResidentArray` burst skip the
+    stack + transfer entirely and reuse the upstream device array
+    (counted in ``stats['resident_links']`` when a stats dict is given)."""
     import jax.numpy as jnp
     keys = payloads[0].keys()
     for p in payloads[1:]:
@@ -291,6 +426,12 @@ def _to_device_batched(payloads: Sequence[Mapping[str, Any]],
             raise TypeError("burst payloads carry different field sets")
     out = {}
     for k in keys:
+        resident = _resident_burst([p[k] for p in payloads], pad_to)
+        if resident is not None:
+            out[k] = resident
+            if stats is not None:
+                stats["resident_links"] += 1
+            continue
         rows = []
         for p in payloads:
             v = p[k]
@@ -312,13 +453,18 @@ def _to_device_batched(payloads: Sequence[Mapping[str, Any]],
 
 
 def _from_device_batched(stacked: Mapping[str, Any],
-                         likes: Sequence[Mapping[str, Any]]) -> list[dict]:
+                         likes: Sequence[Mapping[str, Any]],
+                         resident: bool = False) -> list[dict]:
     """Stacked device results -> one host payload per (unpadded) message.
 
     One device->host transfer per FIELD for the whole burst — that single
     materialization is where batching beats per-message ``_from_device`` —
     then each row follows the exact scalar-typing rules of
-    :func:`_from_device` against its own entry payload."""
+    :func:`_from_device` against its own entry payload.
+
+    With ``resident=True`` (segments feeding another fused segment) array
+    rows come back as :class:`ResidentArray`, pinning the stacked device
+    result so the downstream unit can reuse it without re-uploading."""
     host = {k: np.asarray(v) for k, v in stacked.items()}
     outs = []
     for i, like in enumerate(likes):
@@ -332,6 +478,11 @@ def _from_device_batched(stacked: Mapping[str, Any],
                     p[k] = row.item()
                 else:
                     p[k] = row[()]
+            elif resident:
+                # the copy below intentionally does NOT apply: residency
+                # trades keeping the device burst alive for a free re-entry
+                # on the linked hop
+                p[k] = ResidentArray.wrap(np.array(row), stacked[k], i)
             else:
                 # copy out of the stacked block: a view would keep the whole
                 # pad_to-sized burst alive for as long as ANY downstream
@@ -343,7 +494,8 @@ def _from_device_batched(stacked: Mapping[str, Any],
 
 def make_fused_logic(stages: Sequence[FusedStage],
                      entry_schema: StreamSchema | None,
-                     max_batch: int | None = None) -> Callable:
+                     max_batch: int | None = None,
+                     resident: bool = False) -> Callable:
     """Factory for the fused AU: chain every stage in one instance.
 
     The returned factory honours the normal AU contract
@@ -351,8 +503,15 @@ def make_fused_logic(stages: Sequence[FusedStage],
     fused unit exactly like any other microservice; additionally ``process``
     exposes the batched-execution surface the Executor's drain-a-burst mode
     keys on — ``process_batch`` (whole mailbox burst -> one vmapped program
-    call), ``default_max_batch`` and a ``stats`` counter dict
-    (``device_fallbacks`` / ``batched_bursts`` / ``batched_msgs``).
+    call; mesh-sharded when :func:`fusion_mesh` is live and the padded
+    burst divides it), ``default_max_batch``, ``current_max_batch`` (the
+    autotuned ceiling, present only when the stream declared no
+    ``max_batch`` of its own) and a ``stats`` counter dict
+    (``device_fallbacks`` / ``batched_bursts`` / ``batched_msgs`` /
+    ``sharded_bursts`` / ``resident_links`` / ``mesh_devices`` /
+    ``max_batch_current``).  ``resident=True`` marks a segment whose exit
+    feeds another fused segment: its array outputs stay device-resident
+    (:class:`ResidentArray`) for the linked hop.
     """
 
     def fused_factory(ctx):
@@ -374,21 +533,43 @@ def make_fused_logic(stages: Sequence[FusedStage],
                 results.extend(host_chain(i + 1, stages[i].stream_name, p))
             return results
 
-        program = batched_program = None
+        program = batched_program = mesh = None
+        sprog = {"fn": None}  # sharded program; retired on lowering failure
         if jax_available() and _want_jit() \
                 and all(st.pure_fn is not None for st in stages):
             from ..kernels.ops import jit_chain, jit_chain_batched
             chain = [(st.kind, st.pure_fn) for st in stages]
             program = jit_chain(chain)
             batched_program = jit_chain_batched(chain)
+            mesh = fusion_mesh()
+            if mesh is not None:
+                from ..distributed.sharding import burst_spec
+                from ..kernels.ops import jit_chain_sharded
+                hints = (entry_schema.sharding_hints()
+                         if entry_schema is not None else {})
+                specs = {}
+                if entry_schema is not None:
+                    for fname, f in entry_schema.fields.items():
+                        if f.kind == "device" and f.shape is not None \
+                                and -1 not in f.shape:
+                            # build against a divisible batch: the runtime
+                            # gate below only routes divisible bursts here
+                            specs[fname] = burst_spec(
+                                mesh, mesh.size, f.shape, hints.get(fname))
+                sprog["fn"] = jit_chain_sharded(chain, mesh, specs)
+        ndev = mesh.size if mesh is not None else 1
         mode = {"device": program is not None}
         # device_fallbacks counts MESSAGES that ran on the host while the
         # device program stayed live (payload-local problems);
         # unstackable_bursts counts bursts that degraded to per-message
         # dispatch (ragged/mixed shapes) — those messages may still run on
         # the device one at a time, so they are not fallbacks.
+        tune = {"cur": max_batch or DEFAULT_MAX_BATCH, "streak": 0,
+                "auto": max_batch is None and program is not None}
         stats = {"device_fallbacks": 0, "unstackable_bursts": 0,
-                 "batched_bursts": 0, "batched_msgs": 0}
+                 "batched_bursts": 0, "batched_msgs": 0,
+                 "sharded_bursts": 0, "resident_links": 0,
+                 "mesh_devices": ndev, "max_batch_current": tune["cur"]}
 
         def run_device(payload: dict) -> dict | None:
             dev, keep = program(_to_device(payload))
@@ -425,17 +606,35 @@ def make_fused_logic(stages: Sequence[FusedStage],
                         mode["device"] = False
             return host_one(stream, payload)
 
+        def autotune(burst: int) -> None:
+            # occupancy feedback: a burst that fills the current ceiling
+            # means the mailbox still had messages left behind; a streak of
+            # them means the ceiling — not the arrival rate — is the
+            # bottleneck, so double it (pad shapes stay powers of two)
+            if not tune["auto"]:
+                return
+            if burst >= tune["cur"]:
+                tune["streak"] += 1
+                if tune["streak"] >= AUTOTUNE_STREAK \
+                        and tune["cur"] < AUTOTUNE_MAX_BATCH:
+                    tune["cur"] = min(tune["cur"] * 2, AUTOTUNE_MAX_BATCH)
+                    tune["streak"] = 0
+                    stats["max_batch_current"] = tune["cur"]
+            else:
+                tune["streak"] = 0
+
         def process_batch(stream: str, payloads: Sequence[dict]) -> list:
             """One vmapped device call for a whole mailbox burst; returns a
             per-message result list (None = filtered), order preserved.
-            Bursts the device cannot stack (ragged/mixed shapes, non-numeric
+            Pads that divide the mesh run the SPMD-sharded program; bursts
+            the device cannot stack (ragged/mixed shapes, non-numeric
             fields) degrade to the per-message path — bit-identical to the
             host chain."""
             if mode["device"] and batched_program is not None \
                     and len(payloads) > 1:
+                pad_to = _round_up_pow2(len(payloads))
                 try:
-                    dev = _to_device_batched(payloads,
-                                             _round_up_pow2(len(payloads)))
+                    dev = _to_device_batched(payloads, pad_to, stats)
                 except Exception:
                     # conversion = payload problem (ragged shapes, mixed
                     # dtypes, non-numeric or unconvertible values): burst-
@@ -445,15 +644,29 @@ def make_fused_logic(stages: Sequence[FusedStage],
                     # the host chain
                     stats["unstackable_bursts"] += 1
                 else:
+                    sharded = sprog["fn"] if pad_to % ndev == 0 else None
                     try:
-                        out, keep = batched_program(dev)
+                        if sharded is not None:
+                            try:
+                                out, keep = sharded(dev)
+                            except Exception:
+                                # sharding-specific lowering failure: retire
+                                # the sharded program for this unit; the
+                                # single-device batched program stays live
+                                sprog["fn"] = sharded = None
+                        if sharded is None:
+                            out, keep = batched_program(dev)
                         keep = np.asarray(keep)
                     except Exception:
                         mode["device"] = False
                     else:
                         stats["batched_bursts"] += 1
                         stats["batched_msgs"] += len(payloads)
-                        host = _from_device_batched(out, payloads)
+                        if sharded is not None:
+                            stats["sharded_bursts"] += 1
+                        autotune(len(payloads))
+                        host = _from_device_batched(out, payloads,
+                                                    resident=resident)
                         return [host[i] if keep[i] else None
                                 for i in range(len(payloads))]
             # per-message fallback: a poison message here must not destroy
@@ -471,6 +684,10 @@ def make_fused_logic(stages: Sequence[FusedStage],
         process.process_batch = process_batch
         process.default_max_batch = max_batch or DEFAULT_MAX_BATCH
         process.stats = stats
+        if tune["auto"]:
+            # the Executor re-reads this each pump iteration, so a doubled
+            # ceiling takes effect on the very next mailbox drain
+            process.current_max_batch = lambda: tune["cur"]
 
         if program is not None and entry_schema is not None:
             zeros = entry_schema.zero_payload()
@@ -482,11 +699,17 @@ def make_fused_logic(stages: Sequence[FusedStage],
                     # calls this ahead of the pump loop and keeps the cost
                     # out of the latency EWMA.  The batched program warms at
                     # the canonical (full) burst size — the steady-state
-                    # shape under backlog.
+                    # shape under backlog — and the sharded lowering warms
+                    # alongside it when the mesh divides that shape.
                     run_device(zeros)
                     if batched_program is not None and canonical > 1:
-                        batched_program(
-                            _to_device_batched([zeros, zeros], canonical))
+                        dev = _to_device_batched([zeros, zeros], canonical)
+                        batched_program(dev)
+                        if sprog["fn"] is not None and canonical % ndev == 0:
+                            try:
+                                sprog["fn"](dev)
+                            except Exception:
+                                sprog["fn"] = None
                 process.warmup = warmup
         return process
 
@@ -526,6 +749,11 @@ def fuse_application(app: Application, *,
     fused_aus: list[AnalyticsUnitSpec] = []
     folded: set[str] = set()
     au_names = set(aus)
+    # exits that feed ANOTHER fused segment's entry keep their arrays
+    # device-resident: the linked hop's bus message carries ResidentArray
+    # rows the downstream unit re-enters without a host->device transfer
+    linked_exits = ({seg[-1].name for seg in segments}
+                    & {seg[0].inputs[0] for seg in segments})
     for segment in segments:
         entry, exit_ = segment[0], segment[-1]
         stage_aus = [aus[s.analytics_unit] for s in segment]
@@ -555,7 +783,9 @@ def fuse_application(app: Application, *,
         lo = min(max(au.min_instances for au in stage_aus), hi)
         fused_aus.append(AnalyticsUnitSpec(
             name=name, logic=make_fused_logic(stages, entry_schema,
-                                              max_batch=seg_max_batch),
+                                              max_batch=seg_max_batch,
+                                              resident=exit_.name
+                                              in linked_exits),
             input_schemas=tuple(stage_aus[0].input_schemas),
             output_schema=stage_aus[-1].output_schema,
             placement=Placement.DEVICE,

@@ -33,6 +33,7 @@ import time
 from typing import Any, Callable, Mapping
 
 from .bus import MessageBus
+from .delivery import ReplayFrom, resolve_replay
 from .durable import DurableError, Retention, resolve_replay_from
 from .entities import (ActuatorSpec, AnalyticsUnitSpec, DatabaseSpec,
                        DriverSpec, GadgetSpec, Placement, SensorSpec,
@@ -698,15 +699,23 @@ class Operator:
                 for h in self.executor.all_instances()}
 
     def subscribe(self, stream: str, *, name: str = "external",
-                  maxsize: int = 256, replay_from=None):
+                  maxsize: int = 256, policy=None, replay=None,
+                  replay_from=None):
         """Third-party subscription to any registered stream (§3 reuse).
 
-        On a durable stream, ``replay_from`` (offset / timestamp /
-        ``"earliest"``) serves the retained history first, then flips to
-        live delivery — the late-joining-consumer story."""
+        ``policy`` (a typed :class:`~.delivery.DeliveryPolicy`) lets the
+        external consumer join the subject under group/keyed delivery; the
+        default is broadcast.  On a durable stream,
+        ``replay=ReplayFrom.offset(n)`` / ``.timestamp(ts)`` /
+        ``.earliest()`` serves the retained history first, then flips to
+        live delivery — the late-joining-consumer story.  The deprecated
+        ``replay_from=`` raw values keep working with a warning."""
+        replay_value = resolve_replay(replay, replay_from)
         token = self.bus.issue_token(name, [stream])
-        return self.bus.subscribe(stream, token=token, maxsize=maxsize,
-                                  name=name, replay_from=replay_from)
+        return self.bus.subscribe(
+            stream, token=token, maxsize=maxsize, name=name, policy=policy,
+            replay=ReplayFrom(replay_value)
+            if replay_value is not None else None)
 
     def shutdown(self) -> None:
         """Stop the reconciler, the bus server (reaping remote members),

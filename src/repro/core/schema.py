@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Any, Callable, Mapping
 
 import numpy as np
@@ -37,6 +38,70 @@ except Exception:  # pragma: no cover
 #: Permitted scalar type names in host field schemas.
 SCALAR_TYPES = ("int", "float", "str", "bool", "bytes")
 
+#: Mesh-axis vocabulary of the platform (launch.mesh / distributed.sharding):
+#: ``pod``/``data`` are the data-parallel axes, ``model`` is tensor
+#: parallelism.  :meth:`ShardSpec.validate_axes` checks hints against this
+#: set (plus whatever axes a live mesh actually has) at ``App.build()``.
+KNOWN_MESH_AXES = ("pod", "data", "model")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardSpec:
+    """Validated per-dimension sharding hint for one device field.
+
+    ``axes`` names one mesh axis (or None = replicate) per array dimension,
+    e.g. ``ShardSpec(("data", None))`` for a ``(B, D)`` field whose leading
+    dim splits over the data-parallel axis.  This is the typed successor of
+    the bare ``sharding=("data", None)`` tuples recorded since the fusion
+    pass landed — bare tuples still coerce (with a deprecation note), but
+    only a ShardSpec is checked against the mesh-axis vocabulary at
+    ``App.build()`` and consumed by the mesh-sharded fused executor.
+    """
+
+    axes: tuple
+
+    def __post_init__(self) -> None:
+        axes = tuple(self.axes)
+        object.__setattr__(self, "axes", axes)
+        for a in axes:
+            if a is not None and not isinstance(a, str):
+                raise ValueError(
+                    f"ShardSpec axes must be mesh-axis names or None, "
+                    f"got {a!r}")
+
+    def __iter__(self):
+        """Iterate per-dimension axis names (None = replicate)."""
+        return iter(self.axes)
+
+    def __len__(self) -> int:
+        """Number of dimensions the hint covers."""
+        return len(self.axes)
+
+    def validate_axes(self, allowed, *, where: str = "") -> None:
+        """Raise ValueError if any named axis is outside ``allowed``."""
+        unknown = sorted({a for a in self.axes
+                          if a is not None and a not in allowed})
+        if unknown:
+            raise ValueError(
+                f"{where + ': ' if where else ''}unknown mesh axes "
+                f"{unknown} in sharding hint {self.axes!r}; known axes: "
+                f"{sorted(allowed)}")
+
+
+def _coerce_sharding(value) -> "ShardSpec | None":
+    """Normalize a sharding hint: ShardSpec passes through, bare tuples
+    coerce with a deprecation note, None stays None."""
+    if value is None or isinstance(value, ShardSpec):
+        return value
+    if isinstance(value, (tuple, list)):
+        warnings.warn(
+            "bare sharding tuples are deprecated; pass "
+            f"sharding=ShardSpec({tuple(value)!r})",
+            DeprecationWarning, stacklevel=4)
+        return ShardSpec(tuple(value))
+    raise ValueError(f"sharding must be a ShardSpec (or legacy tuple), "
+                     f"got {type(value).__name__}")
+
 
 @dataclasses.dataclass(frozen=True)
 class FieldSpec:
@@ -54,16 +119,18 @@ class FieldSpec:
     dtype: str | None = None
     required: bool = True
     default: Any = None
-    #: Sharding hint for device fields: one mesh-axis name (or None) per dim,
-    #: e.g. ("data", None).  A *hint*, not a constraint — `accepts` ignores it;
-    #: the fusion pass forwards it so fused programs can be partitioned when a
-    #: multi-device mesh is available.
-    sharding: tuple | None = None
+    #: Sharding hint for device fields: a :class:`ShardSpec` naming one mesh
+    #: axis (or None) per dim, e.g. ShardSpec(("data", None)).  A *hint*, not
+    #: a constraint — `accepts` ignores it; the fusion pass forwards it so
+    #: fused programs are partitioned when a multi-device mesh is available.
+    #: Bare tuples still coerce here with a deprecation note.
+    sharding: "ShardSpec | None" = None
 
     def __post_init__(self) -> None:
         allowed = SCALAR_TYPES + ("ndarray", "device", "any")
         if self.kind not in allowed:
             raise ValueError(f"unknown field kind {self.kind!r}; allowed: {allowed}")
+        object.__setattr__(self, "sharding", _coerce_sharding(self.sharding))
 
     # -- validation ---------------------------------------------------------
     def validate(self, value: Any) -> None:
@@ -139,13 +206,17 @@ class StreamSchema:
     def device(**arrays: tuple) -> "StreamSchema":
         """Shorthand: StreamSchema.device(tokens=((B, S), 'int32')).
 
-        An optional third tuple element is the sharding hint:
-        ``StreamSchema.device(x=((B, D), 'float32', ('data', None)))``.
+        An optional third tuple element is the sharding hint — a
+        :class:`ShardSpec` or its axes tuple:
+        ``StreamSchema.device(x=((B, D), 'float32', ShardSpec(('data', None))))``.
         """
         fields = {}
         for k, spec in arrays.items():
             shape, dtype = spec[0], spec[1]
-            sharding = tuple(spec[2]) if len(spec) > 2 and spec[2] else None
+            sharding = spec[2] if len(spec) > 2 and spec[2] else None
+            if sharding is not None and not isinstance(sharding, ShardSpec):
+                # the shorthand's tuple position is unambiguous — no note
+                sharding = ShardSpec(tuple(sharding))
             fields[k] = FieldSpec(kind="device", shape=tuple(shape),
                                   dtype=dtype, sharding=sharding)
         return StreamSchema(fields=fields)
@@ -188,7 +259,8 @@ class StreamSchema:
                 for k, f in self.fields.items() if f.kind == "device"}
 
     def sharding_hints(self) -> dict:
-        """Per-field mesh-axis hints for device fields (None = replicate)."""
+        """Per-field :class:`ShardSpec` hints for device fields (None =
+        replicate everywhere)."""
         return {k: f.sharding for k, f in self.fields.items()
                 if f.kind == "device"}
 

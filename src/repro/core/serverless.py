@@ -19,6 +19,7 @@ import traceback
 from typing import Any, Callable, Mapping, Sequence
 
 from .bus import BusLike, MessageBus
+from .delivery import DeliveryPolicy
 from .sdk import BatchInterrupted, DataX, LogicContext, is_sdk_style
 from .sidecar import Sidecar
 from .state import Database
@@ -71,26 +72,32 @@ class Executor:
                        inputs: Sequence[str] = (), output: str | None = None,
                        db: Database | None = None, node: str | None = None,
                        queue_size: int = 256,
+                       policy: DeliveryPolicy | None = None,
                        group: str | None = None,
                        key: str | None = None,
                        max_batch: int | None = None,
                        replay_from=None) -> InstanceHandle:
-        """``group`` puts this instance's input subscriptions into the named
-        bus queue group: all instances started with the same group form a
-        single-delivery worker pool (scaling adds capacity, not copies).
-        ``key`` upgrades the group to keyed delivery — the named payload
-        field is hashed so every message for a key reaches this pool's same
-        member (stateful workers scale without splitting a key's state).
+        """``policy`` (a typed :class:`~.delivery.DeliveryPolicy`) selects
+        how this instance's input subscriptions share each subject:
+        ``Group(name)`` joins the named bus queue group — all instances
+        started under the same group form a single-delivery worker pool
+        (scaling adds capacity, not copies); ``Keyed(group, field)``
+        upgrades the pool so the named payload field is hashed and every
+        message for a key reaches the same member (stateful workers scale
+        without splitting a key's state).  The bare ``group=``/``key=``
+        kwargs are the same thing spelled positionally and stay accepted
+        here (this is runtime fabric, not the deprecated subscribe surface).
         ``max_batch`` bounds the mailbox burst handed to a batching-capable
         process (one exposing ``process_batch``) per pull; None defers to the
-        process's own ``default_max_batch`` (1 = per-message pulls).
+        process's own ``default_max_batch`` (1 = per-message pulls), which
+        fused device units may autotune upward under sustained backlog.
         ``replay_from`` (durable inputs only) starts the input subscriptions
         on the subjects' logs — history is served before live delivery."""
         iid = f"{owner}/{entity_name}-{next(self._ids):04d}"
         stop_event = threading.Event()
         sidecar = Sidecar(iid, self._bus, inputs=inputs, output=output,
-                          queue_size=queue_size, group=group, key=key,
-                          replay_from=replay_from)
+                          queue_size=queue_size, policy=policy, group=group,
+                          key=key, replay_from=replay_from)
 
         handle = InstanceHandle(
             instance_id=iid, entity_kind=entity_kind, entity_name=entity_name,
@@ -194,6 +201,13 @@ class Executor:
         if max_batch is None:
             max_batch = int(getattr(process, "default_max_batch", 1) or 1)
         burst = max(1, max_batch) if batch_fn is not None else 1
+        # a process may autotune its own ceiling upward under sustained
+        # backlog (fused device units expose current_max_batch); re-read it
+        # per pull so deeper bursts engage without restarting the instance.
+        # An explicit .scaled(max_batch=) stays authoritative: the process
+        # only exposes the hook when the stream declared no ceiling.
+        tuned = getattr(process, "current_max_batch", None) \
+            if batch_fn is not None else None
         def emit_outs(outs) -> None:
             if sink:
                 return
@@ -209,6 +223,11 @@ class Executor:
                 sidecar.record_processing(dt, ok=i < done)
 
         while not stop_event.is_set():
+            if tuned is not None:
+                try:
+                    burst = max(1, int(tuned()))
+                except Exception:
+                    tuned = None
             if burst > 1:
                 got = sidecar.next_batch(burst, timeout=0.1)
             else:

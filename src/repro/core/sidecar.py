@@ -18,6 +18,7 @@ import time
 from typing import Sequence
 
 from .bus import BusLike, MessageBus, Subscription
+from .delivery import DeliveryPolicy, ReplayFrom, policy_from_legacy
 from .schema import Message
 
 
@@ -32,26 +33,37 @@ class Sidecar:
     def __init__(self, instance_id: str, bus: MessageBus | BusLike, *,
                  inputs: Sequence[str] = (), output: str | None = None,
                  token: str | None = None, queue_size: int = 256,
-                 wire: bool = False, group: str | None = None,
+                 wire: bool = False, policy: DeliveryPolicy | None = None,
+                 group: str | None = None,
                  key: str | None = None, replay_from=None):
         self.instance_id = instance_id
         self._bus = bus
         self._output = output
-        self.group = group
-        self.key = key
+        # the sidecar is runtime fabric, not user surface: it carries the
+        # (group, key) pair the Operator derived from the StreamSpec, or an
+        # explicit typed policy, and always speaks the typed form to the bus
+        policy = policy if policy is not None \
+            else policy_from_legacy(group, key)
+        self.policy = policy
+        legacy = policy.legacy_args() if policy is not None \
+            else (None, None, None)
+        self.group, self.key = legacy[0], legacy[1]
+        if isinstance(replay_from, ReplayFrom):
+            replay_from = replay_from.start
         self.replay_from = replay_from
         self._token = token or bus.issue_token(
             instance_id, list(inputs) + ([output] if output else []))
-        # group: scaled instances of one entity join the same queue group on
-        # every input subject — each message reaches exactly one of them (a
-        # worker pool); key upgrades the group to keyed delivery (each key
-        # sticks to one member); group=None keeps broadcast replicas.
+        # policy: scaled instances of one entity join the same queue group
+        # (Group) on every input subject — each message reaches exactly one
+        # of them (a worker pool); Keyed upgrades the group so each key
+        # sticks to one member; None keeps broadcast replicas.
         # replay_from starts each subscription on the (durable) subject's
         # log — the pump then serves history before live messages.
         self._subs: list[Subscription] = [
             bus.subscribe(s, token=self._token, maxsize=queue_size, wire=wire,
-                          name=f"{instance_id}:{s}", group=group, key=key,
-                          replay_from=replay_from)
+                          name=f"{instance_id}:{s}", policy=policy,
+                          replay=ReplayFrom(replay_from)
+                          if replay_from is not None else None)
             for s in inputs
         ]
         self._rr = 0  # round-robin cursor over input subscriptions
@@ -255,6 +267,16 @@ class Sidecar:
                 "unstackable_bursts": int(stats.get("unstackable_bursts", 0)),
                 "batched_bursts": int(stats.get("batched_bursts", 0)),
                 "batched_msgs": int(stats.get("batched_msgs", 0)),
+                # mesh execution surface (fused units on a multi-device
+                # mesh): how many devices the unit's mesh spans (1 = no
+                # mesh), how many bursts ran SPMD-partitioned across it,
+                # how many device buffers were reused across a linked
+                # exit/entry pair instead of re-uploading from host, and
+                # the autotuned burst ceiling currently in force
+                "mesh_devices": int(stats.get("mesh_devices", 1)),
+                "sharded_bursts": int(stats.get("sharded_bursts", 0)),
+                "resident_links": int(stats.get("resident_links", 0)),
+                "max_batch_current": int(stats.get("max_batch_current", 0)),
                 # durability surface: log catalogs per durable subject,
                 # replay progress of this instance's subscriptions, and the
                 # age of the newest exactly-once recovery snapshot (logic-

@@ -57,6 +57,8 @@ from .bus import (KEYED_PARTITIONS, BusError, MessageBus, Subscription,
                   Unauthorized, UnknownSubject, _default, _ext_hook,
                   decode_message, encode_message, partition_of)
 from .compression import compress, decompress
+from .delivery import (DeliveryPolicy, ReplayFrom, policy_from_legacy,
+                       resolve_policy, resolve_replay)
 from .schema import Message
 
 #: Protocol version carried in the handshake; a server refuses a client
@@ -356,12 +358,14 @@ class BusServer:
     def _handle_subscribe(self, peer: _Peer, rid, frame: dict) -> None:
         key = frame.get("key")
         partitions = int(frame.get("partitions") or KEYED_PARTITIONS)
+        replay_from = frame.get("replay_from")
         sub = self.bus.subscribe(
             frame["subject"], token=frame["token"],
             maxsize=frame.get("maxsize"), wire=False,
             name=frame.get("name") or f"{peer.name}#{frame.get('sid', '?')}",
-            group=frame.get("group"), key=key, partitions=partitions,
-            replay_from=frame.get("replay_from"))
+            policy=policy_from_legacy(frame.get("group"), key, partitions),
+            replay=ReplayFrom(replay_from) if replay_from is not None
+            else None)
         sid = int(frame["sid"])
         proxy = _ProxySub(sid, sub, min(self.window,
                                         frame.get("maxsize") or self.window),
@@ -870,18 +874,26 @@ class RemoteBus:
 
     def subscribe(self, subject: str, *, token: str,
                   maxsize: int | None = None, wire: bool = False,
-                  name: str = "", group: str | None = None,
+                  name: str = "", policy: DeliveryPolicy | None = None,
+                  replay: ReplayFrom | None = None,
+                  group: str | None = None,
                   key: str | None = None,
-                  partitions: int = KEYED_PARTITIONS,
+                  partitions: int | None = None,
                   replay_from=None, auto_ack: bool = True
                   ) -> RemoteSubscription:
         """Join the remote subject — as a first-class queue-group or
-        keyed-ring member when ``group``/``key`` are given (``name`` is the
-        ring identity; pick a stable one for keyed recovery).  ``wire`` is
-        accepted for signature compatibility and ignored: everything here
-        crosses the wire by construction.  ``auto_ack=False`` defers
-        acknowledgement to :meth:`RemoteSubscription.ack` for exactly-once
-        consumers."""
+        keyed-ring member under a :class:`~.delivery.Group` /
+        :class:`~.delivery.Keyed` ``policy`` (``name`` is the ring identity;
+        pick a stable one for keyed recovery).  The deprecated
+        ``group=``/``key=``/``partitions=``/``replay_from=`` kwargs map onto
+        ``policy``/``replay`` with a warning, exactly as on
+        :meth:`MessageBus.subscribe`.  ``wire`` is accepted for signature
+        compatibility and ignored: everything here crosses the wire by
+        construction.  ``auto_ack=False`` defers acknowledgement to
+        :meth:`RemoteSubscription.ack` for exactly-once consumers."""
+        group, key, partitions = resolve_policy(policy, group, key,
+                                                partitions)
+        replay_from = resolve_replay(replay, replay_from)
         del wire  # every remote delivery is wire-encoded already
         sid = next(self._sids)
         sub = RemoteSubscription(self, sid, subject,

@@ -57,6 +57,42 @@ def batch_spec_for(mesh: Mesh, global_batch: int, extra_dims: int) -> P:
     return P(lead, *([None] * extra_dims))
 
 
+def burst_spec(mesh: Mesh, batch: int, field_shape: tuple | None,
+               hint: Any = None) -> P:
+    """PartitionSpec for ONE burst-stacked stream field.
+
+    This is how a fused segment's batched program lands on the mesh: the
+    leading (burst) dim splits over the DP axes that divide ``batch`` —
+    exactly :func:`batch_spec_for`'s rule — and the trailing per-message
+    dims follow the field's declared sharding ``hint``
+    (:class:`repro.core.schema.ShardSpec` or any axes iterable) wherever
+    the named axis exists in the mesh, divides the dim, and isn't already
+    spent on the batch.  Axes the mesh doesn't have (a ``'model'`` hint on
+    a data-only mesh) replicate silently — the hint is a capability
+    declaration, not a demand.
+    """
+    lead_axes = []
+    prod = 1
+    for a in batch_axes(mesh):
+        if _div(batch, prod * axis_size(mesh, a)):
+            lead_axes.append(a)
+            prod *= axis_size(mesh, a)
+    lead = tuple(lead_axes) if lead_axes else None
+    used = set(lead_axes)
+    shape = tuple(field_shape) if field_shape is not None else ()
+    axes = tuple(hint) if hint is not None else ()
+    trailing = []
+    for i, dim in enumerate(shape):
+        ax = axes[i] if i < len(axes) else None
+        if (ax is not None and ax in mesh.shape and ax not in used
+                and isinstance(dim, int) and _div(dim, axis_size(mesh, ax))):
+            trailing.append(ax)
+            used.add(ax)
+        else:
+            trailing.append(None)
+    return P(lead, *trailing)
+
+
 # ---------------------------------------------------------------------------
 # Parameter rules
 # ---------------------------------------------------------------------------

@@ -9,6 +9,7 @@ _NEEDS_JAX = [
     "test_fault.py",
     "test_kernels.py",
     "test_launch.py",
+    "test_mesh.py",
     "test_models.py",
     "test_property.py",
     "test_serve.py",

@@ -1,0 +1,289 @@
+"""Typed delivery/addressing/sharding API (PR 8) and its deprecation shims.
+
+Every legacy spelling must (a) keep behaving exactly like its typed
+replacement and (b) emit ONE DeprecationWarning per call site — python's
+default warning filter de-duplicates on (message, module, lineno), so a
+hot loop over the same deprecated call warns once, not per message.
+"""
+import warnings
+
+import pytest
+
+from repro.core import (App, Broadcast, DeliveryPolicy, DSLError, FieldSpec,
+                        Group, Keyed, Listen, MessageBus, Peer, ReplayFrom,
+                        ShardSpec, StreamSchema, connect, drain)
+from repro.core.delivery import policy_from_legacy, resolve_policy
+from repro.core.schema import KNOWN_MESH_AXES
+
+
+@pytest.fixture
+def bus():
+    b = MessageBus()
+    b.register_subject("s", StreamSchema.of(x=FieldSpec("int"),
+                                            k=FieldSpec("str")))
+    return b
+
+
+def _tok(bus, name="t"):
+    return bus.issue_token(name, ["s"])
+
+
+# ---------------------------------------------------------------------------
+# Policy value types
+# ---------------------------------------------------------------------------
+
+def test_policy_values_validate():
+    assert Broadcast().legacy_args() == (None, None, None)
+    assert Group("pool").legacy_args() == ("pool", None, None)
+    assert Keyed("pool", "k").legacy_args() == ("pool", "k", 64)
+    assert Keyed("pool", "k", partitions=8).legacy_args() == ("pool", "k", 8)
+    with pytest.raises(ValueError):
+        Group("")
+    with pytest.raises(ValueError):
+        Keyed("", "k")
+    with pytest.raises(ValueError):
+        Keyed("pool", "")
+    with pytest.raises(ValueError):
+        Keyed("pool", "k", partitions=0)
+    with pytest.raises(ValueError):
+        Peer("")
+
+
+def test_policy_from_legacy_roundtrip():
+    assert policy_from_legacy(None, None) is None
+    assert policy_from_legacy("pool", None) == Group("pool")
+    assert policy_from_legacy("pool", "k", 8) == Keyed("pool", "k", 8)
+
+
+def test_replay_from_constructors():
+    assert ReplayFrom.offset(5).start == 5
+    assert ReplayFrom.timestamp(1.5).start == 1.5
+    assert ReplayFrom.earliest().start == "earliest"
+    assert ReplayFrom.snapshot().start == "snapshot"
+
+
+# ---------------------------------------------------------------------------
+# subscribe(): typed == legacy, warning once per call site
+# ---------------------------------------------------------------------------
+
+def _pump(bus, tok, n=6):
+    for i in range(n):
+        bus.publish("s", {"x": i, "k": f"key{i % 3}"}, token=tok)
+
+
+def test_group_policy_equals_legacy_kwarg(bus):
+    tok = _tok(bus)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)  # typed = silent
+        new = bus.subscribe("s", token=tok, policy=Group("pool"), name="a")
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        old = bus.subscribe("s", token=tok, group="pool", name="b")
+    assert [w for w in rec if w.category is DeprecationWarning]
+    _pump(bus, tok)
+    got = sorted(m.payload["x"] for m in drain(new, 3) + drain(old, 3))
+    assert got == [0, 1, 2, 3, 4, 5]  # one pool: single delivery across both
+
+
+def test_keyed_policy_equals_legacy_kwargs():
+    """Same member names + partitions -> identical key assignment."""
+    def receives(**sub_kwargs):
+        b = MessageBus()
+        b.register_subject("s", StreamSchema.of(x=FieldSpec("int"),
+                                                k=FieldSpec("str")))
+        tok = b.issue_token("t", ["s"])
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            s1 = b.subscribe("s", token=tok, name="m1", **sub_kwargs)
+            s2 = b.subscribe("s", token=tok, name="m2", **sub_kwargs)
+        for i in range(12):
+            b.publish("s", {"x": i, "k": f"key{i % 5}"}, token=tok)
+        return (sorted(m.payload["x"] for m in drain(s1, 1, timeout=2)),
+                sorted(m.payload["x"] for m in drain(s2, 1, timeout=2)))
+
+    typed = receives(policy=Keyed("pool", "k", partitions=16))
+    legacy = receives(group="pool", key="k", partitions=16)
+    assert typed == legacy
+
+
+def test_legacy_subscribe_warns_once_per_call_site(bus):
+    tok = _tok(bus)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.resetwarnings()
+        warnings.simplefilter("default")
+        for i in range(5):
+            bus.subscribe("s", token=tok, group="pool", name=f"w{i}")
+    assert len([w for w in rec if w.category is DeprecationWarning]) == 1
+
+
+def test_typed_subscribe_never_warns(bus):
+    tok = _tok(bus)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        bus.subscribe("s", token=tok, policy=Broadcast())
+        bus.subscribe("s", token=tok, policy=Group("g1"), name="a")
+        bus.subscribe("s", token=tok, policy=Keyed("g2", "k"), name="b")
+
+
+def test_both_spellings_rejected(bus):
+    tok = _tok(bus)
+    with pytest.raises(TypeError):
+        bus.subscribe("s", token=tok, policy=Group("pool"), group="pool")
+    with pytest.raises(TypeError):
+        resolve_policy(Keyed("g", "k"), None, "k", None)
+    with pytest.raises(TypeError):
+        bus.subscribe("s", token=tok, policy="pool")  # not a DeliveryPolicy
+
+
+def test_policy_is_abstract():
+    with pytest.raises(NotImplementedError):
+        DeliveryPolicy().legacy_args()
+
+
+# ---------------------------------------------------------------------------
+# replay: typed == legacy on a durable subject
+# ---------------------------------------------------------------------------
+
+def _durable_bus():
+    b = MessageBus()
+    b.register_subject("s", StreamSchema.of(x=FieldSpec("int")))
+    b.make_durable("s", retention={"max_records": 1000})
+    return b
+
+
+def test_replay_typed_equals_legacy():
+    b = _durable_bus()
+    tok = b.issue_token("t", ["s"])
+    for i in range(4):
+        b.publish("s", {"x": i}, token=tok)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        new = b.subscribe("s", token=tok, replay=ReplayFrom.earliest())
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        old = b.subscribe("s", token=tok, replay_from="earliest")
+    assert [w for w in rec if w.category is DeprecationWarning]
+    assert [m.payload["x"] for m in drain(new, 4)] == [0, 1, 2, 3]
+    assert [m.payload["x"] for m in drain(old, 4)] == [0, 1, 2, 3]
+    # the typed value under the old kwarg is tolerated silently
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        tolerated = b.subscribe("s", token=tok,
+                                replay_from=ReplayFrom.offset(2))
+    assert [m.payload["x"] for m in drain(tolerated, 2)] == [2, 3]
+    with pytest.raises(TypeError):
+        b.subscribe("s", token=tok, replay=ReplayFrom.earliest(),
+                    replay_from="earliest")
+    with pytest.raises(TypeError):
+        b.subscribe("s", token=tok, replay="earliest")  # raw value needs kwarg
+
+
+# ---------------------------------------------------------------------------
+# connect(): Listen/Peer == serve=/remote=
+# ---------------------------------------------------------------------------
+
+def test_connect_listen_equals_serve():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        with connect(start=False, listen=Listen()) as op:
+            host, port = op.bus_address
+            assert host == "127.0.0.1" and port > 0
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        with connect(start=False, serve=True) as op:
+            host, port = op.bus_address
+            assert host == "127.0.0.1" and port > 0
+    assert [w for w in rec if w.category is DeprecationWarning]
+
+
+def test_connect_serve_port_forms():
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        with connect(start=False, serve=0) as op:
+            assert op.bus_address[1] > 0
+        with connect(start=False, serve=("127.0.0.1", 0)) as op:
+            assert op.bus_address == ("127.0.0.1", op.bus_address[1])
+
+
+def test_connect_peer_equals_remote():
+    with connect(start=False, listen=Listen()) as host_op:
+        addr = "%s:%d" % host_op.bus_address
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            with connect(peer=Peer(addr, name="edge-1")) as worker:
+                assert worker is not None
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            with connect(remote=addr, peer="edge-2") as worker:
+                assert worker is not None
+        assert [w for w in rec if w.category is DeprecationWarning]
+
+
+def test_connect_rejects_mixed_spellings():
+    with pytest.raises(DSLError):
+        with connect(listen=Listen(), serve=True):
+            pass
+    with pytest.raises(DSLError):
+        with connect(peer=Peer("127.0.0.1:1"), remote="127.0.0.1:1"):
+            pass
+    with pytest.raises(DSLError):
+        with connect(peer=Peer("127.0.0.1:1"), listen=Listen()):
+            pass
+    with pytest.raises(DSLError):
+        with connect(start=False, listen="not-a-listen"):
+            pass
+
+
+# ---------------------------------------------------------------------------
+# ShardSpec: typed == bare tuple (deprecated), axis validation at build
+# ---------------------------------------------------------------------------
+
+def test_shardspec_replaces_bare_tuple():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        spec = FieldSpec(kind="device", shape=(8, 4), dtype="float32",
+                         sharding=ShardSpec(("data", None)))
+    assert tuple(spec.sharding) == ("data", None)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        legacy = FieldSpec(kind="device", shape=(8, 4), dtype="float32",
+                           sharding=("data", None))
+    assert [w for w in rec if w.category is DeprecationWarning]
+    assert legacy.sharding == spec.sharding  # coerced to the same ShardSpec
+    assert isinstance(legacy.sharding, ShardSpec)
+    with pytest.raises(ValueError):
+        ShardSpec(("data", 3))  # entries are axis names or None
+    with pytest.raises(ValueError):
+        FieldSpec(kind="device", shape=(8,), dtype="float32", sharding=42)
+
+
+def test_shardspec_axis_validation():
+    spec = ShardSpec(("data", None))
+    spec.validate_axes({"data", "model"})
+    with pytest.raises(ValueError):
+        ShardSpec(("bogus",)).validate_axes(set(KNOWN_MESH_AXES))
+
+
+def test_build_rejects_unknown_mesh_axis():
+    app = App("shard-check")
+    bad = StreamSchema.device(x=((4, 4), "float32", ShardSpec(("bogus", None))))
+
+    @app.driver(emits=bad)
+    def src(ctx):
+        return iter(())
+
+    app.sense("frames", src)
+    with pytest.raises(DSLError):
+        app.build()
+
+
+def test_build_accepts_known_mesh_axes():
+    app = App("shard-ok")
+    good = StreamSchema.device(x=((4, 4), "float32", ShardSpec(("data", None))))
+
+    @app.driver(emits=good)
+    def src(ctx):
+        return iter(())
+
+    app.sense("frames", src)
+    app.build()  # no error
