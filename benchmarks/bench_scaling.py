@@ -13,13 +13,22 @@ topology is deployed twice, every stage at 1 instance and at ``WORKERS``
 grouped instances; metric is end-to-end messages/s from sensor start to the
 last exit message, best of ``RUNS``.
 
+PR 9 adds the **stealing** variant: a keyed pool with one straggler member
+(8× the service time).  Keys pin work to members, so without stealing the
+straggler's partitions queue behind it while its peers sit idle; with
+pull-based work stealing (``MessageBus.enable_stealing``) idle members take
+whole queued partitions from the deepest mailbox.  Gate: stealing >= 1.5×
+no-stealing at the same skew, with 0 per-key ordering violations and
+``stolen > 0`` (the steal path actually ran).
+
 ``run()`` returns the variant->metric dict that ``benchmarks.run`` writes to
 ``BENCH_scaling.json``; CI gates on ``speedup`` (grouped workers over single)
->= 2.  Group delivery is pure platform code — the gate runs on BOTH CI matrix
-legs (no jax required).
+>= 2 and on the stealing variant above.  Group delivery is pure platform
+code — the gates run on BOTH CI matrix legs (no jax required).
 """
 from __future__ import annotations
 
+import threading
 import time
 
 from repro.core import App, FieldSpec, StreamSchema, connect, drain
@@ -34,6 +43,15 @@ STAGES = 4
 WORKERS = 4
 SERVICE_S = 0.002   # per-message service time per stage
 RUNS = 3            # best-of, to keep the CI gate robust to scheduler noise
+
+# -- stealing variant (PR 9) --------------------------------------------------
+EVENT = StreamSchema.of(key=FieldSpec("str"), seq=FieldSpec("int"))
+STEAL_KEYS = 64          # one key per ring slot -> near-uniform member load,
+                         # so the straggler always holds a meaningful share
+STEAL_ROUNDS = 4         # 256 messages total, straggler backlog < mailbox
+SKEW_FAST_S = 0.002      # healthy member service time
+SKEW_SLOW_S = 0.020      # the straggler: 10x slower per message
+STEAL_RUNS = 2           # best PAIRED ratio (ring assignment varies per run)
 
 
 def _app(instances: int, frames: int):
@@ -77,6 +95,78 @@ def _measure(instances: int, frames: int = FRAMES) -> tuple[float, int, int]:
     return got / dt, drops, members
 
 
+def _steal_app():
+    """Keyed fold pool with ONE straggler member: the first worker thread to
+    run the fold claims the straggler role and serves every later message at
+    ``SKEW_SLOW_S`` (its peers at ``SKEW_FAST_S``).  Key->member pinning is
+    what makes the straggler hurt: its partitions' backlog can only drain
+    through it — unless the pool steals."""
+    app = App("steal-bench")
+
+    @app.driver(emits=EVENT)
+    def source(ctx, rounds=STEAL_ROUNDS):
+        def gen():
+            for r in range(rounds):
+                for k in range(STEAL_KEYS):
+                    yield {"key": f"key-{k:02d}", "seq": r}
+        return gen()
+
+    straggler: dict = {"ident": None}
+    claim = threading.Lock()
+
+    def fold(acc, payload):
+        me = threading.get_ident()
+        if straggler["ident"] is None:
+            with claim:
+                if straggler["ident"] is None:
+                    straggler["ident"] = me
+        time.sleep(SKEW_SLOW_S if straggler["ident"] == me else SKEW_FAST_S)
+        n = (acc or {"n": 0})["n"]
+        return {"n": n + 1, "seq": payload["seq"]}
+
+    (app.sense("sevents", source)
+        .key_by("key")
+        .reduce(fold, name="scounts")
+        .scaled(instances=WORKERS))
+    return app
+
+
+def _measure_steal(steal: bool) -> dict:
+    """Deploy the skewed keyed pool with stealing on/off, drain the full
+    burst, verify per-key order + fold-state continuity at the subscriber."""
+    frames = STEAL_KEYS * STEAL_ROUNDS
+    app = _steal_app()
+    with connect(start=False) as op:
+        app.deploy(op, start_sensors=False)
+        sub = op.subscribe("scounts", maxsize=frames + 8)
+        if steal:
+            assert op.bus.enable_stealing("sevents", "scounts")
+        time.sleep(0.2)  # let the worker threads boot
+        t0 = time.perf_counter()
+        op.start_pending_sensors()
+        got = drain(sub, frames, timeout=120)
+        dt = time.perf_counter() - t0
+        snap = op.bus.stats()["sevents"]["groups"]["scounts"]
+    violations = lost_state = 0
+    per_key: dict[str, list[dict]] = {}
+    for m in got:
+        per_key.setdefault(m.payload["key"], []).append(m.payload["value"])
+    for vals in per_key.values():
+        for i, v in enumerate(vals):
+            if v["seq"] != i:
+                violations += 1     # out-of-order / duplicated fold
+            if v["n"] != i + 1:
+                lost_state += 1     # accumulator reset or forked
+    return {
+        "rate": len(got) / dt,
+        "received": len(got),
+        "violations": violations,
+        "lost_state": lost_state,
+        "stolen": snap.get("stolen", 0),
+        "steal_denied": snap.get("steal_denied", 0),
+    }
+
+
 def run() -> dict:
     single, pooled = 0.0, 0.0
     drops = 0
@@ -89,11 +179,31 @@ def run() -> dict:
         pooled = max(pooled, rate)
         drops += d
     speedup = pooled / single
+
+    # paired runs: which member ends up the straggler (and how many keys it
+    # owns) varies with the ring draw, so the honest comparison is
+    # steal-on vs steal-off within a run — gate on the best pair
+    pinned, stealing, steal_speedup = 0.0, 0.0, 0.0
+    stolen = steal_violations = steal_state_loss = 0
+    for _ in range(STEAL_RUNS):
+        r_off = _measure_steal(steal=False)
+        r_on = _measure_steal(steal=True)
+        ratio = r_on["rate"] / r_off["rate"] if r_off["rate"] else 0.0
+        if ratio > steal_speedup:
+            steal_speedup = ratio
+            pinned, stealing = r_off["rate"], r_on["rate"]
+        stolen += r_on["stolen"]
+        for r in (r_off, r_on):
+            steal_violations += r["violations"]
+            steal_state_loss += r["lost_state"]
     emit("scaling_grouped_1", 1e6 / single, f"msgs_per_s={single:.0f}")
     emit(f"scaling_grouped_{WORKERS}", 1e6 / pooled,
          f"msgs_per_s={pooled:.0f}")
     emit("scaling_speedup", 0.0,
          f"{WORKERS}_workers_over_1={speedup:.2f}x")
+    emit("scaling_steal", 0.0,
+         f"steal_over_pinned={steal_speedup:.2f}x stolen={stolen} "
+         f"ooo={steal_violations}")
     return {
         "grouped_1_msgs_per_s": round(single, 1),
         f"grouped_{WORKERS}_msgs_per_s": round(pooled, 1),
@@ -104,4 +214,11 @@ def run() -> dict:
         "service_time_s": SERVICE_S,
         "exit_group_members": members,
         "dropped": drops,
+        "steal_pinned_msgs_per_s": round(pinned, 1),
+        "steal_stealing_msgs_per_s": round(stealing, 1),
+        "steal_speedup": round(steal_speedup, 3),
+        "steal_skew_x": round(SKEW_SLOW_S / SKEW_FAST_S, 1),
+        "stolen": stolen,
+        "steal_ordering_violations": steal_violations,
+        "steal_lost_state": steal_state_loss,
     }

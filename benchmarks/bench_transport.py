@@ -42,9 +42,11 @@ WAIT_S = 60.0
 
 def spawn_worker(addr: tuple[str, int], subject: str, group: str, name: str,
                  outfile: str, *, key: str | None = None,
-                 kill_after: int | None = None) -> subprocess.Popen:
+                 kill_after: int | None = None,
+                 extra: list[str] | None = None) -> subprocess.Popen:
     """Start one consumer process (see transport_worker.py) against a served
-    bus; reused verbatim by tests/test_transport.py."""
+    bus; reused verbatim by tests/test_transport.py.  ``extra`` appends raw
+    worker flags (``--no-fsync``, ``--steal``, ``--slow-ms``...)."""
     cmd = [sys.executable, str(WORKER), "--addr", f"{addr[0]}:{addr[1]}",
            "--subject", subject, "--group", group, "--name", name,
            "--outfile", outfile]
@@ -52,6 +54,8 @@ def spawn_worker(addr: tuple[str, int], subject: str, group: str, name: str,
         cmd += ["--key", key]
     if kill_after is not None:
         cmd += ["--kill-after", str(kill_after)]
+    if extra:
+        cmd += list(extra)
     env = dict(os.environ)
     env["PYTHONPATH"] = str(_REPO / "src") + (
         os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")

@@ -13,7 +13,13 @@ dispatch on the jax leg (``batched_msgs_per_s`` >= ``fused_jit_msgs_per_s``);
 4 queue-grouped workers must beat 1 by >= 2x on the
 scaling pipeline (BENCH_scaling.json ``speedup``); 4 keyed *stateful*
 workers must beat 1 by >= 2x with zero per-key ordering violations and zero
-lost state across a forced mid-run scale-down (BENCH_keyed.json); and
+lost state across a forced mid-run scale-down (BENCH_keyed.json); coalesced
+wire frames must be >= 2x per-message framing with exactly-once accounting
+across a mid-run kill and a correctly negotiated codec on BOTH legs — zstd
+with a compression win where zstandard is installed, a clean negotiate-down
+to zlib where it is not (BENCH_wire.json); work stealing must recover
+>= 1.5x over a pinned straggler pool with zero keyed ordering violations
+(BENCH_scaling.json ``steal_*``); and
 publishing on a durable subject must cost <= 2x fire-and-forget, with a
 late joiner replaying the full retained history (BENCH_durable.json).  Modules
 are imported lazily so a minimal-deps environment (no jax) can still run the
@@ -37,6 +43,7 @@ ALL = {
     "keyed": "bench_keyed",
     "durable": "bench_durable",
     "transport": "bench_transport",
+    "wire": "bench_wire",
     "loc": "bench_loc",
     "reuse": "bench_reuse",
     "fusion": "bench_fusion",
@@ -136,6 +143,61 @@ def _gate(results: dict[str, dict]) -> list[str]:
             failures.append(
                 f"transport: delivered {transport.get('delivered')} of "
                 f"{transport.get('published')} published messages")
+    wire = results.get("wire")
+    if wire is not None:
+        if wire.get("coalesced_x", 0.0) < 2.0:
+            failures.append(
+                f"wire: coalesced frames must be >=2x per-message framing "
+                f"(got {wire.get('coalesced_x')}x; "
+                f"coalesced={wire.get('coalesced_msgs_per_s')} msgs/s, "
+                f"per-message={wire.get('per_message_msgs_per_s')} msgs/s)")
+        if wire.get("frames_coalesced", 0) <= 0:
+            failures.append(
+                "wire: the coalesced path never shipped a multi-message "
+                "frame (silent fallback to per-message framing)")
+        if wire.get("zstd_host"):
+            # full-deps leg: the negotiated codec must be zstd and the wire
+            # must actually be smaller than the raw payloads
+            if wire.get("codec") != "zstd":
+                failures.append(
+                    f"wire: zstd available but negotiated codec is "
+                    f"{wire.get('codec')!r} (must be 'zstd')")
+            if not wire.get("wire_ratio") or wire["wire_ratio"] <= 1.0:
+                failures.append(
+                    f"wire: raw/compressed ratio must be > 1 on the zstd "
+                    f"leg (got {wire.get('wire_ratio')})")
+        elif not wire.get("negotiated_down"):
+            # minimal-deps leg: a zlib-only host must negotiate DOWN to
+            # zlib cleanly, not fail or stay un-negotiated
+            failures.append(
+                f"wire: zstd-less host must negotiate down to zlib "
+                f"(codec={wire.get('codec')!r}, "
+                f"proto={wire.get('proto')})")
+        for k in ("lost", "duplicates", "ordering_violations"):
+            if wire.get(k, 1) != 0:
+                failures.append(
+                    f"wire: {wire.get(k)} {k} across the coalesced-frame "
+                    f"kill run (must be 0)")
+    if scaling is not None and "steal_speedup" in scaling:
+        if scaling.get("steal_speedup", 0.0) < 1.5:
+            failures.append(
+                f"scaling: work stealing must recover >=1.5x over the "
+                f"pinned straggler pool (got {scaling.get('steal_speedup')}x; "
+                f"stealing={scaling.get('steal_stealing_msgs_per_s')} msgs/s, "
+                f"pinned={scaling.get('steal_pinned_msgs_per_s')} msgs/s)")
+        if scaling.get("stolen", 0) <= 0:
+            failures.append(
+                "scaling: the steal path never moved a partition "
+                "(stolen == 0 with stealing enabled)")
+        if scaling.get("steal_ordering_violations", 1) != 0:
+            failures.append(
+                f"scaling: {scaling.get('steal_ordering_violations')} "
+                f"per-key ordering violations under work stealing "
+                f"(must be 0)")
+        if scaling.get("steal_lost_state", 1) != 0:
+            failures.append(
+                f"scaling: {scaling.get('steal_lost_state')} per-key state "
+                f"resets/forks under work stealing (must be 0)")
     durable = results.get("durable")
     if durable is not None:
         if durable.get("publish_overhead_x", 99.0) > 2.0:

@@ -45,18 +45,31 @@ def main() -> int:
                     help="max messages pulled (and acked) per loop")
     ap.add_argument("--idle-exit", type=float, default=30.0,
                     help="clean exit after this many idle seconds")
+    ap.add_argument("--no-fsync", action="store_true",
+                    help="skip the per-batch fsync (pure-throughput phases "
+                         "where the record file is not the recovery effect)")
+    ap.add_argument("--steal", action="store_true",
+                    help="join with steal=True (pull-based work stealing)")
+    ap.add_argument("--slow-ms", type=float, default=0.0,
+                    help="per-message service time (straggler simulation)")
     args = ap.parse_args()
 
+    from repro.core.delivery import Group, Keyed
     from repro.core.transport import RemoteBus
     import time
 
     bus = RemoteBus(args.addr, peer=args.name, connect_timeout=10.0)
     token = bus.issue_token(args.name, [args.subject])
-    sub = bus.subscribe(args.subject, token=token, group=args.group,
-                        key=args.key, name=args.name, auto_ack=False)
+    policy = (Keyed(args.group, args.key, steal=args.steal) if args.key
+              else Group(args.group, steal=args.steal))
+    sub = bus.subscribe(args.subject, token=token, policy=policy,
+                        name=args.name, auto_ack=False)
     consumed = 0
     last_msg = time.monotonic()
-    with open(args.outfile, "a", buffering=1) as out:
+    # block-buffered: the explicit flush (+fsync) before each ack is the
+    # effect-then-acknowledge barrier; line buffering would add a syscall
+    # per message and throttle the coalesced-frame drain being measured
+    with open(args.outfile, "a") as out:
         while True:
             msgs = sub.next_batch(args.batch, timeout=0.2)
             if not msgs:
@@ -68,9 +81,12 @@ def main() -> int:
                 continue
             last_msg = time.monotonic()
             for m in msgs:
+                if args.slow_ms:
+                    time.sleep(args.slow_ms / 1000.0)
                 out.write(f"{m.payload['k']},{m.payload['i']}\n")
             out.flush()
-            os.fsync(out.fileno())
+            if not args.no_fsync:
+                os.fsync(out.fileno())
             sub.ack(len(msgs))          # effect recorded -> acknowledge
             consumed += len(msgs)
             if args.kill_after is not None and consumed >= args.kill_after:

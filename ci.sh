@@ -69,6 +69,14 @@ echo "== benchmarks: cross-process transport gate =="
 # runs on both matrix legs)
 python -m benchmarks.run --only transport --gate
 
+echo "== benchmarks: wire fast-path gate =="
+# writes BENCH_wire.json; coalesced frames must drain >=2x faster than
+# per-message framing, with 0 lost / 0 duplicated / 0 reordered across a
+# mid-run consumer kill under coalesced acks.  Codec check is per-leg: the
+# full-deps leg must negotiate zstd with wire_ratio > 1, the minimal leg
+# (no zstandard) must record a clean negotiate-down to zlib
+python -m benchmarks.run --only wire --gate
+
 echo "== benchmarks: durable publish overhead gate =="
 # writes BENCH_durable.json; fails if publishing on a durable subject costs
 # more than 2x fire-and-forget, or a late joiner's replay does not drain the

@@ -152,6 +152,12 @@ class UnknownSubject(BusError):
     pass
 
 
+#: A member shallower than this is never a steal victim: moving one queued
+#: message buys nothing over letting the victim finish it, and the group-lock
+#: round-trip would dominate.  Two is the floor at which splitting helps.
+STEAL_MIN_BACKLOG = 2
+
+
 # ---------------------------------------------------------------------------
 # The transport seam
 # ---------------------------------------------------------------------------
@@ -324,6 +330,14 @@ class Subscription:
         # max_n messages; the overflow queues here and is served first on
         # the next pop (single-consumer, like the mailbox itself)
         self._pending: deque = deque()
+        # work stealing: the partition tags of the burst this consumer popped
+        # and has not finished (replaced atomically with the pop, under the
+        # mailbox's queue mutex) — a thief must never take a partition the
+        # victim is still processing, or the key's order would fork.  For
+        # transport proxy subscriptions, _external_inflight is a callable
+        # returning the tags shipped over the wire but not yet acked.
+        self._inflight_tags: set = set()
+        self._external_inflight = None
 
     @property
     def replaying(self) -> bool:
@@ -407,20 +421,41 @@ class Subscription:
             while self._pending and len(out) < max_n:
                 out.append(self._pending.popleft())
             return out
-        try:
-            first = self._q.get(timeout=timeout)
-        except queue.Empty:
+        grp = self._group_ref
+        if (grp is not None and grp.steal_enabled and not self.closed
+                and self._q.qsize() == 0):
+            # idle member of a steal-enabled group: pull queued work from the
+            # deepest healthy peer BEFORE blocking on the empty mailbox —
+            # pull-based work stealing (a straggler's share stops waiting
+            # behind it).  Partition-granular for keyed groups.
+            grp.steal_into(self)
+        q = self._q
+        pairs: list = []
+        # One acquisition for the wait AND the whole drain (vs max_n
+        # get_nowait round-trips).  Safe to touch the internals: producers
+        # only ever put_nowait (nobody waits on not_full), and removing items
+        # never requires a not_empty notification.  The inflight-tag set is
+        # replaced under the same mutex as the pop, so a steal (which reads
+        # it under this mutex) can never observe a popped item without its
+        # tag marked busy.
+        with q.not_empty:
+            if not q._qsize():
+                if timeout is None:
+                    while not q._qsize():
+                        q.not_empty.wait()
+                else:
+                    deadline = time.monotonic() + timeout
+                    while not q._qsize():
+                        remaining = deadline - time.monotonic()
+                        if remaining <= 0:
+                            break
+                        q.not_empty.wait(remaining)
+            while len(pairs) < max_n and q._qsize():
+                pairs.append(q._get())
+            self._inflight_tags = {p[0] for p in pairs
+                                   if p is not None and p[0] is not None}
+        if not pairs:
             return []
-        pairs = [first]
-        if max_n > 1:
-            q = self._q
-            # one acquisition for the whole drain (vs max_n get_nowait
-            # round-trips).  Safe to touch the internals: producers only ever
-            # put_nowait (nobody waits on not_full), and removing items never
-            # requires a not_empty notification.
-            with q.mutex:
-                while len(pairs) < max_n and q._qsize():
-                    pairs.append(q._get())
         out: list[Message] = []
         for pair in pairs:
             if pair is None:
@@ -472,8 +507,10 @@ class Subscription:
                     # being delivered live to its partition's owner — serving
                     # a peer-owned copy from the log here would double-deliver
                     # it across the group.  Own partitions still come from the
-                    # log (the live mailbox copy dedupes at the flip).
-                    ring = kg.assignment()
+                    # log (the live mailbox copy dedupes at the flip).  Steal
+                    # overrides count: a stolen partition's live owner is the
+                    # thief, not the ring.
+                    ring = kg.effective_assignment()
                     msgs = [m for m in msgs
                             if m.headers["offset"] < self._join_head
                             or ring.get(partition_of(m.payload.get(kg.key),
@@ -648,6 +685,9 @@ class QueueGroup:
         self.delivered = 0            # hand-offs to a member (incl. re-routes)
         self.undeliverable = 0        # published while no healthy member
         self.rerouted = 0             # departing-member backlog re-deliveries
+        self.steal_enabled = False    # set by subscribe(policy=...steal=True)
+        self.stolen = 0               # messages pulled by an idle member
+        self.steal_denied = 0         # steal attempts a deep victim refused
         self._lock = threading.Lock()
 
     # -- membership -----------------------------------------------------------
@@ -744,6 +784,84 @@ class QueueGroup:
         (transport redelivery via :meth:`Subscription.requeue_front`)."""
         pass
 
+    # -- pull-based work stealing ---------------------------------------------
+    def steal_into(self, thief: Subscription) -> int:
+        """Move queued work from the deepest healthy member to idle ``thief``.
+
+        Called by an idle member's own consumer thread (from
+        :meth:`Subscription.next_batch`, before it blocks on its empty
+        mailbox).  The whole steal holds the group lock, so it serializes
+        against pick()/depart() — a racing publish or departure sees either
+        the pre- or post-steal queues, never a half-moved partition.  Returns
+        the number of messages moved; a deep victim that refuses (every
+        queued partition busy or orphaned) counts as ``steal_denied``, no
+        victim deep enough counts as neither.
+        """
+        if thief.closed or thief.replaying:
+            return 0
+        with self._lock:
+            if thief not in self.members:
+                return 0
+            moved, had_victim = self._steal_locked(thief)
+            if moved:
+                self.stolen += moved
+            elif had_victim:
+                self.steal_denied += 1
+            return moved
+
+    def _deepest_victim_locked(self,
+                               thief: Subscription) -> Subscription | None:
+        best, depth = None, STEAL_MIN_BACKLOG - 1
+        for m in self.members:
+            if m is thief or m.closed or m.replaying:
+                continue
+            d = m._q.qsize()
+            if d > depth:
+                best, depth = m, d
+        return best
+
+    def _steal_locked(self, thief: Subscription) -> tuple[int, bool]:
+        """(messages moved, deep-victim existed).  Base policy: take half the
+        victim's queued tail — round-robin delivery makes no ordering promise
+        across members, so any split is safe."""
+        victim = self._deepest_victim_locked(thief)
+        if victim is None:
+            return 0, False
+        q = victim._q
+        with q.mutex:
+            take = q._qsize() // 2
+            tail, sentinel = [], False
+            for _ in range(take):
+                pair = q.queue.pop()
+                if pair is None:  # close sentinel — stays with the victim
+                    sentinel = True
+                    continue
+                tail.append(pair)
+            if sentinel:
+                q.queue.append(None)
+            tail.reverse()
+        if not tail:
+            return 0, True
+        self._transfer_locked(victim, thief, tail)
+        return len(tail), True
+
+    def _transfer_locked(self, victim: Subscription, thief: Subscription,
+                         pairs: list) -> None:
+        """Append stolen ``(tag, item)`` pairs to the thief's mailbox tail,
+        converting wire format when the two subscriptions disagree.  Like
+        :meth:`Subscription.requeue_front`, the thief may temporarily exceed
+        ``maxsize`` — stolen items are never dropped."""
+        converted = []
+        for tag, item in pairs:
+            if victim.wire != thief.wire:
+                item = encode_message(item) if thief.wire \
+                    else decode_message(item)
+            converted.append((tag, item))
+        tq = thief._q
+        with tq.mutex:
+            tq.queue.extend(converted)
+            tq.not_empty.notify(len(converted))
+
     def depart(self, sub: Subscription, reoffer, lost) -> bool:
         """Atomic leave: seal ``sub``, remove it, re-home its queued backlog.
 
@@ -793,6 +911,9 @@ class QueueGroup:
             "dropped": sum(m.dropped for m in self.members),
             "backlog": sum(m.qsize() for m in self.members),
             "replaying": [m.name for m in self.members if m.replaying],
+            "steal_enabled": self.steal_enabled,
+            "stolen": self.stolen,
+            "steal_denied": self.steal_denied,
         }
 
     def snapshot(self) -> dict:
@@ -853,6 +974,12 @@ class KeyedGroup(QueueGroup):
         # x members hashes, which sits on the autoscaler's metrics poll path
         self._ring_for: tuple[str, ...] | None = None
         self._ring: dict[int, str] = {}
+        # partitions whose ownership migrated by work stealing: partition ->
+        # thief member NAME, overriding the rendezvous ring so later messages
+        # follow the stolen backlog (a key must never split across members).
+        # Sticky until the named owner leaves (then the ring reclaims it with
+        # the departure's ordered backlog hand-off) or is lazily found gone.
+        self._stolen_owner: dict[int, str] = {}
 
     def add(self, sub: Subscription) -> None:
         with self._lock:
@@ -896,12 +1023,20 @@ class KeyedGroup(QueueGroup):
     def _remove_locked(self, sub: Subscription) -> None:
         if sub in self.members and sub._log is not None:
             # durable subject: park the leaver's partitions until a
-            # recoverer replays their history (see _orphaned above)
+            # recoverer replays their history (see _orphaned above).  A
+            # stolen partition belongs to its thief, not the ring — only
+            # partitions the leaver actually owned are orphaned.
             names = [m.name for m in self.members
                      if m is sub or not m.closed]
             ring = ring_assignment(names, self.n_partitions)
             self._orphaned.update(
-                p for p, owner in ring.items() if owner == sub.name)
+                p for p, owner in ring.items()
+                if self._stolen_owner.get(p, owner) == sub.name)
+        # drop steal overrides held by the leaver: depart()'s repick loop
+        # then re-homes its drained backlog (stolen partitions included) by
+        # the ring, in order, exactly like any other departure
+        for p in [p for p, o in self._stolen_owner.items() if o == sub.name]:
+            del self._stolen_owner[p]
         super()._remove_locked(sub)
 
     def _route_locked(self, p: int) -> Subscription | None:
@@ -914,6 +1049,14 @@ class KeyedGroup(QueueGroup):
             # nobody is recovering — hand the partition back to the ring
             # (availability over strict order, like drop-oldest mailboxes)
             self._orphaned.discard(p)
+        owner = self._stolen_owner.get(p)
+        if owner is not None:
+            for m in self.members:
+                if m.name == owner and not m.closed:
+                    return m
+            # thief vanished without a depart() (process death) — lazily
+            # hand the partition back to the ring
+            del self._stolen_owner[p]
         return self._member_for_partition(p)
 
     def _pick_locked(self, msg) -> tuple[Subscription | None, object]:
@@ -957,6 +1100,57 @@ class KeyedGroup(QueueGroup):
             self._partition_backlog[tag] = \
                 self._partition_backlog.get(tag, 0) + 1
 
+    def _steal_locked(self, thief: Subscription) -> tuple[int, bool]:
+        """Partition-granular steal: move WHOLE queued partitions — heaviest
+        first, up to half the victim's queue — never splitting a key.
+
+        A partition is eligible only when the victim holds none of it in
+        flight (its popped-but-unfinished burst, plus — for transport proxy
+        subscriptions — tags shipped over the wire but unacked) and it is
+        not orphaned awaiting durable recovery.  Chosen partitions' routing
+        moves to the thief (``_stolen_owner``) under the same group lock, so
+        every later message follows the stolen backlog: per-key order is
+        victim-prefix then thief-suffix with no interleaving."""
+        victim = self._deepest_victim_locked(thief)
+        if victim is None:
+            return 0, False
+        q = victim._q
+        with q.mutex:
+            queued = list(q.queue)
+            busy = set(victim._inflight_tags)
+            ext = victim._external_inflight
+            if ext is not None:
+                busy |= set(ext())
+            counts: dict[int, int] = {}
+            for pair in queued:
+                if pair is not None and pair[0] is not None:
+                    counts[pair[0]] = counts.get(pair[0], 0) + 1
+            eligible = [t for t in counts
+                        if t not in busy and t not in self._orphaned]
+            if not eligible:
+                return 0, True
+            eligible.sort(key=lambda t: counts[t], reverse=True)
+            budget = max(1, len(queued) // 2)
+            chosen: set[int] = set()
+            total = 0
+            for t in eligible:
+                if chosen and total >= budget:
+                    break
+                chosen.add(t)
+                total += counts[t]
+            keep, taken = [], []
+            for pair in queued:
+                if pair is not None and pair[0] in chosen:
+                    taken.append(pair)
+                else:
+                    keep.append(pair)
+            q.queue.clear()
+            q.queue.extend(keep)
+        for t in chosen:
+            self._stolen_owner[t] = thief.name
+        self._transfer_locked(victim, thief, taken)
+        return len(taken), True
+
     def _assignment_locked(self) -> dict[int, str]:
         return dict(self._ring_locked())
 
@@ -964,6 +1158,20 @@ class KeyedGroup(QueueGroup):
         """The live partition->member map (healthy members only)."""
         with self._lock:
             return self._assignment_locked()
+
+    def effective_assignment(self) -> dict[int, str]:
+        """The ring WITH steal overrides applied — where a partition's
+        messages actually route right now.  Replay filtering must use this
+        (not :meth:`assignment`): a stolen partition's live copies go to the
+        thief, so a recovering member serving them from the log would
+        double-deliver."""
+        with self._lock:
+            ring = self._assignment_locked()
+            live = {m.name for m in self.members if not m.closed}
+            for p, owner in self._stolen_owner.items():
+                if owner in live:
+                    ring[p] = owner
+            return ring
 
     def _snapshot_locked(self) -> dict:
         snap = super()._snapshot_locked()
@@ -974,6 +1182,7 @@ class KeyedGroup(QueueGroup):
             n_partitions=self.n_partitions,
             assignment=self._assignment_locked(),
             partition_backlog=pb,
+            stolen_partitions=dict(self._stolen_owner),
         )
         return snap
 
@@ -1216,6 +1425,7 @@ class MessageBus:
         head, then flip to live delivery — no gaps, no duplicates across
         the handoff.  The deprecated ``replay_from=`` raw values (int
         offset / float timestamp / ``"earliest"``) keep working."""
+        steal = bool(getattr(policy, "steal", False))
         group, key, partitions = resolve_policy(policy, group, key,
                                                 partitions)
         replay_from = resolve_replay(replay, replay_from)
@@ -1275,8 +1485,26 @@ class MessageBus:
                         f"{g.key!r}; members must subscribe with key=")  # type: ignore[attr-defined]
                 g.add(sub)
                 sub._group_ref = g
+                if steal:
+                    # first steal=True member switches the whole pool on —
+                    # stealing is a group property (all mailboxes are fair
+                    # game), not a per-member one
+                    g.steal_enabled = True
             self._subs[subject].append(sub)
             return sub
+
+    def enable_stealing(self, subject: str, group: str) -> bool:
+        """Switch pull-based work stealing on for an EXISTING queue group
+        (the runtime equivalent of the first member joining with
+        ``Group(..., steal=True)``) — stealing is a pool property, so one
+        switch covers every member's mailbox.  Returns False when no such
+        group exists yet (join a member first)."""
+        with self._lock:
+            g = self._groups.get(subject, {}).get(group)
+            if g is None:
+                return False
+            g.steal_enabled = True
+            return True
 
     def unsubscribe(self, sub: Subscription) -> None:
         """Close a subscription and leave its group; a group member's

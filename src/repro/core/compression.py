@@ -64,14 +64,39 @@ def train_dictionary(samples: list[bytes], *,
         return None
 
 
+def available_codecs() -> list[str]:
+    """Codecs this process can read and write, preferred first.
+
+    The wire-compression negotiation (``transport.py`` hello exchange)
+    advertises this list; the serving side picks the first common entry.
+    zlib is always last — every peer has it, so negotiation can only fail
+    on a malformed hello, never on codec availability.
+    """
+    return ["zstd", "zlib"] if HAS_ZSTD else ["zlib"]
+
+
 def compress(data: bytes, *, level: int = 3,
-             dictionary: bytes | None = None) -> bytes:
+             dictionary: bytes | None = None,
+             codec: str | None = None) -> bytes:
     """Compress ``data`` with the best available codec; returns a tagged blob.
 
     ``dictionary`` (bytes from :func:`train_dictionary`) switches the zstd
     leg to dictionary compression (tag ``DXZ2``); the zlib leg ignores it
     (plain ``DXL1`` blobs stay self-describing).
+
+    ``codec`` pins the codec instead of auto-selecting: ``"zlib"`` forces a
+    ``DXL1`` blob even when zstd is installed (a negotiated-down wire
+    connection must never emit a tag the peer cannot read), ``"zstd"``
+    requires zstd and raises :class:`CompressionError` without it.
     """
+    if codec == "zlib":
+        return TAG_ZLIB + zlib.compress(data, level)
+    if codec == "zstd" and not HAS_ZSTD:
+        raise CompressionError(
+            "codec 'zstd' requested but the 'zstandard' module is not "
+            "installed")
+    if codec not in (None, "zstd", "zlib"):
+        raise CompressionError(f"unknown codec {codec!r}")
     if HAS_ZSTD:
         if dictionary is not None:
             zd = zstandard.ZstdCompressionDict(dictionary)

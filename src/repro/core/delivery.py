@@ -73,9 +73,15 @@ class Group(DeliveryPolicy):
     All subscriptions sharing ``name`` on a subject form one pool: each
     message reaches exactly one healthy member, departing members re-home
     their backlog to survivors.
+
+    ``steal=True`` additionally lets an idle member pull queued work from
+    the deepest healthy member's mailbox tail (pull-based work stealing) —
+    a straggler's share no longer waits behind it.  The first member to
+    join with ``steal=True`` enables it for the whole pool.
     """
 
     name: str
+    steal: bool = False
 
     def __post_init__(self) -> None:
         if not self.name:
@@ -94,11 +100,16 @@ class Keyed(DeliveryPolicy):
     hashes to a given partition reaches the same member — stateful stages
     scale without splitting a key's state.  ``partitions`` fixes the ring
     size at group creation (all members must agree).
+
+    ``steal=True`` enables partition-granular work stealing: an idle member
+    takes *whole* queued partitions (never interleaving a key) from the
+    deepest member, so per-key ordering survives the migration.
     """
 
     group: str
     field: str
     partitions: int = KEYED_PARTITIONS
+    steal: bool = False
 
     def __post_init__(self) -> None:
         if not self.group:

@@ -78,8 +78,12 @@ runtime.  It operates on the compiled v1 :class:`~.app.Application` spec graph
      :data:`DEFAULT_MAX_BATCH` and double their ceiling (up to
      :data:`AUTOTUNE_MAX_BATCH`) after :data:`AUTOTUNE_STREAK` consecutive
      ceiling-filling bursts — sustained full occupancy means the mailbox
-     is backlogged and a bigger program amortizes further.  The Executor
-     re-reads the tuned ceiling (``process.current_max_batch``) each pump.
+     is backlogged and a bigger program amortizes further.  The tuner also
+     runs DOWN: :data:`AUTOTUNE_DOWN_STREAK` consecutive bursts slower
+     than :data:`AUTOTUNE_BUDGET_S` halve the ceiling (floor 1) — past the
+     device's sweet spot a bigger burst only stretches per-message
+     latency.  The Executor re-reads the tuned ceiling
+     (``process.current_max_batch``) each pump.
 
 Upgrading an individual stage AU after fusion does not cascade into already-
 deployed fused units (the fused AU snapshots stage logic at build time);
@@ -88,6 +92,7 @@ redeploy the app to pick up new stage versions.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Iterable, Mapping, Sequence
 
 import numpy as np
@@ -134,6 +139,18 @@ AUTOTUNE_MAX_BATCH = 256
 #: ``max_batch`` — one full burst can be a blip; a streak means the mailbox
 #: is genuinely backlogged at the current ceiling.
 AUTOTUNE_STREAK = 4
+
+#: Per-burst drain-latency budget for the autotuner's DOWN direction.  A
+#: bigger ceiling amortizes dispatch, but past the device's sweet spot it
+#: only stretches the burst: every message in the burst then waits the whole
+#: burst's wall time.  Bursts slower than this budget count against the
+#: ceiling; :data:`AUTOTUNE_DOWN_STREAK` of them in a row halve it (one slow
+#: burst can be a GC pause or a recompile — a streak is the ceiling's fault).
+AUTOTUNE_BUDGET_S = 0.25
+
+#: Consecutive over-budget device bursts before the autotuner halves the
+#: ceiling (floor 1; pad shapes stay powers of two).
+AUTOTUNE_DOWN_STREAK = 4
 
 
 def jax_available() -> bool:
@@ -565,6 +582,7 @@ def make_fused_logic(stages: Sequence[FusedStage],
         # dispatch (ragged/mixed shapes) — those messages may still run on
         # the device one at a time, so they are not fallbacks.
         tune = {"cur": max_batch or DEFAULT_MAX_BATCH, "streak": 0,
+                "slow": 0,
                 "auto": max_batch is None and program is not None}
         stats = {"device_fallbacks": 0, "unstackable_bursts": 0,
                  "batched_bursts": 0, "batched_msgs": 0,
@@ -606,13 +624,25 @@ def make_fused_logic(stages: Sequence[FusedStage],
                         mode["device"] = False
             return host_one(stream, payload)
 
-        def autotune(burst: int) -> None:
+        def autotune(burst: int, drain_s: float) -> None:
             # occupancy feedback: a burst that fills the current ceiling
             # means the mailbox still had messages left behind; a streak of
             # them means the ceiling — not the arrival rate — is the
-            # bottleneck, so double it (pad shapes stay powers of two)
+            # bottleneck, so double it (pad shapes stay powers of two).
+            # Latency feedback runs the other way: a streak of over-budget
+            # bursts means the ceiling is past the device's sweet spot and
+            # every message is paying the whole burst's wall time — halve it.
             if not tune["auto"]:
                 return
+            if drain_s > AUTOTUNE_BUDGET_S:
+                tune["streak"] = 0  # never grow through a latency breach
+                tune["slow"] += 1
+                if tune["slow"] >= AUTOTUNE_DOWN_STREAK and tune["cur"] > 1:
+                    tune["cur"] = max(1, tune["cur"] // 2)
+                    tune["slow"] = 0
+                    stats["max_batch_current"] = tune["cur"]
+                return
+            tune["slow"] = 0
             if burst >= tune["cur"]:
                 tune["streak"] += 1
                 if tune["streak"] >= AUTOTUNE_STREAK \
@@ -633,6 +663,7 @@ def make_fused_logic(stages: Sequence[FusedStage],
             if mode["device"] and batched_program is not None \
                     and len(payloads) > 1:
                 pad_to = _round_up_pow2(len(payloads))
+                t0 = time.monotonic()
                 try:
                     dev = _to_device_batched(payloads, pad_to, stats)
                 except Exception:
@@ -664,7 +695,7 @@ def make_fused_logic(stages: Sequence[FusedStage],
                         stats["batched_msgs"] += len(payloads)
                         if sharded is not None:
                             stats["sharded_bursts"] += 1
-                        autotune(len(payloads))
+                        autotune(len(payloads), time.monotonic() - t0)
                         host = _from_device_batched(out, payloads,
                                                     resident=resident)
                         return [host[i] if keep[i] else None

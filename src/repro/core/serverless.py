@@ -374,6 +374,7 @@ class ScalePolicy:
     backlog_low: int = 2          # scale down if total backlog below this
     idle_s: float = 5.0           # and instances have been idle this long
     cooldown_s: float = 1.0       # min seconds between decisions per stream
+    steal_streak: int = 3         # consecutive stealing decisions = straggler
 
 
 class AutoScaler:
@@ -396,6 +397,13 @@ class AutoScaler:
     ``backlog_high`` scales the pool up — more members re-spread the
     remaining partitions off the hot member (a single key can never split,
     but its neighbours can move away).
+
+    Stealing pools add a **straggler** signal: work stealing masks a slow
+    member's backlog (idle peers drain it), so the backlog signals above can
+    look healthy while the pool quietly burns capacity compensating.  The
+    groups' ``stolen`` counter still rising across ``steal_streak``
+    consecutive decisions means the imbalance is structural, not a blip —
+    scale up by one so the pool stops depending on theft to keep up.
     """
 
     def __init__(self, policy: ScalePolicy | None = None):
@@ -404,6 +412,24 @@ class AutoScaler:
         # per-instance drop watermarks: a replaced instance must not lower
         # the pool total and mask fresh drops on the survivors
         self._last_drops: dict[str, dict[str, int]] = {}
+        # stolen-counter watermark + consecutive-rising streak per stream
+        self._last_stolen: dict[str, int] = {}
+        self._steal_streak: dict[str, int] = {}
+
+    @staticmethod
+    def _stolen_total(metrics: Sequence[Mapping]) -> int:
+        """Pool-wide stolen-message/partition count across all groups.
+        The counter lives on the group (every member's sidecar reports the
+        same value), so take the max per group view, not the sum."""
+        total = 0
+        seen: dict[str, int] = {}
+        for m in metrics:
+            for subject, snap in (m.get("groups") or {}).items():
+                seen[subject] = max(seen.get(subject, 0),
+                                    int(snap.get("stolen", 0)))
+        for v in seen.values():
+            total += v
+        return total
 
     @staticmethod
     def _hot_partition_backlog(metrics: Sequence[Mapping]) -> int:
@@ -437,12 +463,25 @@ class AutoScaler:
         new_drops = any(d > prev_drops.get(iid, 0) for iid, d in drops.items())
         self._last_drops[owner] = drops
         all_idle = all(m["idle_s"] > self.policy.idle_s for m in metrics)
+        stolen = self._stolen_total(metrics)
+        if stolen > self._last_stolen.get(owner, 0):
+            self._steal_streak[owner] = self._steal_streak.get(owner, 0) + 1
+        else:
+            self._steal_streak[owner] = 0
+        self._last_stolen[owner] = stolen
+        stealing_hard = (self._steal_streak.get(owner, 0)
+                         >= self.policy.steal_streak)
 
         desired = cur
         if (total_backlog > self.policy.backlog_high * cur or new_drops
                 or hot_partition > self.policy.backlog_high) \
                 and cur < max_instances:
             desired = min(max_instances, cur * 2)
+        elif stealing_hard and cur < max_instances:
+            # sustained stealing = a structural straggler; one extra member
+            # (not a doubling — the pool is keeping up, just inefficiently)
+            desired = cur + 1
+            self._steal_streak[owner] = 0
         elif total_backlog <= self.policy.backlog_low and all_idle \
                 and cur > min_instances:
             desired = cur - 1

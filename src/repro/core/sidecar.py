@@ -199,11 +199,20 @@ class Sidecar:
                 "delivered": snap["delivered"],
                 "lag": snap["backlog"],       # delivered - drained
                 "rerouted": snap["rerouted"],
+                # work stealing: moves an idle member pulled from the
+                # deepest mailbox, and denials (deep victim, nothing
+                # eligible).  Sustained stealing marks a straggler — the
+                # autoscaler reads these through the same snapshot.
+                "steal_enabled": snap.get("steal_enabled", False),
+                "stolen": snap.get("stolen", 0),
+                "steal_denied": snap.get("steal_denied", 0),
             }
             if snap["policy"] == "keyed":
                 info.update(key=snap["key"],
                             assignment=snap["assignment"],
-                            partition_backlog=snap["partition_backlog"])
+                            partition_backlog=snap["partition_backlog"],
+                            stolen_partitions=snap.get(
+                                "stolen_partitions", {}))
             out[s.subject] = info
         return out
 

@@ -53,17 +53,27 @@ from typing import Iterable
 
 import msgpack
 
+import dataclasses
+
 from .bus import (KEYED_PARTITIONS, BusError, MessageBus, Subscription,
                   Unauthorized, UnknownSubject, _default, _ext_hook,
                   decode_message, encode_message, partition_of)
-from .compression import compress, decompress
+from .compression import (available_codecs, compress, decompress,
+                          train_dictionary)
 from .delivery import (DeliveryPolicy, ReplayFrom, policy_from_legacy,
                        resolve_policy, resolve_replay)
 from .schema import Message
 
-#: Protocol version carried in the handshake; a server refuses a client
-#: whose major version differs (there is exactly one version today).
-PROTO_VERSION = 1
+#: Protocol version carried in the handshake.  v2 adds the negotiated fast
+#: path: codec agreement (a zlib-only peer talks to a zstd host by
+#: negotiating down), coalesced ``msgs`` delivery frames, batched ``pubs``,
+#: and per-connection trained-dictionary compression.  The server still
+#: accepts v1 hellos — and peers that never say hello at all get v1 framing
+#: (one ``msg`` per frame, host-default codec), so old clients keep working.
+PROTO_VERSION = 2
+
+#: Protocol versions the server will accept in a hello.
+SUPPORTED_PROTOS = (1, 2)
 
 #: Hard ceiling on one frame's blob size — a corrupted length prefix must
 #: not make a reader allocate gigabytes.
@@ -72,6 +82,20 @@ MAX_FRAME_BYTES = 64 * 1024 * 1024
 #: Default max unacknowledged messages per remote subscription (flow
 #: control: the pump stops shipping until the peer acks).
 DEFAULT_WINDOW = 256
+
+#: Default ceiling on messages coalesced into one ``msgs`` frame (v2).  The
+#: hello negotiates ``min(server, client)`` per connection.
+DEFAULT_MAX_FRAME_MSGS = 64
+
+#: Soft cap on one coalesced frame's *serialized* payload bytes — a frame
+#: flushes when adding the next message would cross it, so huge payloads
+#: don't snowball into multi-megabyte frames that stall the pipe.
+MAX_COALESCED_BYTES = 512 * 1024
+
+#: Frames sampled per connection direction before a zstd dictionary is
+#: trained (``compression.train_dictionary``, the durable-segment training
+#: path) and announced to the receiver via a ``dict`` frame.
+DICT_TRAIN_FRAMES = 32
 
 
 class TransportError(BusError):
@@ -101,20 +125,40 @@ _ERROR_KINDS = {
 # Frames
 # ---------------------------------------------------------------------------
 
-def pack_frame(frame: dict, *, level: int = 1) -> bytes:
-    """Encode one frame dict: msgpack (numpy-aware) → codec-tagged blob →
-    4-byte big-endian length prefix."""
-    blob = compress(msgpack.packb(frame, default=_default, use_bin_type=True),
-                    level=level)
+def _encode_frame(frame: dict, *, level: int = 1, codec: str | None = None,
+                  dictionary: bytes | None = None) -> tuple[bytes, bytes]:
+    """Encode one frame dict; returns ``(wire_data, raw_msgpack)``.
+
+    ``wire_data`` is the length-prefixed codec-tagged blob that goes on the
+    socket; ``raw_msgpack`` is the pre-compression serialization — callers
+    use its length for the ``wire_ratio`` metric and its bytes as dictionary
+    training samples.  ``codec`` pins the negotiated wire codec (None =
+    host default, the v1 behaviour); ``dictionary`` switches zstd to
+    dictionary compression (tag ``DXZ2`` — only legal after the dictionary
+    was announced to the receiver)."""
+    raw = msgpack.packb(frame, default=_default, use_bin_type=True)
+    blob = compress(raw, level=level, codec=codec, dictionary=dictionary)
     if len(blob) > MAX_FRAME_BYTES:
         raise TransportError(f"frame too large ({len(blob)} bytes)")
-    return struct.pack(">I", len(blob)) + blob
+    return struct.pack(">I", len(blob)) + blob, raw
 
 
-def unpack_frame(blob: bytes) -> dict:
+def pack_frame(frame: dict, *, level: int = 1, codec: str | None = None,
+               dictionary: bytes | None = None) -> bytes:
+    """Encode one frame dict: msgpack (numpy-aware) → codec-tagged blob →
+    4-byte big-endian length prefix.  ``codec``/``dictionary`` select the
+    negotiated wire codec (see :func:`_encode_frame`)."""
+    data, _ = _encode_frame(frame, level=level, codec=codec,
+                            dictionary=dictionary)
+    return data
+
+
+def unpack_frame(blob: bytes, *, dictionary: bytes | None = None) -> dict:
     """Inverse of :func:`pack_frame` minus the length prefix (the reader
-    strips it)."""
-    return msgpack.unpackb(decompress(blob), ext_hook=_ext_hook, raw=False,
+    strips it).  ``dictionary`` is required to read ``DXZ2`` blobs — the
+    receive-side copy of the connection's announced dictionary."""
+    return msgpack.unpackb(decompress(blob, dictionary=dictionary),
+                           ext_hook=_ext_hook, raw=False,
                            strict_map_key=False)
 
 
@@ -131,14 +175,24 @@ def _recv_exact(sock: socket.socket, n: int) -> bytes:
     return b"".join(chunks)
 
 
-def read_frame(sock: socket.socket) -> tuple[dict, int]:
-    """Read one length-prefixed frame; returns ``(frame, wire_bytes)``."""
+def read_frame(sock: socket.socket, *,
+               dictionary=None) -> tuple[dict, int, int]:
+    """Read one length-prefixed frame; returns ``(frame, wire_bytes,
+    raw_bytes)`` — wire bytes as received (prefix included) and the
+    decompressed serialization size, the pair the compression-ratio metric
+    is built from.  ``dictionary`` may be bytes or a zero-arg callable
+    returning the current receive dictionary (a ``dict`` announcement can
+    land mid-stream, so readers resolve it per frame)."""
     header = _recv_exact(sock, 4)
     (length,) = struct.unpack(">I", header)
     if length > MAX_FRAME_BYTES:
         raise TransportError(f"frame length {length} exceeds MAX_FRAME_BYTES")
     blob = _recv_exact(sock, length)
-    return unpack_frame(blob), 4 + length
+    d = dictionary() if callable(dictionary) else dictionary
+    raw = decompress(blob, dictionary=d)
+    frame = msgpack.unpackb(raw, ext_hook=_ext_hook, raw=False,
+                            strict_map_key=False)
+    return frame, 4 + length, len(raw)
 
 
 # ---------------------------------------------------------------------------
@@ -177,7 +231,8 @@ class _ProxySub:
 
 
 class _Peer:
-    """One connected client: socket, identity, counters, proxy registry."""
+    """One connected client: socket, identity, counters, proxy registry,
+    negotiated wire parameters, and the outbound coalescing queue."""
 
     def __init__(self, conn: socket.socket, addr):
         self.conn = conn
@@ -189,10 +244,28 @@ class _Peer:
         self.frames_out = 0
         self.bytes_in = 0
         self.bytes_out = 0
+        self.raw_bytes_in = 0       # pre-compression serialization, received
+        self.raw_bytes_out = 0      # pre-compression serialization, sent
+        self.frames_coalesced = 0   # msgs frames carrying >1 message
         self.connected_at = time.monotonic()
         self.last_seen = self.connected_at
         self.dropped = False
         self.drop_lock = threading.Lock()
+        # negotiated by hello; a peer that never says hello keeps v1 framing
+        self.proto = 1
+        self.codec: str | None = None      # None = host default (v1)
+        self.max_frame_msgs = 1
+        # per-direction trained dictionaries: send_dict compresses our
+        # frames (announced to the peer FIRST), recv_dict reads theirs
+        self.send_dict: bytes | None = None
+        self.recv_dict: bytes | None = None
+        self.dict_samples: list[bytes] | None = None  # sampling until train
+        self.train_lock = threading.Lock()
+        # outbound message queue drained by the sender thread into coalesced
+        # frames: (sid, encoded_message) records
+        self.outq: deque[tuple[int, bytes]] = deque()
+        self.out_cond = threading.Condition()
+        self.out_gone = False
 
 
 class BusServer:
@@ -214,11 +287,17 @@ class BusServer:
 
     def __init__(self, bus: MessageBus, host: str = "127.0.0.1",
                  port: int = 0, *, window: int = DEFAULT_WINDOW,
-                 hb_timeout: float = 10.0, compress_level: int = 1):
+                 hb_timeout: float = 10.0, compress_level: int = 1,
+                 max_frame_msgs: int = DEFAULT_MAX_FRAME_MSGS,
+                 max_frame_delay_ms: float = 0.0,
+                 dict_train_frames: int = DICT_TRAIN_FRAMES):
         self.bus = bus
         self.window = window
         self.hb_timeout = hb_timeout
         self._level = compress_level
+        self.max_frame_msgs = max(1, max_frame_msgs)
+        self._frame_delay = max(0.0, max_frame_delay_ms) / 1000.0
+        self._dict_train_frames = max(0, dict_train_frames)
         self._lock = threading.Lock()
         self._peers: dict[int, _Peer] = {}
         self._peer_ids = itertools.count()
@@ -254,13 +333,17 @@ class BusServer:
                 self.accepted += 1
             threading.Thread(target=self._serve_peer, args=(pid, peer),
                              name=f"busserver-peer-{pid}", daemon=True).start()
+            threading.Thread(target=self._sender_loop, args=(pid, peer),
+                             name=f"busserver-send-{pid}", daemon=True).start()
 
     def _serve_peer(self, pid: int, peer: _Peer) -> None:
         try:
             while not self._closed.is_set():
-                frame, nbytes = read_frame(peer.conn)
+                frame, nbytes, raw_n = read_frame(
+                    peer.conn, dictionary=lambda: peer.recv_dict)
                 peer.frames_in += 1
                 peer.bytes_in += nbytes
+                peer.raw_bytes_in += raw_n
                 peer.last_seen = time.monotonic()
                 if not self._dispatch(peer, frame):
                     break  # clean bye
@@ -270,12 +353,44 @@ class BusServer:
         finally:
             self._drop_peer(pid, peer)
 
-    def _send(self, peer: _Peer, frame: dict) -> None:
-        data = pack_frame(frame, level=self._level)
+    def _send(self, peer: _Peer, frame: dict, *, plain: bool = False) -> None:
+        """Ship one frame with the peer's negotiated codec.  ``plain=True``
+        suppresses the trained dictionary — the ``dict`` announcement itself
+        must be readable before the receiver has it."""
+        data, raw = _encode_frame(frame, level=self._level, codec=peer.codec,
+                                  dictionary=None if plain
+                                  else peer.send_dict)
         with peer.send_lock:
             peer.conn.sendall(data)
             peer.frames_out += 1
             peer.bytes_out += len(data)
+            peer.raw_bytes_out += len(raw)
+        if not plain:
+            self._maybe_train(peer, raw)
+
+    def _maybe_train(self, peer: _Peer, raw: bytes) -> None:
+        """Sample one raw frame; once enough accumulate, train a zstd
+        dictionary, ANNOUNCE it (a plain ``dict`` frame, so the receiver
+        has the bytes before any ``DXZ2`` frame exists), then switch this
+        direction's sends over to it."""
+        if peer.dict_samples is None:
+            return
+        with peer.train_lock:
+            samples = peer.dict_samples
+            if samples is None:
+                return
+            samples.append(raw)
+            if len(samples) < self._dict_train_frames:
+                return
+            peer.dict_samples = None  # one-shot per connection
+        d = train_dictionary(samples)
+        if d is None:
+            return  # degenerate samples — keep plain zstd frames
+        try:
+            self._send(peer, {"op": "dict", "data": d}, plain=True)
+        except OSError:
+            return  # dying connection; the drop path handles it
+        peer.send_dict = d
 
     def _reply(self, peer: _Peer, rid, **kw) -> None:
         self._send(peer, {"rid": rid, "ok": True, **kw})
@@ -300,17 +415,42 @@ class BusServer:
             if proxy is not None:
                 proxy.ack(int(frame.get("n", 1)))
             return True
+        if op == "dict":
+            # the peer trained a dictionary for ITS send direction; every
+            # later frame from it may carry the DXZ2 tag
+            peer.recv_dict = bytes(frame["data"])
+            return True
         if op == "bye":
             return False
         try:
             if op == "hello":
-                if int(frame.get("proto", 0)) != PROTO_VERSION:
+                proto = int(frame.get("proto", 0))
+                if proto not in SUPPORTED_PROTOS:
                     raise TransportError(
                         f"protocol version mismatch: server speaks "
                         f"{PROTO_VERSION}, client {frame.get('proto')}")
                 if frame.get("peer"):
                     peer.name = str(frame["peer"])
-                self._reply(peer, rid, proto=PROTO_VERSION,
+                peer.proto = min(proto, PROTO_VERSION)
+                if peer.proto >= 2:
+                    # codec: first of OUR preference the client can read.
+                    # zlib closes every list (available_codecs), so a
+                    # zlib-only peer negotiates down instead of failing.
+                    theirs = [str(c) for c in frame.get("codecs") or ["zlib"]]
+                    peer.codec = next(
+                        (c for c in available_codecs() if c in theirs),
+                        "zlib")
+                    peer.max_frame_msgs = max(1, min(
+                        self.max_frame_msgs,
+                        int(frame.get("max_frame_msgs")
+                            or DEFAULT_MAX_FRAME_MSGS)))
+                    if peer.codec == "zstd" and self._dict_train_frames > 0:
+                        peer.dict_samples = []
+                # the reply is already compressed with the negotiated codec —
+                # safe, because the client advertised it and readers dispatch
+                # on the blob tag, not on negotiation state
+                self._reply(peer, rid, proto=peer.proto, codec=peer.codec,
+                            max_frame_msgs=peer.max_frame_msgs,
                             subjects=self.bus.subjects())
             elif op == "issue_token":
                 token = self.bus.issue_token(frame.get("name", peer.name),
@@ -330,6 +470,28 @@ class BusServer:
                                        headers=frame.get("headers"))
                 self._reply(peer, rid, seq=msg.seq,
                             offset=msg.headers.get("offset"))
+            elif op == "pubs":
+                # batched publish (v2): sequential, NOT atomic — an error
+                # mid-batch leaves the prefix published; the error reply
+                # tells the client where it stopped
+                seqs: list = []
+                offsets: list = []
+                try:
+                    for payload in frame["payloads"]:
+                        msg = self.bus.publish(
+                            frame["subject"], payload, token=frame["token"],
+                            headers=dict(frame.get("headers") or {}))
+                        seqs.append(msg.seq)
+                        offsets.append(msg.headers.get("offset"))
+                except Exception as e:
+                    kind = type(e).__name__
+                    if kind not in _ERROR_KINDS:
+                        kind = "BusError"
+                    self._send(peer, {"rid": rid, "ok": False, "kind": kind,
+                                      "error": str(e),
+                                      "published": len(seqs)})
+                else:
+                    self._reply(peer, rid, seqs=seqs, offsets=offsets)
             elif op == "stats":
                 self._reply(peer, rid, stats=self.bus.stats())
             elif op == "group_info":
@@ -359,17 +521,27 @@ class BusServer:
         key = frame.get("key")
         partitions = int(frame.get("partitions") or KEYED_PARTITIONS)
         replay_from = frame.get("replay_from")
+        policy = policy_from_legacy(frame.get("group"), key, partitions)
+        if policy is not None and frame.get("steal"):
+            policy = dataclasses.replace(policy, steal=True)
         sub = self.bus.subscribe(
             frame["subject"], token=frame["token"],
             maxsize=frame.get("maxsize"), wire=False,
             name=frame.get("name") or f"{peer.name}#{frame.get('sid', '?')}",
-            policy=policy_from_legacy(frame.get("group"), key, partitions),
+            policy=policy,
             replay=ReplayFrom(replay_from) if replay_from is not None
             else None)
         sid = int(frame["sid"])
         proxy = _ProxySub(sid, sub, min(self.window,
                                         frame.get("maxsize") or self.window),
                           key, partitions)
+        # work stealing reads a victim's in-flight partitions; for a proxy
+        # the popped burst is NOT the whole story — messages shipped over
+        # the wire stay busy until the peer acks them
+        def _wire_inflight(proxy=proxy):
+            with proxy.cond:
+                return {t for t, _ in proxy.inflight if t is not None}
+        sub._external_inflight = _wire_inflight
         peer.subs[sid] = proxy
         proxy.thread = threading.Thread(
             target=self._pump, args=(peer, proxy),
@@ -377,7 +549,7 @@ class BusServer:
         proxy.thread.start()
         self._reply(peer, rid, sid=sid)
 
-    # -- the pump: proxy mailbox -> wire, with an acked window ---------------
+    # -- the pump: proxy mailbox -> outbound queue, with an acked window -----
     def _pump(self, peer: _Peer, proxy: _ProxySub) -> None:
         sub = proxy.sub
         while not proxy.closed.is_set():
@@ -400,19 +572,71 @@ class BusServer:
                         pass
                     return
                 continue
-            # in-flight BEFORE send: if the send fails the messages are
-            # still tracked and will be requeued by the drop path
+            # in-flight BEFORE enqueue: if the connection dies anywhere
+            # between here and the wire, the messages are still tracked and
+            # will be requeued by the drop path
             with proxy.cond:
                 for m in msgs:
                     proxy.inflight.append((proxy.tag_of(m), m))
+            if not self._enqueue_out(
+                    peer, [(proxy.sid, encode_message(m)) for m in msgs]):
+                return  # peer dropped; inflight requeues via _retire_proxy
+
+    def _enqueue_out(self, peer: _Peer, records: list) -> bool:
+        with peer.out_cond:
+            if peer.out_gone:
+                return False
+            peer.outq.extend(records)
+            peer.out_cond.notify()
+        return True
+
+    # -- the sender: outbound queue -> coalesced frames on the socket --------
+    def _sender_loop(self, pid: int, peer: _Peer) -> None:
+        """Drain the peer's outbound queue into ``msgs`` frames — up to the
+        negotiated ``max_frame_msgs`` records (or :data:`MAX_COALESCED_BYTES`
+        of payload) per frame, one length prefix + one compression + one
+        syscall for the lot.  This is the wire analog of the fused layer's
+        batched bursts: framing overhead amortizes across the batch.  v1
+        peers (``max_frame_msgs == 1``) get the classic one-``msg``-per-frame
+        stream from the same loop."""
+        while True:
+            with peer.out_cond:
+                while not peer.outq and not peer.out_gone:
+                    peer.out_cond.wait(0.25)
+                if peer.out_gone:
+                    return
+                batch: list[tuple[int, bytes]] = []
+                size = 0
+                while (peer.outq and len(batch) < peer.max_frame_msgs
+                       and size < MAX_COALESCED_BYTES):
+                    sid, enc = peer.outq.popleft()
+                    batch.append((sid, enc))
+                    size += len(enc)
+            if (self._frame_delay > 0 and len(batch) < peer.max_frame_msgs
+                    and size < MAX_COALESCED_BYTES):
+                # optional top-up window: trade max_frame_delay_ms of
+                # latency for fuller frames on trickling producers
+                with peer.out_cond:
+                    if not peer.outq and not peer.out_gone:
+                        peer.out_cond.wait(self._frame_delay)
+                    while (peer.outq and len(batch) < peer.max_frame_msgs
+                           and size < MAX_COALESCED_BYTES):
+                        sid, enc = peer.outq.popleft()
+                        batch.append((sid, enc))
+                        size += len(enc)
             try:
-                for m in msgs:
-                    self._send(peer, {"op": "msg", "sid": proxy.sid,
-                                      "m": encode_message(m)})
+                if peer.proto >= 2:
+                    if len(batch) > 1:
+                        peer.frames_coalesced += 1
+                    self._send(peer, {"op": "msgs",
+                                      "ms": [[sid, enc]
+                                             for sid, enc in batch]})
+                else:
+                    for sid, enc in batch:
+                        self._send(peer, {"op": "msg", "sid": sid, "m": enc})
             except OSError as e:
-                # reader thread sees the dead socket too and runs the drop
-                # path; just stop pumping
-                _dbg(f"server: pump {peer.name}#{proxy.sid} send failed: {e!r}")
+                _dbg(f"server: sender for {peer.name} failed: {e!r}")
+                self._drop_peer(pid, peer)
                 return
 
     def _retire_proxy(self, peer: _Peer, sid: int, *, clean: bool) -> None:
@@ -439,6 +663,11 @@ class BusServer:
             if peer.dropped:
                 return
             peer.dropped = True
+        with peer.out_cond:
+            # stop the sender; whatever it never shipped is still in the
+            # proxies' in-flight windows and requeues below
+            peer.out_gone = True
+            peer.out_cond.notify_all()
         with self._lock:
             self._peers.pop(pid, None)
             self.disconnects += 1
@@ -480,10 +709,19 @@ class BusServer:
                     "addr": f"{p.addr[0]}:{p.addr[1]}",
                     "connected_s": now - p.connected_at,
                     "last_seen_s": now - p.last_seen,
+                    "proto": p.proto,
+                    "codec": p.codec,
+                    "max_frame_msgs": p.max_frame_msgs,
                     "frames_in": p.frames_in,
                     "frames_out": p.frames_out,
+                    "frames_coalesced": p.frames_coalesced,
                     "bytes_in": p.bytes_in,
                     "bytes_out": p.bytes_out,
+                    "raw_bytes_in": p.raw_bytes_in,
+                    "raw_bytes_out": p.raw_bytes_out,
+                    "wire_ratio": (round(p.raw_bytes_out / p.bytes_out, 4)
+                                   if p.bytes_out else None),
+                    "dict": p.send_dict is not None,
                     "subscriptions": len(p.subs),
                     "inflight": sum(len(s.inflight) for s in p.subs.values()),
                 }
@@ -633,15 +871,31 @@ class RemoteBus:
     ``hb_timeout`` the connection is declared dead: pending RPCs fail,
     every subscription closes (consumers unblock — the server reaps the
     member and re-homes its share), and the next RPC attempts a fresh
-    connection (counted in ``reconnects``).  Subscriptions do NOT silently
-    re-subscribe across a reconnect: membership is explicit, a new
-    subscription is a new ring identity.
+    connection (counted in ``reconnects``).  By default subscriptions do
+    NOT silently re-subscribe across a reconnect: membership is explicit, a
+    new subscription is a new ring identity.  ``resubscribe=True`` opts in:
+    subscriptions stay open across a drop, the heartbeat thread reconnects
+    proactively, and on success the client replays its subscription set —
+    each re-join walks the normal ring-join path under the same stable
+    ``name`` (live, not replaying; messages in flight during the outage
+    were re-homed to survivors or redelivered — at-least-once, exactly like
+    any other peer crash).
+
+    The hello handshake negotiates the wire fast path (PROTO_VERSION 2):
+    the client advertises its codecs (``codecs=`` narrows them — a
+    zlib-only process advertises ``["zlib"]`` and a zstd host negotiates
+    down) and its coalescing appetite; both directions then train a
+    per-connection zstd dictionary on early frames and announce it with a
+    ``dict`` frame before using it.
     """
 
     def __init__(self, address, *, peer: str = "",
                  connect_timeout: float = 5.0, rpc_timeout: float = 10.0,
                  hb_interval: float = 1.0, hb_timeout: float = 6.0,
-                 compress_level: int = 1):
+                 compress_level: int = 1, resubscribe: bool = False,
+                 codecs: list[str] | None = None,
+                 max_frame_msgs: int = DEFAULT_MAX_FRAME_MSGS,
+                 dict_train_frames: int = DICT_TRAIN_FRAMES):
         if isinstance(address, str):
             host, _, port = address.rpartition(":")
             address = (host or "127.0.0.1", int(port))
@@ -652,20 +906,36 @@ class RemoteBus:
         self._hb_interval = hb_interval
         self._hb_timeout = hb_timeout
         self._level = compress_level
+        self._resubscribe = resubscribe
+        self._codecs = list(codecs) if codecs is not None \
+            else available_codecs()
+        self._max_frame_msgs = max(1, max_frame_msgs)
+        self._dict_train_frames = max(0, dict_train_frames)
         self._lock = threading.RLock()       # connection state
+        self._conn_lock = threading.RLock()  # serializes (re)connects
         self._send_lock = threading.Lock()
         self._sock: socket.socket | None = None
         self._rids = itertools.count()
         self._sids = itertools.count()
         self._waiters: dict[int, tuple[threading.Event, list]] = {}
         self._subs: dict[int, RemoteSubscription] = {}
+        self._sub_meta: dict[int, dict] = {}  # subscribe args, for re-joins
         self._closed = False
         self._last_frame = 0.0
+        # negotiated wire state (per connection; reset by _connect)
+        self._proto = 1
+        self._codec: str | None = "zlib"   # hello is universally readable
+        self._send_dict: bytes | None = None
+        self._recv_dict: bytes | None = None
+        self._dict_samples: list[bytes] | None = None
         # federated metrics (the client half of docs/metrics.md "transport")
         self.frames_in = 0
         self.frames_out = 0
         self.bytes_in = 0
         self.bytes_out = 0
+        self.raw_bytes_in = 0
+        self.raw_bytes_out = 0
+        self.frames_coalesced = 0
         self.reconnects = 0
         self.subjects_cache: list[str] = []
         self._connect(initial=True)
@@ -682,38 +952,98 @@ class RemoteBus:
 
     def _connect(self, *, initial: bool = False) -> None:
         """(Re)establish the connection, with exponential backoff up to
-        ``connect_timeout`` total."""
-        deadline = time.monotonic() + self._connect_timeout
-        backoff = 0.05
-        last_err: Exception | None = None
-        while time.monotonic() < deadline and not self._closed:
-            try:
-                sock = socket.create_connection(
-                    self.address, timeout=max(0.2, deadline - time.monotonic()))
-                sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-                sock.settimeout(None)
-                with self._lock:
-                    self._sock = sock
-                    if not initial:
-                        self.reconnects += 1
-                    self._last_frame = time.monotonic()
-                threading.Thread(target=self._read_loop, args=(sock,),
-                                 name=f"remotebus-read-{self.peer}",
-                                 daemon=True).start()
-                hello = self._rpc("hello", peer=self.peer,
-                                  proto=PROTO_VERSION)
-                self.subjects_cache = list(hello.get("subjects", []))
-                return
-            except (OSError, TransportError) as e:
-                last_err = e
-                with self._lock:
-                    self._sock = None
-                time.sleep(backoff)
-                backoff = min(backoff * 2, 1.0)
-        raise TransportError(
-            f"could not connect to bus server at "
-            f"{self.address[0]}:{self.address[1]} within "
-            f"{self._connect_timeout}s: {last_err}")
+        ``connect_timeout`` total.  Serialized under ``_conn_lock`` so a
+        heartbeat-driven reconnect and an RPC-driven one cannot race two
+        sockets into place.  On a v2 server the hello negotiates codec and
+        coalescing; on success with ``resubscribe`` the kept subscription
+        set re-joins."""
+        with self._conn_lock:
+            if self.connected():
+                return  # another thread won the reconnect race
+            deadline = time.monotonic() + self._connect_timeout
+            backoff = 0.05
+            last_err: Exception | None = None
+            while time.monotonic() < deadline and not self._closed:
+                try:
+                    sock = socket.create_connection(
+                        self.address,
+                        timeout=max(0.2, deadline - time.monotonic()))
+                    sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+                    sock.settimeout(None)
+                    with self._lock:
+                        self._sock = sock
+                        if not initial:
+                            self.reconnects += 1
+                        self._last_frame = time.monotonic()
+                        # per-connection wire state: the hello itself must be
+                        # readable by ANY server, so zlib until negotiated
+                        self._proto = 1
+                        self._codec = "zlib"
+                        self._send_dict = None
+                        self._recv_dict = None
+                        self._dict_samples = None
+                    threading.Thread(target=self._read_loop, args=(sock,),
+                                     name=f"remotebus-read-{self.peer}",
+                                     daemon=True).start()
+                    hello = self._rpc("hello", peer=self.peer,
+                                      proto=PROTO_VERSION,
+                                      codecs=self._codecs,
+                                      max_frame_msgs=self._max_frame_msgs)
+                    self.subjects_cache = list(hello.get("subjects", []))
+                    with self._lock:
+                        self._proto = int(hello.get("proto", 1))
+                        # a v1 server names no codec: stay on zlib, which
+                        # every reader dispatches by tag anyway
+                        self._codec = str(hello.get("codec") or "zlib")
+                        if (self._codec == "zstd"
+                                and self._dict_train_frames > 0):
+                            self._dict_samples = []
+                    if not initial and self._resubscribe:
+                        self._restore_subscriptions()
+                    return
+                except (OSError, TransportError) as e:
+                    last_err = e
+                    with self._lock:
+                        self._sock = None
+                    time.sleep(backoff)
+                    backoff = min(backoff * 2, 1.0)
+            raise TransportError(
+                f"could not connect to bus server at "
+                f"{self.address[0]}:{self.address[1]} within "
+                f"{self._connect_timeout}s: {last_err}")
+
+    def _restore_subscriptions(self) -> None:
+        """Re-issue every kept subscription after a reconnect (the
+        ``resubscribe=True`` path) — each re-join is an ordinary ring join
+        under the same stable name.  The server may not have reaped our old
+        proxy yet (keyed groups refuse duplicate ring names), so a refused
+        join retries until roughly ``rpc_timeout``; a subscription that
+        still cannot re-join closes locally rather than lying about
+        membership."""
+        with self._lock:
+            metas = [(sid, dict(meta)) for sid, meta in self._sub_meta.items()
+                     if sid in self._subs]
+        for sid, meta in sorted(metas):
+            deadline = time.monotonic() + self._rpc_timeout
+            while True:
+                try:
+                    self._rpc("subscribe", _noconnect=True, sid=sid, **meta)
+                    break
+                except TransportError:
+                    # connection died again mid-restore — the next
+                    # reconnect restarts the whole restore
+                    return
+                except BusError as e:
+                    if time.monotonic() >= deadline:
+                        _dbg(f"client {self.peer}: resubscribe sid={sid} "
+                             f"failed: {e!r}")
+                        with self._lock:
+                            sub = self._subs.pop(sid, None)
+                            self._sub_meta.pop(sid, None)
+                        if sub is not None:
+                            sub._close_local()
+                        break
+                    time.sleep(0.1)
 
     def _drop_connection(self, reason: str) -> None:
         _dbg(f"client {self.peer}: dropping connection: {reason}")
@@ -721,8 +1051,15 @@ class RemoteBus:
             sock, self._sock = self._sock, None
             waiters = list(self._waiters.values())
             self._waiters.clear()
-            subs = list(self._subs.values())
-            self._subs.clear()
+            if self._resubscribe and not self._closed:
+                # keep subscriptions open across the outage: consumers stay
+                # blocked on their local queues and resume after the
+                # reconnect re-joins them
+                subs = []
+            else:
+                subs = list(self._subs.values())
+                self._subs.clear()
+                self._sub_meta.clear()
         if sock is not None:
             # shutdown() before close(): the reader thread still holds the
             # fd, so a bare close() would neither send FIN to the server nor
@@ -744,12 +1081,14 @@ class RemoteBus:
     def _read_loop(self, sock: socket.socket) -> None:
         try:
             while True:
-                frame, nbytes = read_frame(sock)
+                frame, nbytes, raw_n = read_frame(
+                    sock, dictionary=lambda: self._recv_dict)
                 with self._lock:
                     if self._sock is not sock:
                         return  # superseded by a reconnect
                     self.frames_in += 1
                     self.bytes_in += nbytes
+                    self.raw_bytes_in += raw_n
                     self._last_frame = time.monotonic()
                 self._handle_frame(frame)
         except (ConnectionError, OSError, TransportError,
@@ -778,9 +1117,23 @@ class RemoteBus:
                 # arrived after a local unsubscribe raced the pump — the
                 # server redelivers it when the unsubscribe lands
                 pass
+        elif op == "msgs":
+            # coalesced delivery frame (v2): many (sid, message) records
+            records = frame.get("ms") or []
+            if len(records) > 1:
+                with self._lock:
+                    self.frames_coalesced += 1
+            for sid, enc in records:
+                sub = self._subs.get(sid)
+                if sub is not None:
+                    sub._deliver(decode_message(enc))
+        elif op == "dict":
+            # the server trained a dictionary for ITS send direction
+            self._recv_dict = bytes(frame["data"])
         elif op == "sub_closed":
             sub = self._subs.pop(frame["sid"], None)
             if sub is not None:
+                self._sub_meta.pop(frame["sid"], None)
                 sub._close_local()
         # pongs need no handling beyond the last_frame stamp above
 
@@ -795,6 +1148,14 @@ class RemoteBus:
                          time.monotonic() - self._last_frame
                          > self._hb_timeout)
             if sock is None:
+                if self._resubscribe and not self._closed:
+                    # proactive reconnect: with kept subscriptions there may
+                    # be no RPC traffic to trigger one, so the heartbeat
+                    # thread owns re-establishing the link
+                    try:
+                        self._connect()
+                    except TransportError:
+                        pass  # backoff exhausted — retry next heartbeat
                 continue
             if stale:
                 self._drop_connection("heartbeat timeout")
@@ -805,12 +1166,15 @@ class RemoteBus:
                 pass  # _send_frame already dropped the connection
 
     # -- frame / rpc plumbing -------------------------------------------------
-    def _send_frame(self, frame: dict) -> None:
-        data = pack_frame(frame, level=self._level)
+    def _send_frame(self, frame: dict, *, plain: bool = False) -> None:
         with self._lock:
             sock = self._sock
+            codec = self._codec
+            send_dict = None if plain else self._send_dict
         if sock is None:
             raise TransportError("not connected")
+        data, raw = _encode_frame(frame, level=self._level, codec=codec,
+                                  dictionary=send_dict)
         try:
             with self._send_lock:
                 sock.sendall(data)
@@ -820,14 +1184,46 @@ class RemoteBus:
         with self._lock:
             self.frames_out += 1
             self.bytes_out += len(data)
+            self.raw_bytes_out += len(raw)
+        if not plain:
+            self._maybe_train(raw)
 
-    def _rpc(self, op: str, *, _timeout: float | None = None, **kw) -> dict:
+    def _maybe_train(self, raw: bytes) -> None:
+        """Sample raw (pre-compression) frame bytes for this client's send
+        direction; at the threshold, train, announce the dictionary in a
+        plain frame, and only THEN start using it — ``_send_lock``
+        serializes the wire, so no ``DXZ2`` frame can precede its
+        announcement."""
+        with self._lock:
+            samples = self._dict_samples
+            if samples is None:
+                return
+            samples.append(raw)
+            if len(samples) < self._dict_train_frames:
+                return
+            self._dict_samples = None  # one-shot: train exactly once
+        d = train_dictionary(samples)
+        if d is None:
+            return  # degenerate sample set — keep sending plain blobs
+        try:
+            self._send_frame({"op": "dict", "data": d}, plain=True)
+        except TransportError:
+            return  # connection died; next connection retrains from scratch
+        with self._lock:
+            self._send_dict = d
+
+    def _rpc(self, op: str, *, _timeout: float | None = None,
+             _noconnect: bool = False, **kw) -> dict:
         """Send a request frame and wait for its correlated reply; maps
         server-side bus errors back to their exception types.  Attempts one
-        reconnect (with backoff) when the connection is down."""
+        reconnect (with backoff) when the connection is down, unless
+        ``_noconnect`` (used inside the restore path, where a nested
+        reconnect would re-enter the restore and double-subscribe)."""
         if self._closed:
             raise TransportError("RemoteBus is closed")
         if not self.connected() and op != "hello":
+            if _noconnect:
+                raise TransportError("not connected")
             self._connect()
         rid = next(self._rids)
         event, slot = threading.Event(), []
@@ -891,6 +1287,7 @@ class RemoteBus:
         compatibility and ignored: everything here crosses the wire by
         construction.  ``auto_ack=False`` defers acknowledgement to
         :meth:`RemoteSubscription.ack` for exactly-once consumers."""
+        steal = bool(getattr(policy, "steal", False))
         group, key, partitions = resolve_policy(policy, group, key,
                                                 partitions)
         replay_from = resolve_replay(replay, replay_from)
@@ -904,11 +1301,20 @@ class RemoteBus:
         try:
             self._rpc("subscribe", sid=sid, subject=subject, token=token,
                       maxsize=maxsize, name=sub.name, group=group, key=key,
-                      partitions=partitions, replay_from=replay_from)
+                      partitions=partitions, replay_from=replay_from,
+                      steal=steal)
         except Exception:
             with self._lock:
                 self._subs.pop(sid, None)
             raise
+        with self._lock:
+            # the re-join after a reconnect is always LIVE (replay_from=None):
+            # the server requeues whatever our dead proxy held, and a keyed
+            # replay would double-deliver everything the old proxy acked
+            self._sub_meta[sid] = dict(
+                subject=subject, token=token, maxsize=maxsize,
+                name=sub.name, group=group, key=key, partitions=partitions,
+                replay_from=None, steal=steal)
         return sub
 
     def unsubscribe(self, sub: RemoteSubscription) -> None:
@@ -916,6 +1322,7 @@ class RemoteBus:
         departs the proxy (group backlog re-homes to survivors)."""
         with self._lock:
             self._subs.pop(sub.sid, None)
+            self._sub_meta.pop(sub.sid, None)
         try:
             self._rpc("unsubscribe", sid=sub.sid)
         except TransportError:
@@ -934,6 +1341,36 @@ class RemoteBus:
             hdrs["offset"] = reply["offset"]
         return Message(subject=subject, payload=payload, seq=reply["seq"],
                        headers=hdrs)
+
+    def publish_many(self, subject: str, payloads, *, token: str,
+                     headers: dict | None = None) -> list[Message]:
+        """Publish a batch through ONE ``pubs`` round trip (v2 servers) —
+        the batched twin of :meth:`publish`, amortizing the per-RPC wire
+        overhead the same way coalesced delivery frames do.  The batch is
+        sequential, not atomic: on an error mid-batch the already-published
+        prefix stays published (the raised error carries no partial result;
+        use distinct payload markers if you need to probe).  Against a v1
+        server this degrades to per-message :meth:`publish` calls."""
+        payloads = list(payloads)
+        if not payloads:
+            return []
+        with self._lock:
+            proto = self._proto
+        if proto < 2:
+            return [self.publish(subject, p, token=token, headers=headers)
+                    for p in payloads]
+        reply = self._rpc("pubs", subject=subject, payloads=payloads,
+                          token=token, headers=headers)
+        seqs = reply.get("seqs") or []
+        offsets = reply.get("offsets") or [None] * len(seqs)
+        out: list[Message] = []
+        for payload, seq, off in zip(payloads, seqs, offsets):
+            hdrs = dict(headers or {})
+            if off is not None:
+                hdrs["offset"] = off
+            out.append(Message(subject=subject, payload=payload, seq=seq,
+                               headers=hdrs))
+        return out
 
     def note_lost(self, subject: str, n: int = 1) -> None:
         """Forward poison-message loss accounting to the remote subject."""
@@ -975,11 +1412,20 @@ class RemoteBus:
             return {
                 "peer": f"{self.address[0]}:{self.address[1]}",
                 "connected": self._sock is not None and not self._closed,
+                "proto": self._proto,
+                "codec": self._codec,
                 "frames_in": self.frames_in,
                 "frames_out": self.frames_out,
+                "frames_coalesced": self.frames_coalesced,
                 "bytes_in": self.bytes_in,
                 "bytes_out": self.bytes_out,
+                "raw_bytes_in": self.raw_bytes_in,
+                "raw_bytes_out": self.raw_bytes_out,
+                "wire_ratio": (round(self.raw_bytes_out / self.bytes_out, 4)
+                               if self.bytes_out else None),
+                "dict": self._send_dict is not None,
                 "reconnects": self.reconnects,
+                "resubscribe": self._resubscribe,
                 "subscriptions": len(self._subs),
             }
 
@@ -999,7 +1445,9 @@ class RemoteBus:
 
 
 __all__ = [
-    "PROTO_VERSION", "MAX_FRAME_BYTES", "DEFAULT_WINDOW",
+    "PROTO_VERSION", "SUPPORTED_PROTOS", "MAX_FRAME_BYTES",
+    "DEFAULT_WINDOW", "DEFAULT_MAX_FRAME_MSGS", "MAX_COALESCED_BYTES",
+    "DICT_TRAIN_FRAMES",
     "BusServer", "RemoteBus", "RemoteSubscription", "TransportError",
     "pack_frame", "read_frame", "unpack_frame",
 ]

@@ -110,3 +110,43 @@ def test_policy_unit():
     assert scaler.decide("s", [H(50)], 1, 8) == 2          # overload -> x2
     assert scaler.decide("s2", [H(0, 99), H(0, 99)], 1, 8) == 1  # idle -> -1
     assert scaler.decide("s3", [H(5)], 1, 8) == 1          # steady
+
+
+def test_sustained_stealing_is_a_straggler_signal():
+    scaler = AutoScaler(ScalePolicy(backlog_high=100, backlog_low=0,
+                                    idle_s=1e9, cooldown_s=0.0,
+                                    steal_streak=3))
+
+    class FakeSidecar:
+        def __init__(self):
+            self.stolen = 0
+
+        def metrics(self):
+            return {"instance": f"fake-{id(self):x}", "backlog": 0,
+                    "idle_s": 0.0, "received": 0, "dropped": 0,
+                    "published": 0, "processed": 0, "errors": 0,
+                    "latency_ewma_s": 0, "uptime_s": 1,
+                    "groups": {"events": {"stolen": self.stolen}}}
+
+    class H:
+        def __init__(self, sc):
+            self.sidecar = sc
+
+    sides = [FakeSidecar(), FakeSidecar()]
+    handles = [H(s) for s in sides]
+    # the stolen counter must RISE across steal_streak consecutive
+    # decisions before the pool grows — a burst of theft that settles is
+    # rebalancing doing its job, not a straggler
+    for stolen in (10, 20):
+        for s in sides:
+            s.stolen = stolen
+        assert scaler.decide("st", handles, 1, 8) == 2   # streak building
+    for s in sides:
+        s.stolen = 30
+    assert scaler.decide("st", handles, 1, 8) == 3       # structural -> +1
+    # the scale-up reset the streak; flat counters keep the pool steady
+    assert scaler.decide("st", handles, 1, 8) == 2
+    # counter flat for a while, then one blip: no scale-up either
+    for s in sides:
+        s.stolen = 31
+    assert scaler.decide("st", handles, 1, 8) == 2

@@ -248,6 +248,38 @@ def test_autotune_caps_at_max(jit_always):
     assert proc.current_max_batch() == cap
 
 
+def test_autotune_halves_after_sustained_over_budget(jit_always, monkeypatch):
+    # a zero budget makes every burst a latency breach: after
+    # AUTOTUNE_DOWN_STREAK of them the ceiling halves, and it keeps
+    # halving down to the floor of 1 — never below
+    monkeypatch.setattr(fusion, "AUTOTUNE_BUDGET_S", 0.0)
+    proc = _fused_process(max_batch=None)
+    start = proc.current_max_batch()
+    full = _payloads(start)
+    for _ in range(fusion.AUTOTUNE_DOWN_STREAK):
+        proc.process_batch("s", full)
+    assert proc.current_max_batch() == start // 2
+    assert proc.stats["max_batch_current"] == start // 2
+    for _ in range(20 * fusion.AUTOTUNE_DOWN_STREAK):
+        proc.process_batch("s", full)
+    assert proc.current_max_batch() == 1
+
+
+def test_autotune_isolated_slow_burst_does_not_shrink(jit_always,
+                                                      monkeypatch):
+    proc = _fused_process(max_batch=None)
+    start = proc.current_max_batch()
+    full = _payloads(start)
+    # one over-budget burst, then healthy ones: the slow streak resets, so
+    # the ceiling never shrinks (and the breach also reset the GROW streak)
+    monkeypatch.setattr(fusion, "AUTOTUNE_BUDGET_S", 0.0)
+    proc.process_batch("s", full)
+    monkeypatch.setattr(fusion, "AUTOTUNE_BUDGET_S", 1e9)
+    for _ in range(fusion.AUTOTUNE_DOWN_STREAK):
+        proc.process_batch("s", full)
+    assert proc.current_max_batch() >= start
+
+
 def test_declared_max_batch_disables_autotune(jit_always):
     proc = _fused_process(max_batch=8)
     assert not hasattr(proc, "current_max_batch")

@@ -99,7 +99,7 @@ class TestHandshake:
         try:
             sock = socket.create_connection(server.address, timeout=5)
             sock.sendall(pack_frame({"op": "hello", "rid": 0, "proto": 99}))
-            reply, _ = read_frame(sock)
+            reply, _, _ = read_frame(sock)
             assert reply["ok"] is False
             assert reply["kind"] == "TransportError"
             sock.close()

@@ -1,0 +1,497 @@
+"""Wire fast path (PR 9): coalesced frames, codec negotiation, stealing.
+
+Frame-codec round-trips pin the v2 envelope (``hello``/``msgs``/``pubs``/
+``dict``) on the zlib leg — the encoding every peer can read — with the
+zstd + dictionary (``DXZ2``) leg skip-guarded on ``zstandard`` being
+installed.  Negotiation tests cover the full matrix the ISSUE names: a v2
+client against a v2 server, a zlib-only client negotiating DOWN, a raw
+v1-framing socket that never says hello, and a ``proto=1`` hello.  The
+liveness half regression-tests ``resubscribe=True`` across a reconnect
+storm, and the stealing half drives the bus-level pull path (plain +
+keyed partition-granular) that the transport ``steal=`` flag switches on.
+"""
+from __future__ import annotations
+
+import socket
+import time
+
+import pytest
+
+from repro.core import FieldSpec, MessageBus, StreamSchema
+from repro.core.compression import available_codecs, train_dictionary
+from repro.core.delivery import Group, Keyed
+from repro.core.transport import (DEFAULT_MAX_FRAME_MSGS, PROTO_VERSION,
+                                  SUPPORTED_PROTOS, BusServer, RemoteBus,
+                                  _encode_frame, pack_frame, read_frame,
+                                  unpack_frame)
+
+SCHEMA = StreamSchema.of(k=FieldSpec("str"), i=FieldSpec("int"))
+
+
+def _served_bus(**server_kw):
+    bus = MessageBus()
+    bus.register_subject("t", SCHEMA)
+    server = BusServer(bus, **server_kw)
+    tok = bus.issue_token("pub", ["t"])
+    return bus, server, tok
+
+
+def _drain(sub, n, timeout=5.0):
+    got, deadline = [], time.monotonic() + timeout
+    while len(got) < n and time.monotonic() < deadline:
+        got.extend(sub.next_batch(n - len(got), timeout=0.1))
+    return got
+
+
+def _probe_until_delivery(bus, tok, sub, timeout=10.0):
+    """Publish probes until one arrives at ``sub`` — the only reliable way
+    to detect a finished re-join: membership on a fire-and-forget subject
+    has a no-member window after a drop, and probes published into it are
+    dropped by design (exactly like any crashed worker's backlog)."""
+    deadline = time.monotonic() + timeout
+    i = 0
+    while time.monotonic() < deadline:
+        bus.publish("t", {"k": "probe", "i": i}, token=tok)
+        i += 1
+        if sub.next_batch(16, timeout=0.2):
+            return
+    raise AssertionError("resubscribed member never received a probe")
+
+
+# ---------------------------------------------------------------------------
+# Frame codecs: v2 envelope round-trips
+# ---------------------------------------------------------------------------
+
+class TestFrameCodecs:
+    V2_FRAMES = [
+        {"op": "hello", "rid": 0, "peer": "w", "proto": 2,
+         "codecs": ["zstd", "zlib"], "max_frame_msgs": 64},
+        {"op": "msgs", "ms": [[3, {"subject": "t", "seq": 7,
+                                   "payload": {"k": "a", "i": 1}}],
+                              [3, {"subject": "t", "seq": 8,
+                                   "payload": {"k": "b", "i": 2}}]]},
+        {"op": "pubs", "rid": 9, "subject": "t", "token": "tok",
+         "payloads": [{"k": "a", "i": 0}, {"k": "a", "i": 1}]},
+        {"op": "dict", "data": b"\x00\x01dictionary-bytes"},
+    ]
+
+    @pytest.mark.parametrize("frame", V2_FRAMES,
+                             ids=[f["op"] for f in V2_FRAMES])
+    def test_v2_frames_roundtrip_on_zlib(self, frame):
+        # zlib is the leg every peer can read (the hello itself rides it)
+        data, raw = _encode_frame(frame, codec="zlib")
+        assert unpack_frame(data[4:]) == frame
+        assert len(raw) > 0  # the wire_ratio denominator is observable
+
+    def test_wire_blob_is_tagged_and_smaller_than_raw_when_redundant(self):
+        frame = {"op": "msgs",
+                 "ms": [[1, {"payload": {"k": "key-xyz", "i": n}}]
+                        for n in range(64)]}
+        data, raw = _encode_frame(frame, codec="zlib")
+        assert len(data) < len(raw)  # redundancy actually compresses
+
+    @pytest.mark.skipif("zstd" not in available_codecs(),
+                        reason="zstandard not installed")
+    def test_zstd_dictionary_roundtrip(self):
+        samples = [b'{"k": "key-%02d", "i": 1}' % n for n in range(64)]
+        d = train_dictionary(samples)
+        assert d
+        frame = {"op": "msgs", "ms": [[1, {"payload": {"k": "key-01"}}]]}
+        data, _ = _encode_frame(frame, codec="zstd", dictionary=d)
+        assert unpack_frame(data[4:], dictionary=d) == frame
+        with pytest.raises(Exception):
+            unpack_frame(data[4:])  # DXZ2 unreadable without the dictionary
+
+
+# ---------------------------------------------------------------------------
+# Hello negotiation: v2, down to zlib, raw v1, proto=1
+# ---------------------------------------------------------------------------
+
+class TestNegotiation:
+    def test_v2_client_negotiates_proto_codec_and_frame_cap(self):
+        bus, server, tok = _served_bus(max_frame_msgs=32)
+        try:
+            rb = RemoteBus(server.address, peer="w", max_frame_msgs=64)
+            stats = rb.transport_stats()
+            assert stats["proto"] == PROTO_VERSION == 2
+            assert stats["codec"] == available_codecs()[0]
+            peer = server.stats()["peers"]["w"]
+            assert peer["proto"] == 2
+            assert peer["codec"] == stats["codec"]
+            assert peer["max_frame_msgs"] == 32  # min(server, client)
+            rb.close()
+        finally:
+            server.close()
+            bus.close()
+
+    def test_zlib_only_client_negotiates_down(self):
+        bus, server, tok = _served_bus()
+        try:
+            rb = RemoteBus(server.address, peer="old", codecs=["zlib"])
+            assert rb.transport_stats()["proto"] == 2
+            assert rb.transport_stats()["codec"] == "zlib"
+            assert server.stats()["peers"]["old"]["codec"] == "zlib"
+            # and the connection actually works end to end
+            sub = rb.subscribe("t", token=rb.issue_token("old", ["t"]),
+                               name="old")
+            rb.publish("t", {"k": "a", "i": 1}, token=tok)
+            got = _drain(sub, 1, timeout=5.0)
+            assert got and got[0].payload["i"] == 1
+            rb.close()
+        finally:
+            server.close()
+            bus.close()
+
+    def test_raw_v1_peer_without_hello_still_served(self):
+        """A pre-PR-9 peer never sends hello: the server must keep treating
+        it as proto 1 — per-message ``msg`` frames, zlib, no dictionary."""
+        bus, server, tok = _served_bus()
+        try:
+            local = bus.subscribe("t", token=tok, name="chk")
+            sock = socket.create_connection(server.address, timeout=5)
+            sock.sendall(pack_frame({"op": "publish", "rid": 1,
+                                     "subject": "t", "token": tok,
+                                     "payload": {"k": "a", "i": 7}}))
+            reply, _, _ = read_frame(sock)
+            assert reply["ok"] is True
+            m = local.next(timeout=5.0)
+            assert m is not None and m.payload["i"] == 7
+            sock.close()
+        finally:
+            server.close()
+            bus.close()
+
+    def test_proto1_hello_accepted_with_v1_reply(self):
+        bus, server, _ = _served_bus()
+        try:
+            sock = socket.create_connection(server.address, timeout=5)
+            sock.sendall(pack_frame({"op": "hello", "rid": 0, "peer": "v1",
+                                     "proto": 1}))
+            reply, _, _ = read_frame(sock)
+            assert reply["ok"] is True
+            assert reply["proto"] == 1
+            assert 1 in SUPPORTED_PROTOS and 2 in SUPPORTED_PROTOS
+            sock.close()
+        finally:
+            server.close()
+            bus.close()
+
+
+# ---------------------------------------------------------------------------
+# Batched publish (pubs) and coalesced delivery (msgs)
+# ---------------------------------------------------------------------------
+
+class TestCoalescing:
+    def test_publish_many_is_ordered_and_acknowledged(self):
+        bus, server, tok = _served_bus()
+        try:
+            rb = RemoteBus(server.address, peer="w")
+            local = bus.subscribe("t", token=tok, name="chk", maxsize=512)
+            msgs = rb.publish_many(
+                "t", [{"k": "a", "i": i} for i in range(100)], token=tok)
+            assert [m.payload["i"] for m in msgs] == list(range(100))
+            seqs = [m.seq for m in msgs]
+            assert seqs == sorted(seqs)
+            got = _drain(local, 100)
+            assert [m.payload["i"] for m in got] == list(range(100))
+            rb.close()
+        finally:
+            server.close()
+            bus.close()
+
+    def test_publish_many_falls_back_per_message_on_v1(self):
+        bus, server, tok = _served_bus()
+        try:
+            rb = RemoteBus(server.address, peer="w")
+            with rb._lock:
+                rb._proto = 1  # as if the server had answered a v1 hello
+            local = bus.subscribe("t", token=tok, name="chk")
+            msgs = rb.publish_many(
+                "t", [{"k": "a", "i": i} for i in range(5)], token=tok)
+            assert [m.payload["i"] for m in msgs] == list(range(5))
+            assert len(_drain(local, 5)) == 5
+            rb.close()
+        finally:
+            server.close()
+            bus.close()
+
+    def test_backlog_drains_in_coalesced_frames(self):
+        bus, server, tok = _served_bus()
+        try:
+            rb = RemoteBus(server.address, peer="w")
+            sub = rb.subscribe("t", token=rb.issue_token("w", ["t"]),
+                               name="w", maxsize=512)
+            rb.publish_many(
+                "t", [{"k": "a", "i": i} for i in range(256)], token=tok)
+            got = _drain(sub, 256)
+            assert [m.payload["i"] for m in got] == list(range(256))
+            stats = rb.transport_stats()
+            assert stats["frames_coalesced"] > 0
+            # far fewer frames than messages: the backlog rode multi-
+            # message frames, not 256 per-message ones
+            assert stats["frames_in"] < 256
+            assert server.stats()["peers"]["w"]["frames_coalesced"] > 0
+            rb.close()
+        finally:
+            server.close()
+            bus.close()
+
+    def test_per_peer_byte_counters_track_wire_and_raw(self):
+        bus, server, tok = _served_bus()
+        try:
+            rb = RemoteBus(server.address, peer="w")
+            rb.publish_many(
+                "t", [{"k": "key-%d" % (i % 4), "i": i} for i in range(64)],
+                token=tok)
+            cs = rb.transport_stats()
+            assert cs["bytes_out"] > 0 and cs["raw_bytes_out"] > 0
+            assert cs["wire_ratio"] == round(
+                cs["raw_bytes_out"] / cs["bytes_out"], 4)
+            ss = server.stats()["peers"]["w"]
+            assert ss["bytes_in"] > 0 and ss["raw_bytes_in"] > 0
+            # the redundant burst must compress: raw strictly above wire
+            assert ss["raw_bytes_in"] > ss["bytes_in"]
+            rb.close()
+        finally:
+            server.close()
+            bus.close()
+
+
+# ---------------------------------------------------------------------------
+# resubscribe=True across a reconnect storm
+# ---------------------------------------------------------------------------
+
+class TestResubscribe:
+    def test_reconnect_storm_restores_membership_and_order(self):
+        bus, server, tok = _served_bus()
+        try:
+            rb = RemoteBus(server.address, peer="stormy", resubscribe=True,
+                           hb_interval=0.1, hb_timeout=2.0)
+            sub = rb.subscribe("t", token=rb.issue_token("stormy", ["t"]),
+                               group="g", name="stable-1")
+            for round_no in range(1, 4):
+                rb._drop_connection(f"storm {round_no}")
+                _probe_until_delivery(bus, tok, sub)
+                assert rb.transport_stats()["reconnects"] == round_no
+                assert not sub.closed  # kept open across every drop
+            # steady state: ordered delivery, exactly one ring identity
+            for i in range(20):
+                bus.publish("t", {"k": "steady", "i": i}, token=tok)
+            got = [m for m in _drain(sub, 20, timeout=10.0)
+                   if m.payload["k"] == "steady"]
+            assert [m.payload["i"] for m in got] == list(range(20))
+            info = bus.group_info("t", "g")
+            assert info["members"] == ["stable-1"]
+            assert rb.transport_stats()["resubscribe"] is True
+            rb.close()
+        finally:
+            server.close()
+            bus.close()
+
+    def test_default_remains_explicit_membership(self):
+        bus, server, tok = _served_bus()
+        try:
+            rb = RemoteBus(server.address, peer="plain")
+            sub = rb.subscribe("t", token=rb.issue_token("plain", ["t"]),
+                               group="g", name="m1")
+            rb._drop_connection("blip")
+            deadline = time.monotonic() + 5.0
+            while not sub.closed and time.monotonic() < deadline:
+                time.sleep(0.05)
+            assert sub.closed  # no silent re-join without resubscribe=True
+            rb.close()
+        finally:
+            server.close()
+            bus.close()
+
+
+# ---------------------------------------------------------------------------
+# Pull-based work stealing on the bus (what transport steal= switches on)
+# ---------------------------------------------------------------------------
+
+class TestStealing:
+    def test_idle_group_member_steals_backlog(self):
+        bus = MessageBus()
+        bus.register_subject("t", SCHEMA)
+        tok = bus.issue_token("pub", ["t"])
+        busy = bus.subscribe("t", token=tok, name="busy",
+                             policy=Group("g", steal=True))
+        idle = bus.subscribe("t", token=tok, name="idle",
+                             policy=Group("g", steal=True))
+        for i in range(40):
+            bus.publish("t", {"k": "a", "i": i}, token=tok)
+        # only the idle member consumes: nearly everything "busy" was dealt
+        # must arrive by stealing — only its mailbox HEAD may stay behind
+        # (the item the victim could already be processing is never moved)
+        got = _drain(idle, 39)
+        assert len(got) >= 39
+        got += idle.next_batch(1, timeout=0.2)  # in case the head moved too
+        leftover = busy.next_batch(40, timeout=0.1)
+        assert len(leftover) <= 1
+        seen = sorted(m.payload["i"] for m in got + leftover)
+        assert seen == list(range(40))
+        info = bus.group_info("t", "g")
+        assert info["steal_enabled"] is True
+        assert info["stolen"] > 0
+        bus.close()
+
+    def test_keyed_steal_moves_whole_partitions_in_order(self):
+        bus = MessageBus()
+        bus.register_subject("t", SCHEMA)
+        tok = bus.issue_token("pub", ["t"])
+        s1 = bus.subscribe("t", token=tok, name="m1",
+                           policy=Keyed("kg", "k", steal=True))
+        s2 = bus.subscribe("t", token=tok, name="m2",
+                           policy=Keyed("kg", "k", steal=True))
+        per_key: dict[str, int] = {}
+        for i in range(120):
+            k = f"key-{i % 8}"
+            bus.publish("t", {"k": k, "i": per_key.get(k, 0)}, token=tok)
+            per_key[k] = per_key.get(k, 0) + 1
+        # m1 never consumes: its partitions' backlogs move to m2 WHOLE
+        got = _drain(s2, 120)
+        assert len(got) == 120
+        last: dict[str, int] = {}
+        for m in got:
+            assert m.payload["i"] == last.get(m.payload["k"], -1) + 1
+            last[m.payload["k"]] = m.payload["i"]
+        info = bus.group_info("t", "kg")
+        assert info["stolen"] > 0
+        assert info["stolen_partitions"]  # ownership overrides recorded
+        assert set(info["stolen_partitions"].values()) == {"m2"}
+        bus.close()
+
+    def test_stealing_is_off_by_default_and_switchable(self):
+        bus = MessageBus()
+        bus.register_subject("t", SCHEMA)
+        tok = bus.issue_token("pub", ["t"])
+        s1 = bus.subscribe("t", token=tok, group="g", name="m1")
+        s2 = bus.subscribe("t", token=tok, group="g", name="m2")
+        for i in range(20):
+            bus.publish("t", {"k": "a", "i": i}, token=tok)
+        got = _drain(s2, 20, timeout=1.0)
+        assert len(got) < 20  # m1's share stays pinned: no stealing
+        assert bus.group_info("t", "g")["stolen"] == 0
+        assert bus.enable_stealing("t", "g") is True
+        got += _drain(s2, 19 - len(got))
+        got += s1.next_batch(20, timeout=0.1)  # at most m1's retained head
+        assert sorted(m.payload["i"] for m in got) == list(range(20))
+        assert bus.group_info("t", "g")["stolen"] > 0
+        assert bus.enable_stealing("t", "nope") is False
+        bus.close()
+
+    def test_steal_flag_propagates_over_the_wire(self):
+        bus, server, tok = _served_bus()
+        try:
+            rb = RemoteBus(server.address, peer="w")
+            wtok = rb.issue_token("w", ["t"])
+            subs = [rb.subscribe("t", token=wtok, name=f"m{i}",
+                                 policy=Group("g", steal=True))
+                    for i in range(2)]
+            info = bus.group_info("t", "g")
+            assert info["steal_enabled"] is True
+            rb.close()
+        finally:
+            server.close()
+            bus.close()
+
+
+# ---------------------------------------------------------------------------
+# Property: coalesced frames x steals x mid-run kill keep per-key order
+# ---------------------------------------------------------------------------
+
+def _wire_kill_case(n_keys: int, per_key: int, max_frame_msgs: int,
+                    kill_after: int, steal: bool) -> None:
+    """One exactly-once scenario: two keyed remote consumers under a given
+    coalescing cap (and optionally stealing), the first one dropped without
+    a goodbye after ``kill_after`` effect-then-acknowledged messages.  The
+    union of both record streams must equal the published set exactly once,
+    with every key's ``i`` strictly increasing within each member's stream
+    — whatever interleaving of multi-message frames, partition steals, and
+    the re-home the draw produced."""
+    bus = MessageBus(default_queue_size=4096)
+    bus.register_subject("p", SCHEMA)
+    server = BusServer(bus, max_frame_msgs=max_frame_msgs, hb_timeout=8.0)
+    tok = bus.issue_token("pub", ["p"])
+    rb1 = rb2 = None
+    try:
+        rb1 = RemoteBus(server.address, peer="p1")
+        rb2 = RemoteBus(server.address, peer="p2")
+        s1 = rb1.subscribe("p", token=rb1.issue_token("p1", ["p"]),
+                           name="v1", policy=Keyed("pg", "k", steal=steal),
+                           auto_ack=False)
+        s2 = rb2.subscribe("p", token=rb2.issue_token("p2", ["p"]),
+                           name="v2", policy=Keyed("pg", "k", steal=steal),
+                           auto_ack=False)
+        published: set[tuple[str, int]] = set()
+        for n in range(n_keys * per_key):
+            k = f"key-{n % n_keys}"
+            i = n // n_keys
+            bus.publish("p", {"k": k, "i": i}, token=tok)
+            published.add((k, i))
+        rec1: list[tuple[str, int]] = []
+        rec2: list[tuple[str, int]] = []
+
+        def pump(sub, rec, cap):
+            msgs = sub.next_batch(cap, timeout=0.2)
+            rec += [(m.payload["k"], m.payload["i"]) for m in msgs]
+            sub.ack(len(msgs))  # effect recorded -> acknowledge
+            return len(msgs)
+
+        # phase 1: both consume; the victim stops at its kill point (or
+        # when the survivor already drained everything — the ring may have
+        # dealt the victim nothing)
+        deadline = time.monotonic() + 20.0
+        while time.monotonic() < deadline:
+            pump(s1, rec1, min(8, max(1, kill_after - len(rec1))))
+            pump(s2, rec2, 8)
+            if len(rec1) >= kill_after or set(rec1) | set(rec2) >= published:
+                break
+        rb1._drop_connection("property kill")  # crash: no goodbye, no ack
+        # phase 2: the survivor must end up with every remaining message
+        while set(rec1) | set(rec2) < published \
+                and time.monotonic() < deadline:
+            pump(s2, rec2, 64)
+        union = rec1 + rec2
+        assert set(union) == published, "lost messages across the kill"
+        assert len(union) == len(set(union)), "double delivery"
+        for rec in (rec1, rec2):
+            last: dict[str, int] = {}
+            for k, i in rec:
+                assert i > last.get(k, -1), \
+                    f"per-key order break: {k} saw {i} after {last[k]}"
+                last[k] = i
+    finally:
+        if rb1 is not None:
+            rb1.close()
+        if rb2 is not None:
+            rb2.close()
+        server.close()
+        bus.close()
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=8, deadline=None)
+    @given(n_keys=st.integers(min_value=1, max_value=6),
+           per_key=st.integers(min_value=2, max_value=20),
+           max_frame_msgs=st.sampled_from([1, 2, 64]),
+           kill_after=st.integers(min_value=1, max_value=20),
+           steal=st.booleans())
+    def test_kill_under_coalescing_keeps_per_key_order(
+            n_keys, per_key, max_frame_msgs, kill_after, steal):
+        _wire_kill_case(n_keys, per_key, max_frame_msgs, kill_after, steal)
+except ImportError:
+    # minimal-deps leg: a fixed seed corpus covering the same axes —
+    # per-message framing, deep coalescing, stealing on and off
+    _SEED_CASES = [
+        (4, 10, 64, 5, False),
+        (3, 12, 1, 7, True),
+        (6, 8, 64, 3, True),
+    ]
+
+    @pytest.mark.parametrize("case", _SEED_CASES,
+                             ids=["coalesced", "permsg-steal", "steal"])
+    def test_kill_under_coalescing_keeps_per_key_order(case):
+        _wire_kill_case(*case)
