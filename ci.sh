@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
-# CI entrypoint: deps + tier-1 tests + headless runs of the shipped examples
-# + benchmark artifacts with the per-claim regression gates (fusion, grouped
-# and keyed scaling, cross-process transport, durable overhead) + the docs
+# CI entrypoint: deps + tier-1 tests + `datax check` over the shipped
+# examples + headless runs of the examples + benchmark artifacts with the
+# per-claim regression gates (fusion, grouped and keyed scaling,
+# cross-process transport, durable overhead) + the docs
 # link/fence check.  Runs on two matrix
 # legs (.github/workflows/ci.yml): full deps, and minimal deps via
 # CI_SKIP_INSTALL=1 (no jax/zstandard/hypothesis) to exercise every
@@ -22,6 +23,15 @@ fi
 echo "== tier-1 tests =="
 python -m pytest -x -q
 
+echo "== datax check (static dataflow analysis) =="
+# every shipped example must be free of error-severity diagnostics (the CLI
+# exits 1 on any surviving error; vetted exceptions use
+# `# datax: ignore[DXnnn] reason` pragmas) — both matrix legs
+python tools/datax_check.py examples/quickstart.py
+python tools/datax_check.py examples/fever_screening.py
+python tools/datax_check.py examples/stream_reuse.py
+python tools/datax_check.py examples/replay_corpus.py
+
 echo "== examples (headless) =="
 python examples/quickstart.py
 python examples/fever_screening.py
@@ -30,6 +40,8 @@ python examples/replay_corpus.py
 # the LM examples (now v2 fluent-DSL apps) need jax — full-deps leg only
 if python -c "import jax" 2>/dev/null; then
     echo "== examples (headless, jax) =="
+    python tools/datax_check.py examples/serve_lm.py
+    python tools/datax_check.py examples/train_lm.py
     python examples/serve_lm.py --requests 6 --slots 3
     python examples/train_lm.py --steps 4 --batch 4 --seq 64 \
         --workdir "$(mktemp -d)"

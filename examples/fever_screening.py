@@ -94,7 +94,9 @@ def gate(ctx):
     return process
 
 
-def main() -> None:
+def build_app() -> App:
+    """Wire the paper's Fig. 3 topology and return the app — also the
+    entry point ``datax check`` discovers."""
     app.database("track-db", tables={"tracks": ["first_seen"]})
     thermal = app.sense("thermal", camera, seed=1, gain=1.1)
     rgb = app.sense("rgb", camera, seed=2)
@@ -105,7 +107,11 @@ def main() -> None:
                               fixed_instances=1)
     verdicts = fused.via(screening, name="screenings")
     verdicts >> app.gadget("entry-gate", gate)
+    return app
 
+
+def main() -> None:
+    build_app()
     with connect() as op:
         app.deploy(op)
         print(f"deployed: {app.loc_footprint()} entities; streams:",

@@ -57,10 +57,17 @@ def alarm(ctx, threshold=4.0):              # actuator: controls the gadget
     return process
 
 
-def main() -> None:
+def build_app() -> App:
+    """Wire the topology (sensor -> anomaly AU -> siren gadget) and return
+    the app — also the entry point ``datax check`` discovers."""
     scores = app.sense("lab-temp", thermometer, n=200).via(anomaly,
                                                            name="anomalies")
     scores >> app.gadget("siren", alarm)
+    return app
+
+
+def main() -> None:
+    build_app()
     with connect() as op:
         app.deploy(op)
         time.sleep(3)

@@ -94,6 +94,18 @@ def lm_engine(dx):
                          "ttft_ms": (req.first_token_at - req.arrived) * 1e3})
 
 
+def build_app(requests=12, slots=4, max_new=16) -> App:
+    """Wire the serving topology (request driver -> session-keyed engine ->
+    tapped responses) and return the app — also the entry point
+    ``datax check`` discovers."""
+    reqs = app.sense("requests", request_gen, requests=requests)
+    responses = (reqs.key_by("session")
+                 .via(lm_engine, name="responses", slots=slots,
+                      max_new=max_new, fixed_instances=1))
+    responses.tap()   # promised to external consumers (§3 reuse)
+    return app
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=12)
@@ -101,11 +113,8 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=16)
     args = ap.parse_args()
 
-    requests = app.sense("requests", request_gen, requests=args.requests)
-    responses = (requests.key_by("session")
-                 .via(lm_engine, name="responses", slots=args.slots,
-                      max_new=args.max_new, fixed_instances=1))
-    responses.tap()   # promised to external consumers (§3 reuse)
+    build_app(requests=args.requests, slots=args.slots,
+              max_new=args.max_new)
 
     t0 = time.perf_counter()
     with connect() as op:

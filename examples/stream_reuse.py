@@ -59,8 +59,10 @@ def dashboard_app() -> App:
             return {"frame_id": p["frame_id"], "n_people": total["n"]}
         return process
 
+    # .tap() promises `occupancy` to external subscribers (the dashboard's
+    # op.subscribe below) — without it, datax check flags a dead stream
     app.external("detections", FRAME).via(people_counter, name="occupancy",
-                                          fixed_instances=1)
+                                          fixed_instances=1).tap()
     return app
 
 

@@ -52,10 +52,17 @@ def pipeline_app(cfg: ModelConfig, tcfg: TrainerConfig) -> App:
                        max_instances=1)
     docs = app.sense("docs", "corpus", vocab=cfg.vocab, seed=tcfg.seed)
     sequences = docs.via("packer", name="sequences", seq_len=tcfg.seq_len)
-    # the batcher accumulates across messages -> single instance
+    # the batcher accumulates across messages -> single instance; .tap()
+    # promises `batches` to its external subscriber (the Trainer)
     sequences.via("batcher", name="batches", batch=tcfg.global_batch,
-                  fixed_instances=1)
+                  fixed_instances=1).tap()
     return app
+
+
+def build_app() -> App:
+    """CPU-sized pipeline app with default knobs — the entry point
+    ``datax check`` discovers (main() parameterizes via pipeline_app)."""
+    return pipeline_app(preset_config("tiny"), TrainerConfig())
 
 
 def main() -> None:

@@ -3,6 +3,8 @@
 Entities (§2), Operator coherence + lifecycle (§4), message bus (NATS analog),
 sidecar metrics, serverless autoscaling, platform state, and the 3-method SDK.
 """
+from .analyze import (Diagnostic, DiagnosticsError, Severity,
+                      analyze_application, analyze_target)
 from .app import Application, AppValidationError
 from .bus import (KEYED_PARTITIONS, BusError, BusLike, KeyedGroup, MessageBus,
                   QueueGroup, Subscription, Unauthorized, UnknownSubject,
@@ -18,8 +20,9 @@ from .durable import (SNAPSHOT_TABLE, DurableError, DurableLog, Retention,
 from .entities import (ActuatorSpec, AnalyticsUnitSpec, DatabaseSpec,
                        DriverSpec, EntityKind, GadgetSpec, Placement,
                        SensorSpec, StreamSpec)
-from .fusion import (FusedStage, ResidentArray, fuse_application, fusion_mesh,
-                     mesh_axis_names, plan_segments)
+from .fusion import (BarrierReason, FusedStage, ResidentArray,
+                     fuse_application, fusion_mesh, mesh_axis_names,
+                     plan_segments)
 from .operator import CoherenceError, Operator, OperatorError
 from .schema import (KNOWN_MESH_AXES, ConfigSchema, FieldSpec, Message,
                      ShardSpec, StreamSchema)
@@ -35,6 +38,8 @@ __all__ = [
     "App", "DSLError", "GadgetHandle", "SchemaMismatch", "StreamHandle",
     "connect",
     "Application", "AppValidationError",
+    "Diagnostic", "DiagnosticsError", "Severity", "analyze_application",
+    "analyze_target",
     "CompressionError", "codec_name", "train_dictionary",
     "SNAPSHOT_TABLE", "DurableError", "DurableLog", "Retention",
     "iter_log", "resolve_replay_from", "schema_fingerprint",
@@ -47,8 +52,8 @@ __all__ = [
     "stable_hash",
     "ActuatorSpec", "AnalyticsUnitSpec", "DatabaseSpec", "DriverSpec",
     "EntityKind", "GadgetSpec", "Placement", "SensorSpec", "StreamSpec",
-    "FusedStage", "ResidentArray", "fuse_application", "fusion_mesh",
-    "mesh_axis_names", "plan_segments",
+    "BarrierReason", "FusedStage", "ResidentArray", "fuse_application",
+    "fusion_mesh", "mesh_axis_names", "plan_segments",
     "CoherenceError", "Operator", "OperatorError",
     "KNOWN_MESH_AXES", "ConfigSchema", "FieldSpec", "Message", "ShardSpec",
     "StreamSchema",

@@ -1,0 +1,718 @@
+"""``datax check`` — build-time dataflow diagnostics over the spec graph.
+
+DataX's abstraction "exposes parallelism and dependencies among the
+application functions"; this module is the pass that *audits* that graph
+instead of merely executing it.  It walks a compiled v1
+:class:`~.app.Application` (post-``App.build()``, pre-deploy) through a
+registry of rules and emits structured :class:`Diagnostic` records with
+stable ``DXnnn`` codes, so a broadcast stream feeding a keyed reduce, a
+``.replay()`` on a never-durable subject, or a :class:`~.schema.ShardSpec`
+that can never divide its field surfaces at build time instead of as
+runtime misbehavior.
+
+Rule families (catalog with examples in ``docs/diagnostics.md``):
+
+* ``DX1xx`` — ordering / exactly-once hazards (delivery vs statefulness,
+  work stealing vs order-sensitive consumers, replay vs durability, keyed
+  streams whose key field the producer's schema drops).
+* ``DX2xx`` — fusion explainability: why an adjacent DEVICE chain did NOT
+  fuse, naming the exact :class:`~.fusion.BarrierReason` (info severity —
+  the fusion pass's silent decisions made visible).
+* ``DX3xx`` — mesh / sharding / batching (ShardSpec rank + axis sanity,
+  ``max_batch`` declarations that silently defeat each other in one fused
+  segment).
+* ``DX4xx`` — hygiene (dead streams, legacy deprecated spellings caught
+  statically, schema fields produced but never consumed).
+
+Three integration layers:
+
+* ``App.build(strict=True)`` raises :class:`DiagnosticsError` on any
+  error-severity diagnostic (default ``strict=False`` logs them);
+* ``python -m repro.core.analyze <module[:attr]|file.py[:attr]>`` — the CLI
+  behind ``tools/datax_check.py``, with ``--json`` output for CI and
+  ``# datax: ignore[DXnnn] reason`` source pragmas for vetted exceptions;
+* :meth:`~.operator.Operator.record_diagnostics` — ``Application.deploy``
+  records the summary on the operator, so ``Operator.describe()`` and each
+  instance sidecar's ``metrics()["diagnostics"]`` expose what was flagged.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import enum
+import importlib
+import importlib.util
+import inspect
+import json
+import re
+import sys
+from pathlib import Path
+from typing import Any, Callable, Iterable, Iterator
+
+from .app import Application, AppValidationError
+from .entities import AnalyticsUnitSpec, Placement, StreamSpec
+from .fusion import (consumer_counts, edge_barrier, plan_segments,
+                     stream_barrier)
+from .schema import StreamSchema
+
+
+# ---------------------------------------------------------------------------
+# Diagnostic records
+# ---------------------------------------------------------------------------
+
+class Severity(enum.IntEnum):
+    """Diagnostic severity ladder; comparisons follow the int value.
+
+    ``ERROR`` means the graph will misbehave at runtime (lost/duplicated/
+    reordered data) — ``App.build(strict=True)`` and the CLI's exit code
+    gate on it.  ``WARNING`` means the graph is suspicious but may be
+    intentional.  ``INFO`` is explanation, not judgment (e.g. DX201's
+    "why didn't this fuse").
+    """
+
+    INFO = 10
+    WARNING = 20
+    ERROR = 30
+
+    @property
+    def label(self) -> str:
+        """Lowercase name for human/JSON output (``"error"`` etc.)."""
+        return self.name.lower()
+
+
+@dataclasses.dataclass(frozen=True)
+class Diagnostic:
+    """One finding of the analyzer: a stable code anchored at a graph node.
+
+    ``node`` uses ``kind/name`` paths (``stream/scores``,
+    ``sensor/thermal-cam``, ``field/detector.bbox``) so operators and the
+    sidecar REST surface can address findings uniformly.  ``fixit`` is a
+    one-line suggested remedy; ``app`` is filled by
+    :func:`analyze_application`.
+    """
+
+    code: str
+    severity: Severity
+    node: str
+    message: str
+    fixit: str = ""
+    app: str = ""
+
+    def format(self) -> str:
+        """One-line human rendering: ``DX101 error stream/x: message``."""
+        head = f"{self.code} {self.severity.label} {self.node}: {self.message}"
+        return f"{head}  [fix: {self.fixit}]" if self.fixit else head
+
+    def to_json(self) -> dict:
+        """JSON-safe dict (severity as its lowercase label)."""
+        return {"code": self.code, "severity": self.severity.label,
+                "node": self.node, "message": self.message,
+                "fixit": self.fixit, "app": self.app}
+
+
+class DiagnosticsError(AppValidationError):
+    """Raised by ``App.build(strict=True)`` on error-severity diagnostics."""
+
+    def __init__(self, diagnostics: Iterable[Diagnostic]):
+        self.diagnostics = [d for d in diagnostics
+                            if d.severity >= Severity.ERROR]
+        lines = "\n  ".join(d.format() for d in self.diagnostics)
+        super().__init__(
+            f"datax check found {len(self.diagnostics)} error-severity "
+            f"diagnostic(s):\n  {lines}")
+
+
+def has_errors(diagnostics: Iterable[Diagnostic]) -> bool:
+    """True if any diagnostic is error-severity."""
+    return any(d.severity >= Severity.ERROR for d in diagnostics)
+
+
+# ---------------------------------------------------------------------------
+# Rule registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    """A registered analyzer rule: stable code, family, short title, body."""
+
+    code: str
+    family: str
+    title: str
+    fn: Callable[["_Graph"], Iterable[Diagnostic]]
+
+
+RULES: dict[str, Rule] = {}
+
+
+def rule(code: str, family: str, title: str):
+    """Class the decorated generator as the rule body for ``code``."""
+    def deco(fn):
+        if code in RULES:  # pragma: no cover - registry misuse guard
+            raise ValueError(f"duplicate rule code {code}")
+        RULES[code] = Rule(code=code, family=family, title=title, fn=fn)
+        return fn
+    return deco
+
+
+class _Graph:
+    """Precomputed views of one Application that all rules share."""
+
+    def __init__(self, app: Application, taps: Iterable[str] = ()):
+        self.app = app
+        self.taps = set(taps)
+        self.aus = {a.name: a for a in app.analytics_units}
+        self.drivers = {d.name: d for d in app.drivers}
+        self.actuators = {a.name: a for a in app.actuators}
+        self.streams = {s.name: s for s in app.streams}
+        self.sensors = {s.name: s for s in app.sensors}
+        self.consumers = consumer_counts(app)
+        # subject -> streams that consume it
+        self.consuming_streams: dict[str, list[StreamSpec]] = {}
+        for s in app.streams:
+            for i in s.inputs:
+                self.consuming_streams.setdefault(i, []).append(s)
+        # subject -> gadgets that consume it
+        self.consuming_gadgets: dict[str, list] = {}
+        for g in app.gadgets:
+            for i in g.inputs:
+                self.consuming_gadgets.setdefault(i, []).append(g)
+        # subject -> producer output schema (sensors via driver, streams via AU)
+        self.producer_schema: dict[str, StreamSchema] = {}
+        for sensor in app.sensors:
+            drv = self.drivers.get(sensor.driver)
+            if drv is not None:
+                self.producer_schema[sensor.name] = drv.output_schema
+        for s in app.streams:
+            au = self.aus.get(s.analytics_unit)
+            if au is not None:
+                self.producer_schema[s.name] = au.output_schema
+        self.declared = set(self.sensors) | set(self.streams)
+        self.durable = ({n for n, s in self.sensors.items() if s.durable}
+                        | {n for n, s in self.streams.items() if s.durable})
+
+    def au_of(self, spec: StreamSpec) -> AnalyticsUnitSpec | None:
+        return self.aus.get(spec.analytics_unit)
+
+    def pool_ceiling(self, spec: StreamSpec) -> int:
+        """Largest instance count this stream's pool can reach: the fixed
+        count if pinned, else the AU's autoscale ceiling."""
+        if spec.fixed_instances is not None:
+            return spec.fixed_instances
+        au = self.au_of(spec)
+        return au.max_instances if au is not None else 1
+
+    def input_schema_for(self, consumer: StreamSpec,
+                         subject: str) -> StreamSchema | None:
+        """The consumer AU's declared schema for the edge from ``subject``
+        (positional), or None when undeclared."""
+        au = self.au_of(consumer)
+        if au is None or subject not in consumer.inputs:
+            return None
+        idx = list(consumer.inputs).index(subject)
+        schemas = list(au.input_schemas)
+        if idx < len(schemas):
+            return schemas[idx]
+        return schemas[0] if len(schemas) == 1 else None
+
+
+# ---------------------------------------------------------------------------
+# DX1xx — ordering / exactly-once hazards
+# ---------------------------------------------------------------------------
+
+@rule("DX101", "ordering", "stateful stage under non-keyed delivery")
+def _rule_stateful_delivery(g: _Graph) -> Iterator[Diagnostic]:
+    for s in g.app.streams:
+        au = g.au_of(s)
+        if au is None or not au.stateful or s.delivery == "keyed":
+            continue
+        if au.combinator in ("reduce", "window"):
+            yield Diagnostic(
+                "DX101", Severity.ERROR, f"stream/{s.name}",
+                f"per-key stateful {au.combinator!r} stage runs under "
+                f"{s.delivery!r} delivery; its KeyedStore state is only "
+                f"consistent when every key sticks to one instance",
+                fixit="route it keyed: .key_by(field) upstream of the "
+                      f".{au.combinator}(...)")
+        elif s.delivery == "group" and g.pool_ceiling(s) > 1:
+            yield Diagnostic(
+                "DX101", Severity.WARNING, f"stream/{s.name}",
+                f"stateful AU {au.name!r} runs as a plain group pool that "
+                f"can reach {g.pool_ceiling(s)} instances sharing one "
+                f"platform database; concurrent updates from round-robin "
+                f"members race",
+                fixit="key the stream (.key_by) or pin it: "
+                      ".scaled(instances=1)")
+
+
+@rule("DX102", "ordering", "broadcast into a stateful pool duplicates state")
+def _rule_broadcast_stateful(g: _Graph) -> Iterator[Diagnostic]:
+    for s in g.app.streams:
+        au = g.au_of(s)
+        if au is None or s.delivery != "broadcast" or not au.stateful:
+            continue
+        if g.pool_ceiling(s) > 1:
+            yield Diagnostic(
+                "DX102", Severity.ERROR, f"stream/{s.name}",
+                f"broadcast delivery hands EVERY message to each of up to "
+                f"{g.pool_ceiling(s)} instances of stateful AU {au.name!r}, "
+                f"which share one platform database — every update is "
+                f"applied once per instance",
+                fixit="use group/keyed delivery, or pin the pool: "
+                      ".scaled(instances=1)")
+
+
+@rule("DX103", "ordering", "work stealing feeding an order-sensitive stage")
+def _rule_steal_ordering(g: _Graph) -> Iterator[Diagnostic]:
+    for s in g.app.streams:
+        if not s.steal:
+            continue
+        if s.delivery == "broadcast":
+            yield Diagnostic(
+                "DX103", Severity.ERROR, f"stream/{s.name}",
+                "steal=True on a broadcast stream: there is no queue group "
+                "to steal from (every instance already sees every message)",
+                fixit="drop steal=True or switch to group/keyed delivery")
+            continue
+        if s.delivery != "group":
+            continue  # keyed stealing migrates whole partitions: order-safe
+        for t in g.consuming_streams.get(s.name, ()):
+            t_au = g.au_of(t)
+            sensitive = (t.delivery == "keyed"
+                         or (t_au is not None and t_au.stateful))
+            if sensitive:
+                what = ("keyed consumer" if t.delivery == "keyed"
+                        else "stateful consumer")
+                yield Diagnostic(
+                    "DX103", Severity.ERROR, f"stream/{s.name}",
+                    f"steal=True on plain-group stream {s.name!r} perturbs "
+                    f"publish order across the pool, but downstream "
+                    f"{what} {t.name!r} depends on arrival order",
+                    fixit="key the pool (.key_by makes stealing "
+                          "partition-granular and order-safe) or drop "
+                          "steal=True")
+
+
+@rule("DX104", "ordering", "replay from a non-durable subject")
+def _rule_replay_durability(g: _Graph) -> Iterator[Diagnostic]:
+    for s in g.app.streams:
+        if s.replay_from is None:
+            continue
+        for subject in s.inputs:
+            if subject in g.declared and subject not in g.durable:
+                yield Diagnostic(
+                    "DX104", Severity.ERROR, f"stream/{s.name}",
+                    f"replay_from={s.replay_from!r} but input subject "
+                    f"{subject!r} is not durable — there is no log to "
+                    f"replay; the stream would start empty",
+                    fixit=f"mark the producer durable: "
+                          f"{subject!r}.durable(retention=...)")
+
+
+@rule("DX105", "ordering", "keyed stream whose key the producer drops")
+def _rule_key_dropped(g: _Graph) -> Iterator[Diagnostic]:
+    for s in g.app.streams:
+        if s.delivery != "keyed" or not s.key:
+            continue
+        for subject in s.inputs:
+            schema = g.producer_schema.get(subject)
+            if schema is None or not schema.fields:
+                continue  # external or untyped producer: unknowable here
+            if s.key not in schema.fields:
+                yield Diagnostic(
+                    "DX105", Severity.ERROR, f"stream/{s.name}",
+                    f"keyed on field {s.key!r} but the producer of input "
+                    f"{subject!r} declares schema fields "
+                    f"{sorted(schema.fields)} — the key is dropped "
+                    f"upstream, so every message would hash on a missing "
+                    f"field",
+                    fixit=f"carry {s.key!r} through the upstream schema, "
+                          f"or key on a field the producer emits")
+
+
+# ---------------------------------------------------------------------------
+# DX2xx — fusion explainability
+# ---------------------------------------------------------------------------
+
+@rule("DX201", "fusion", "why an adjacent DEVICE chain did not fuse")
+def _rule_fusion_explain(g: _Graph) -> Iterator[Diagnostic]:
+    segments = plan_segments(g.app, taps=g.taps)
+    seg_of: dict[str, int] = {}
+    for i, seg in enumerate(segments):
+        for s in seg:
+            seg_of[s.name] = i
+    for down in g.app.streams:
+        d_au = g.au_of(down)
+        if d_au is None or d_au.placement is not Placement.DEVICE \
+                or d_au.fused_stages:
+            continue
+        for subject in down.inputs:
+            up = g.streams.get(subject)
+            if up is None:
+                continue
+            u_au = g.au_of(up)
+            if u_au is None or u_au.placement is not Placement.DEVICE \
+                    or u_au.fused_stages:
+                continue
+            if seg_of.get(up.name) is not None \
+                    and seg_of.get(up.name) == seg_of.get(down.name):
+                continue  # fused together — nothing to explain
+            reason = stream_barrier(up, g.aus)
+            if reason is None:
+                reason = edge_barrier(up, down, g.aus,
+                                      consumers=g.consumers, taps=g.taps)
+            if reason is None:  # pragma: no cover - planner disagreement
+                continue
+            yield Diagnostic(
+                "DX201", Severity.INFO, f"stream/{down.name}",
+                f"DEVICE chain {up.name!r} -> {down.name!r} did not fuse: "
+                f"{reason.name} — {reason.explain}",
+                fixit="see docs/diagnostics.md#dx201 for how each barrier "
+                      "is lifted")
+
+
+# ---------------------------------------------------------------------------
+# DX3xx — mesh / sharding / batching
+# ---------------------------------------------------------------------------
+
+def _schemas_with_nodes(g: _Graph) -> Iterator[tuple[str, StreamSchema]]:
+    for d in g.app.drivers:
+        yield f"driver/{d.name}", d.output_schema
+    for a in g.app.analytics_units:
+        yield f"au/{a.name}", a.output_schema
+        for i, sch in enumerate(a.input_schemas):
+            yield f"au/{a.name}#in{i}", sch
+    for a in g.app.actuators:
+        for i, sch in enumerate(a.input_schemas):
+            yield f"actuator/{a.name}#in{i}", sch
+
+
+@rule("DX301", "sharding", "ShardSpec that cannot address its field")
+def _rule_shard_shape(g: _Graph) -> Iterator[Diagnostic]:
+    for node, schema in _schemas_with_nodes(g):
+        for fname, f in (schema.fields or {}).items():
+            if f.sharding is None:
+                continue
+            axes = tuple(f.sharding.axes)
+            named = [a for a in axes if a is not None]
+            if f.shape is not None and len(axes) != len(f.shape):
+                yield Diagnostic(
+                    "DX301", Severity.ERROR, f"field/{node}.{fname}",
+                    f"sharding names {len(axes)} dims {axes!r} but the "
+                    f"field's shape {tuple(f.shape)!r} has "
+                    f"{len(f.shape)} — the hint can never address the "
+                    f"array",
+                    fixit="give ShardSpec exactly one entry (axis name or "
+                          "None) per array dimension")
+            if len(named) != len(set(named)):
+                dupes = sorted({a for a in named if named.count(a) > 1})
+                yield Diagnostic(
+                    "DX301", Severity.ERROR, f"field/{node}.{fname}",
+                    f"sharding {axes!r} names mesh axis(es) {dupes} more "
+                    f"than once; an axis can split at most one dimension",
+                    fixit="replicate the extra dimension (None) or use a "
+                          "different mesh axis")
+
+
+@rule("DX302", "sharding", "axis named on a dimension it can never divide")
+def _rule_shard_divisibility(g: _Graph) -> Iterator[Diagnostic]:
+    for node, schema in _schemas_with_nodes(g):
+        for fname, f in (schema.fields or {}).items():
+            if f.sharding is None or f.shape is None:
+                continue
+            axes = tuple(f.sharding.axes)
+            for dim, axis in zip(f.shape, axes):
+                if axis is not None and dim == 1:
+                    yield Diagnostic(
+                        "DX302", Severity.WARNING, f"field/{node}.{fname}",
+                        f"mesh axis {axis!r} is named on a size-1 "
+                        f"dimension of shape {tuple(f.shape)!r}; no mesh "
+                        f"larger than 1 can ever divide it, so the hint "
+                        f"silently degrades to replication",
+                        fixit="replicate that dimension (None) or shard a "
+                              "dimension with extent > 1")
+
+
+@rule("DX303", "sharding", "conflicting max_batch declarations in a segment")
+def _rule_max_batch_conflict(g: _Graph) -> Iterator[Diagnostic]:
+    for seg in plan_segments(g.app, taps=g.taps):
+        declared = [(s.name, s.max_batch) for s in seg
+                    if s.max_batch is not None]
+        if len({b for _, b in declared}) <= 1:
+            continue
+        winner_name, winner = declared[-1]
+        losers = [f"{n}={b}" for n, b in declared[:-1] if b != winner]
+        yield Diagnostic(
+            "DX303", Severity.WARNING, f"stream/{winner_name}",
+            f"fused segment {seg[0].name!r}..{seg[-1].name!r} has "
+            f"conflicting max_batch declarations ({', '.join(losers)} vs "
+            f"{winner_name}={winner}); the stage closest to the exit wins "
+            f"and {winner} silently overrides the rest",
+            fixit="declare max_batch on one stage of the chain, or make "
+                  "the declarations agree")
+
+
+# ---------------------------------------------------------------------------
+# DX4xx — hygiene
+# ---------------------------------------------------------------------------
+
+@rule("DX401", "hygiene", "dead stream: produced but never consumed")
+def _rule_dead_stream(g: _Graph) -> Iterator[Diagnostic]:
+    for name in sorted(g.declared):
+        spec = g.streams.get(name) or g.sensors.get(name)
+        kind = "stream" if name in g.streams else "sensor"
+        if g.consumers.get(name, 0) > 0 or name in g.taps:
+            continue
+        if getattr(spec, "durable", False):
+            continue  # durable = retained history is the consumer contract
+        yield Diagnostic(
+            "DX401", Severity.WARNING, f"{kind}/{name}",
+            f"{kind} {name!r} has no consumer stream or gadget, is not "
+            f".tap()-promised to external subscribers, and is not durable "
+            f"— every message it publishes is dropped on the floor",
+            fixit="feed it to a consumer, promise it (.tap()), make it "
+                  ".durable(), or delete it")
+
+
+@rule("DX402", "hygiene", "legacy deprecated spelling used statically")
+def _rule_legacy_spellings(g: _Graph) -> Iterator[Diagnostic]:
+    for node, schema in _schemas_with_nodes(g):
+        for fname, f in (schema.fields or {}).items():
+            if f.sharding is not None and getattr(f.sharding, "legacy",
+                                                  False):
+                yield Diagnostic(
+                    "DX402", Severity.WARNING, f"field/{node}.{fname}",
+                    f"sharding hint {tuple(f.sharding.axes)!r} was spelled "
+                    f"as a legacy bare tuple (deprecated since the typed "
+                    f"API landed; warns once per call site at runtime)",
+                    fixit=f"spell it "
+                          f"ShardSpec({tuple(f.sharding.axes)!r})")
+
+
+@rule("DX403", "hygiene", "retention declared without durability")
+def _rule_retention_without_durable(g: _Graph) -> Iterator[Diagnostic]:
+    specs = [("sensor", s) for s in g.app.sensors] \
+        + [("stream", s) for s in g.app.streams]
+    for kind, s in specs:
+        if s.retention is not None and not s.durable:
+            yield Diagnostic(
+                "DX403", Severity.ERROR, f"{kind}/{s.name}",
+                f"{kind} {s.name!r} declares retention {dict(s.retention)!r} "
+                f"but is not durable — there is no log for the retention "
+                f"policy to bound",
+                fixit="mark it .durable(retention=...) or drop the "
+                      "retention")
+
+
+@rule("DX404", "hygiene", "schema field produced but never consumed")
+def _rule_unconsumed_field(g: _Graph) -> Iterator[Diagnostic]:
+    for subject, schema in g.producer_schema.items():
+        if not schema.fields:
+            continue
+        if subject in g.taps or subject in g.durable:
+            continue  # promised externally — consumption is unknowable
+        consumers = g.consuming_streams.get(subject, [])
+        gadgets = g.consuming_gadgets.get(subject, [])
+        if not consumers and not gadgets:
+            continue  # DX401 territory
+        needed: set[str] = set()
+        for t in consumers:
+            sch = g.input_schema_for(t, subject)
+            if sch is None or not sch.fields:
+                needed = set(schema.fields)  # untyped consumer: uses anything
+                break
+            needed |= set(sch.fields)
+            if t.delivery == "keyed" and t.key:
+                needed.add(t.key)
+        else:
+            for gd in gadgets:
+                act = g.actuators.get(gd.actuator)
+                schemas = list(act.input_schemas) if act is not None else []
+                idx = list(gd.inputs).index(subject)
+                sch = schemas[idx] if idx < len(schemas) else (
+                    schemas[0] if len(schemas) == 1 else None)
+                if sch is None or not sch.fields:
+                    needed = set(schema.fields)
+                    break
+                needed |= set(sch.fields)
+        for fname in sorted(set(schema.fields) - needed):
+            yield Diagnostic(
+                "DX404", Severity.INFO, f"field/{subject}.{fname}",
+                f"field {fname!r} of {subject!r} is produced but no typed "
+                f"consumer schema mentions it — it is serialized, "
+                f"published, and dropped on every message",
+                fixit="consume it downstream or drop it from the producer "
+                      "schema")
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+def analyze_application(app: Application, *, taps: Iterable[str] = (),
+                        ignores: Iterable[str] = ()) -> list[Diagnostic]:
+    """Run every registered rule over a compiled Application.
+
+    ``taps`` are the subjects promised to external subscribers (the DSL's
+    ``App.build`` passes its ``.tap()`` set); ``ignores`` suppresses codes
+    (the CLI fills it from ``# datax: ignore[DXnnn]`` pragmas).  Returns
+    diagnostics in stable (rule-code, graph) order, each stamped with
+    ``app.name``.
+    """
+    g = _Graph(app, taps=taps)
+    ignores = set(ignores)
+    out: list[Diagnostic] = []
+    for code in sorted(RULES):
+        if code in ignores:
+            continue
+        for d in RULES[code].fn(g):
+            if d.code not in ignores:
+                out.append(dataclasses.replace(d, app=app.name))
+    return out
+
+
+def analyze_target(obj: Any) -> list[tuple[str, Application, frozenset]]:
+    """Coerce a check target into ``(label, application, taps)`` triples.
+
+    Accepts a compiled v1 :class:`Application`, a v2 fluent ``App`` (duck-
+    typed on ``_compile``/``_taps`` so this module never imports the DSL),
+    or a zero-argument callable returning either.
+    """
+    if isinstance(obj, Application):
+        return [(obj.name, obj, frozenset())]
+    if hasattr(obj, "_compile") and hasattr(obj, "_taps"):
+        return [(obj.name, obj._compile(), frozenset(obj._taps))]
+    if callable(obj):
+        return analyze_target(obj())
+    raise TypeError(
+        f"cannot analyze {type(obj).__name__!r}: expected an Application, "
+        f"a fluent App, or a zero-argument callable returning one")
+
+
+# ---------------------------------------------------------------------------
+# CLI (python -m repro.core.analyze / tools/datax_check.py)
+# ---------------------------------------------------------------------------
+
+_PRAGMA = re.compile(r"#\s*datax:\s*ignore\[([A-Z]{2}\d{3})\]")
+
+
+def scan_ignores(source: str) -> set[str]:
+    """Codes suppressed by ``# datax: ignore[DXnnn] <reason>`` pragmas."""
+    return set(_PRAGMA.findall(source))
+
+
+def _load_module(target: str):
+    """Resolve ``pkg.mod[:attr]`` or ``path/to/file.py[:attr]``."""
+    modpart, _, attr = target.partition(":")
+    if modpart.endswith(".py") or "/" in modpart:
+        path = Path(modpart)
+        # script-style semantics: the file's directory joins sys.path so the
+        # target can import its siblings (fixtures' shared helpers etc.)
+        parent = str(path.resolve().parent)
+        if parent not in sys.path:
+            sys.path.insert(0, parent)
+        spec = importlib.util.spec_from_file_location(path.stem, path)
+        if spec is None or spec.loader is None:
+            raise ImportError(f"cannot load {modpart!r}")
+        module = importlib.util.module_from_spec(spec)
+        sys.modules.setdefault(path.stem, module)
+        spec.loader.exec_module(module)
+    else:
+        module = importlib.import_module(modpart)
+    return module, (attr or None)
+
+
+def _discover(module) -> list[tuple[str, Any]]:
+    """Find checkable apps in a module: ``build_app``/``*_app`` zero-arg
+    callables first, else module-level App/Application objects."""
+    found: list[tuple[str, Any]] = []
+    for name in sorted(vars(module)):
+        if name.startswith("_"):
+            continue
+        obj = getattr(module, name)
+        if callable(obj) and (name == "build_app" or name.endswith("_app")):
+            try:
+                params = [
+                    p for p in inspect.signature(obj).parameters.values()
+                    if p.default is p.empty
+                    and p.kind not in (p.VAR_POSITIONAL, p.VAR_KEYWORD)]
+            except (TypeError, ValueError):
+                continue
+            if not params:
+                found.append((name, obj))
+    if found:
+        return found
+    for name in sorted(vars(module)):
+        obj = getattr(module, name)
+        if isinstance(obj, Application) \
+                or (hasattr(obj, "_compile") and hasattr(obj, "_taps")):
+            found.append((name, obj))
+    return found
+
+
+def main(argv: Iterable[str] | None = None) -> int:
+    """CLI entry point; returns the process exit code (1 on errors found)."""
+    parser = argparse.ArgumentParser(
+        prog="datax check",
+        description="Static dataflow analysis of a DataX app graph.")
+    parser.add_argument(
+        "target",
+        help="module[:attr] or path/to/file.py[:attr]; without :attr, "
+             "checks every zero-arg *_app/build_app factory (or module-"
+             "level app object) found in the module")
+    parser.add_argument("--json", action="store_true", dest="as_json",
+                        help="emit a JSON report instead of text")
+    args = parser.parse_args(list(argv) if argv is not None else None)
+
+    module, attr = _load_module(args.target)
+    source = ""
+    if getattr(module, "__file__", None):
+        try:
+            source = Path(module.__file__).read_text()
+        except OSError:  # pragma: no cover - unreadable module file
+            source = ""
+    ignores = scan_ignores(source)
+
+    if attr is not None:
+        targets = [(attr, getattr(module, attr))]
+    else:
+        targets = _discover(module)
+    if not targets:
+        print(f"datax check: no app found in {args.target!r} "
+              f"(expected a zero-arg *_app factory or a module-level app)",
+              file=sys.stderr)
+        return 2
+
+    reports: list[dict] = []
+    diagnostics: list[Diagnostic] = []
+    for label, obj in targets:
+        for app_label, application, taps in analyze_target(obj):
+            diags = analyze_application(application, taps=taps,
+                                        ignores=ignores)
+            diagnostics.extend(diags)
+            reports.append({
+                "target": f"{args.target}:{label}", "app": app_label,
+                "diagnostics": [d.to_json() for d in diags]})
+
+    errors = [d for d in diagnostics if d.severity >= Severity.ERROR]
+    if args.as_json:
+        print(json.dumps({"reports": reports, "errors": len(errors),
+                          "ignored_codes": sorted(ignores)}, indent=2))
+    else:
+        for rep in reports:
+            print(f"== {rep['app']} ({rep['target']}) ==")
+            if not rep["diagnostics"]:
+                print("  clean")
+            for d in rep["diagnostics"]:
+                fix = f"  [fix: {d['fixit']}]" if d["fixit"] else ""
+                print(f"  {d['code']} {d['severity']:<7} {d['node']}: "
+                      f"{d['message']}{fix}")
+        summary = (f"datax check: {len(diagnostics)} diagnostic(s), "
+                   f"{len(errors)} error(s)")
+        if ignores:
+            summary += f" (ignoring {', '.join(sorted(ignores))})"
+        print(summary)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":  # pragma: no cover - exercised via subprocess
+    sys.exit(main())

@@ -12,6 +12,7 @@ the coherence guarantees.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Callable, Iterable, Mapping
 
@@ -40,6 +41,10 @@ class Application:
     #: config converter, §4) — populated by the v2 DSL's ``.via(upgrade=...)``.
     upgrades: Mapping[str, Callable[[dict], dict] | None] = \
         dataclasses.field(default_factory=dict)
+    #: Subjects promised to external subscribers (the v2 DSL's ``.tap()``
+    #: set).  Carried on the compiled graph so deploy-time diagnostics
+    #: (``datax check``) judge tapped streams the same way the build did.
+    taps: tuple = ()
 
     # -- fluent builders ------------------------------------------------------
     def driver(self, spec: DriverSpec) -> "Application":
@@ -135,6 +140,17 @@ class Application:
         there is no replay); fire them with ``op.start_pending_sensors()``.
         """
         order = self.validate(external_streams=op.registered_streams())
+        # record the datax-check diagnostic summary on the operator BEFORE
+        # spawning anything, so instances pick up their stream's findings
+        # (sidecar metrics) and ops tooling sees what was flagged even if a
+        # later registration step fails.  Lazy import: analyze imports this
+        # module.
+        from .analyze import analyze_application
+        try:
+            diagnostics = analyze_application(self, taps=self.taps)
+        except Exception:  # never let the audit break a deploy
+            diagnostics = []
+        op.record_diagnostics(self.name, diagnostics)
         for db in self.databases:
             op.create_database(db)
         for d in self.drivers:
@@ -163,21 +179,15 @@ class Application:
     def undeploy(self, op: Operator) -> None:
         """Tear down in reverse dependency order (coherence-safe)."""
         for g in self.gadgets:
-            try:
+            with contextlib.suppress(Exception):
                 op.delete_gadget(g.name)
-            except Exception:
-                pass
         order = self.validate(external_streams=op.registered_streams())
         for name in reversed(order):
-            try:
+            with contextlib.suppress(CoherenceError):
                 op.delete_stream(name)
-            except CoherenceError:
-                pass
         for s in self.sensors:
-            try:
+            with contextlib.suppress(CoherenceError):
                 op.delete_sensor(s.name)
-            except CoherenceError:
-                pass
 
     def loc_footprint(self) -> int:
         """#entities — proxy for the paper's programmer-productivity claim."""

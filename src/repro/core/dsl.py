@@ -63,6 +63,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import inspect
+import logging
 import time
 import warnings
 from collections import deque
@@ -78,6 +79,11 @@ from .fusion import fuse_application, mesh_axis_names
 from .operator import Operator
 from .schema import KNOWN_MESH_AXES, ConfigSchema, StreamSchema
 from .state import KeyedStore
+
+#: Non-strict builds log error/warning diagnostics from ``datax check``
+#: through the analyzer's logger (named after the module that owns the
+#: rules, so ``logging.getLogger("repro.core.analyze")`` filters them).
+_analyze_logger = logging.getLogger("repro.core.analyze")
 
 
 class DSLError(AppValidationError):
@@ -377,7 +383,8 @@ class StreamHandle:
     def scaled(self, *, delivery: str | None = None,
                instances: int | None = None,
                max_instances: int | None = None,
-               max_batch: int | None = None) -> "StreamHandle":
+               max_batch: int | None = None,
+               steal: bool | None = None) -> "StreamHandle":
         """Scaling & delivery escape hatch for this stream's instances.
 
         ``delivery="group"`` (the platform default) makes scaled instances a
@@ -411,6 +418,15 @@ class StreamHandle:
         unaffected either way.  On a device chain, declare it on any stage —
         fusion folds it onto the fused unit; if several stages declare one,
         the stage closest to the segment exit wins.
+
+        ``steal=True`` opts the pool into pull-based work stealing: an idle
+        member pulls queued work from the deepest sibling's mailbox, so one
+        straggler can't pin its share of the backlog.  Under keyed delivery
+        stealing migrates whole partitions (per-key order preserved); under
+        plain group delivery individual messages move, which perturbs
+        arrival order across the pool — ``datax check`` flags that (DX103)
+        when a downstream stage is order-sensitive.  Meaningless (and
+        rejected) for broadcast streams.
         """
         if delivery is not None and delivery not in ("group", "broadcast"):
             raise DSLError(f"delivery must be 'group' or 'broadcast', "
@@ -450,6 +466,11 @@ class StreamHandle:
         ceiling = max(instances or 1, max_instances or 1,
                       au.max_instances if au.combinator else 1)
         pool = fixed if fixed is not None else ceiling
+        if steal and resolved == "broadcast":
+            raise DSLError(
+                f"stream {self.name!r}: steal=True needs a queue group to "
+                f"steal from; broadcast instances each see every message "
+                f"already")
         if au.combinator and pool > 1:
             if au.combinator not in ("map", "filter") and not keyed:
                 raise DSLError(
@@ -475,7 +496,8 @@ class StreamHandle:
                 f"fixes the pool size via instances=")
         self.app._streams[index] = dataclasses.replace(
             spec, delivery=resolved, fixed_instances=fixed,
-            max_batch=max_batch if max_batch is not None else spec.max_batch)
+            max_batch=max_batch if max_batch is not None else spec.max_batch,
+            steal=steal if steal is not None else spec.steal)
         return self
 
     # -- combinators (synthetic AUs) ----------------------------------------
@@ -995,7 +1017,27 @@ class App:
                     raise DSLError(str(e)) from None
 
     # ================================================================ build
-    def build(self, *, fuse: bool = True) -> Application:
+    def _compile(self) -> Application:
+        """Compile to the UNFUSED v1 spec graph (deterministic: declaration
+        order).  Shared by :meth:`build` and the ``datax check`` analyzer
+        (:mod:`repro.core.analyze` duck-types on this + ``_taps``)."""
+        self._validate_sharding()
+        return Application(
+            name=self.name,
+            drivers=list(self._drivers.values()),
+            analytics_units=list(self._aus.values()),
+            actuators=list(self._actuators.values()),
+            sensors=list(self._sensors),
+            streams=list(self._streams),
+            gadgets=[GadgetSpec(name=g.name, actuator=g.actuator,
+                                inputs=tuple(g.inputs), config=g.config)
+                     for g in self._gadgets],
+            databases=list(self._databases),
+            upgrades=dict(self._upgrades),
+            taps=tuple(sorted(self._taps)),
+        )
+
+    def build(self, *, fuse: bool = True, strict: bool = False) -> Application:
         """Compile to the v1 spec graph (deterministic: declaration order).
 
         With ``fuse=True`` (default) the chain-fusion pass runs: maximal
@@ -1008,21 +1050,24 @@ class App:
         mesh vocabulary (plus whatever axes the live device mesh actually
         has) — a typo'd axis fails the build, not a silent replicate at
         runtime.
+
+        Every build also runs the ``datax check`` dataflow analyzer
+        (:mod:`repro.core.analyze`) over the unfused graph: with
+        ``strict=True`` any error-severity diagnostic raises
+        :class:`~.analyze.DiagnosticsError`; the default ``strict=False``
+        logs error/warning diagnostics through the ``repro.core.analyze``
+        logger and builds anyway (info-severity findings are CLI-only).
         """
-        self._validate_sharding()
-        application = Application(
-            name=self.name,
-            drivers=list(self._drivers.values()),
-            analytics_units=list(self._aus.values()),
-            actuators=list(self._actuators.values()),
-            sensors=list(self._sensors),
-            streams=list(self._streams),
-            gadgets=[GadgetSpec(name=g.name, actuator=g.actuator,
-                                inputs=tuple(g.inputs), config=g.config)
-                     for g in self._gadgets],
-            databases=list(self._databases),
-            upgrades=dict(self._upgrades),
-        )
+        from .analyze import (DiagnosticsError, Severity,
+                              analyze_application, has_errors)
+        application = self._compile()
+        diagnostics = analyze_application(application,
+                                          taps=frozenset(self._taps))
+        if strict and has_errors(diagnostics):
+            raise DiagnosticsError(diagnostics)
+        for d in diagnostics:
+            if d.severity >= Severity.WARNING:
+                _analyze_logger.warning("%s", d.format())
         if fuse:
             application = fuse_application(application,
                                            taps=frozenset(self._taps))

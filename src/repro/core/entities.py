@@ -162,6 +162,13 @@ class StreamSpec:
     fixed_instances: int | None = None   # None => operator auto-scales
     delivery: str = "group"              # "group" | "keyed" | "broadcast"
     key: str | None = None               # hashed payload field (keyed only)
+    #: Opt this stream's worker pool into pull-based work stealing (DSL
+    #: ``.scaled(steal=True)``): an idle member pulls queued work from the
+    #: deepest sibling mailbox.  Group stealing hands over individual
+    #: messages (arrival order across the pool is perturbed — avoid when a
+    #: downstream stage is order-sensitive); keyed stealing migrates whole
+    #: partitions, preserving per-key order.  Meaningless for broadcast.
+    steal: bool = False
     #: Burst ceiling for batched execution: when this stream's unit can batch
     #: (fused DEVICE chains expose ``process_batch``), each mailbox pull
     #: drains up to this many queued messages into ONE program call.  None

@@ -92,6 +92,7 @@ redeploy the app to pick up new stage versions.
 from __future__ import annotations
 
 import dataclasses
+import enum
 import time
 from typing import Any, Callable, Iterable, Mapping, Sequence
 
@@ -223,7 +224,82 @@ class FusedStage:
 # Segment detection
 # ---------------------------------------------------------------------------
 
-def _consumers(app: Application) -> dict[str, int]:
+class BarrierReason(enum.Enum):
+    """Why a stream stops (or never joins) a fused DEVICE segment.
+
+    The fusion pass used to decide barriers inline and throw the reason
+    away; now every decision point returns one of these members so both
+    :func:`plan_segments` and the ``DX201`` fusion-explainability rule in
+    :mod:`repro.core.analyze` consume the *same* data — the explanation can
+    never drift from the behavior.  ``str(reason)`` / ``reason.explain``
+    give the operator-facing sentence.
+    """
+
+    #: The stream's AU is not ``Placement.DEVICE`` (host stages run on the bus).
+    NOT_DEVICE = "not-device"
+    #: The AU declares ``stateful=True`` — fused programs must be pure.
+    STATEFUL = "stateful"
+    #: The AU is itself a fused unit; never re-fuse one.
+    FUSED_UNIT = "fused-unit"
+    #: The AU's logic owns its own consume loop (SDK-style) — can't chain.
+    SDK_STYLE = "sdk-style"
+    #: The stream has more than one input subject (``fuse`` combinators etc.).
+    MULTI_INPUT = "multi-input"
+    #: ``fixed_instances > 1`` — fusing would change scaling semantics.
+    FIXED_INSTANCES = "fixed-instances"
+    #: The upstream subject has >1 consumer (or none); it must stay on the bus.
+    MULTI_SUBSCRIBER = "multi-subscriber"
+    #: The upstream subject is ``.tap()``-promised to external subscribers.
+    TAPPED = "tapped"
+    #: The upstream subject is durable; its log only fills on real publishes.
+    DURABLE = "durable"
+    #: The consumer replays history (``replay_from``); folding it mid-segment
+    #: would re-anchor the replay onto the segment entry's subject.
+    REPLAY = "replay"
+    #: The keyed consumer re-partitions on its input (different key field, or
+    #: a keyed consumer of an unkeyed stage).
+    REPARTITION = "repartition"
+
+    @property
+    def explain(self) -> str:
+        """One operator-facing sentence for this barrier."""
+        return _BARRIER_EXPLANATIONS[self]
+
+    def __str__(self) -> str:  # noqa: D105 - delegate to the explanation
+        return f"{self.name}: {self.explain}"
+
+
+_BARRIER_EXPLANATIONS: dict[BarrierReason, str] = {
+    BarrierReason.NOT_DEVICE:
+        "the stage is not DEVICE-placed, so it runs on the bus",
+    BarrierReason.STATEFUL:
+        "the stage declares stateful=True and fused programs must be pure",
+    BarrierReason.FUSED_UNIT:
+        "the stage is already a fused unit and is never re-fused",
+    BarrierReason.SDK_STYLE:
+        "the stage's logic owns its own consume loop and cannot be chained",
+    BarrierReason.MULTI_INPUT:
+        "the stage consumes more than one input subject",
+    BarrierReason.FIXED_INSTANCES:
+        "fixed_instances > 1 — fusing would change scaling semantics",
+    BarrierReason.MULTI_SUBSCRIBER:
+        "the upstream subject has more than one consumer (or none) and must "
+        "stay on the bus",
+    BarrierReason.TAPPED:
+        "the upstream subject is .tap()-promised to external subscribers",
+    BarrierReason.DURABLE:
+        "the upstream subject is durable; its append-only log only fills if "
+        "publishes hit the bus",
+    BarrierReason.REPLAY:
+        "the consumer replays history from its own input subject's log",
+    BarrierReason.REPARTITION:
+        "the keyed consumer re-partitions on its input (key differs from the "
+        "upstream's, or the upstream is unkeyed)",
+}
+
+
+def consumer_counts(app: Application) -> dict[str, int]:
+    """How many streams + gadgets consume each subject of ``app``."""
     counts: dict[str, int] = {}
     for s in app.streams:
         for i in s.inputs:
@@ -234,15 +310,78 @@ def _consumers(app: Application) -> dict[str, int]:
     return counts
 
 
-def _fusible(spec: StreamSpec, aus: Mapping[str, AnalyticsUnitSpec]) -> bool:
+def stream_barrier(spec: StreamSpec,
+                   aus: Mapping[str, AnalyticsUnitSpec]) -> BarrierReason | None:
+    """Why ``spec`` can never be a fused-segment stage (None = fusible).
+
+    These are properties of the stream/AU alone; :func:`edge_barrier` adds
+    the edge-level reasons that depend on the upstream subject.
+    """
     au = aus.get(spec.analytics_unit)
-    return (au is not None
-            and au.placement is Placement.DEVICE
-            and not au.stateful
-            and not au.fused_stages          # never re-fuse a fused unit
-            and not is_sdk_style(au.logic)   # owns its own loop — can't chain
-            and len(spec.inputs) == 1
-            and spec.fixed_instances in (None, 1))
+    if au is None or au.placement is not Placement.DEVICE:
+        return BarrierReason.NOT_DEVICE
+    if au.fused_stages:                  # never re-fuse a fused unit
+        return BarrierReason.FUSED_UNIT
+    if au.stateful:
+        return BarrierReason.STATEFUL
+    if is_sdk_style(au.logic):           # owns its own loop — can't chain
+        return BarrierReason.SDK_STYLE
+    if len(spec.inputs) != 1:
+        return BarrierReason.MULTI_INPUT
+    if spec.fixed_instances not in (None, 1):
+        return BarrierReason.FIXED_INSTANCES
+    return None
+
+
+def edge_barrier(upstream: StreamSpec, nxt: StreamSpec,
+                 aus: Mapping[str, AnalyticsUnitSpec], *,
+                 consumers: Mapping[str, int],
+                 taps: Iterable[str] = ()) -> BarrierReason | None:
+    """Why ``nxt`` cannot extend a fused segment through ``upstream``.
+
+    Returns None when the edge fuses.  ``consumers`` is
+    :func:`consumer_counts` of the application; ``taps`` the promised
+    subjects.  Subsumes :func:`stream_barrier` of ``nxt``.
+    """
+    if upstream.name in taps:
+        # promised to external subscribers — must remain a bus subject
+        return BarrierReason.TAPPED
+    if consumers.get(upstream.name, 0) != 1:
+        return BarrierReason.MULTI_SUBSCRIBER
+    if upstream.durable:
+        # a durable interior stream is a promise just like a tap: its
+        # append-only log only fills if publishes hit the bus subject,
+        # so it must stay a segment boundary
+        return BarrierReason.DURABLE
+    reason = stream_barrier(nxt, aus)
+    if reason is not None:
+        return reason
+    if nxt.replay_from is not None:
+        # a replaying consumer starts on its OWN input subjects' logs;
+        # folding it mid-segment would re-anchor the replay onto the
+        # segment entry's subject.  It may still head its own segment
+        # (the fused unit inherits the entry's replay_from).
+        return BarrierReason.REPLAY
+    if nxt.delivery == "keyed" and not (upstream.delivery == "keyed"
+                                        and upstream.key == nxt.key):
+        # a keyed consumer re-partitions on ITS input.  If the chain is
+        # uniformly keyed on the SAME field (the DSL propagates .key_by
+        # through stateless stages), the fused unit inherits the entry's
+        # key policy and hashes once at entry — equivalent to per-stage
+        # hashing as long as interior stages don't rewrite the key
+        # field's VALUE (rewriting it while keeping the field in the
+        # schema re-partitions mid-chain in the unfused graph; keep such
+        # a stage out of the device chain or .tap() it).  A different
+        # key field (or a keyed consumer of an unkeyed stage) is a
+        # genuine re-partition point: the interior stream must stay a
+        # bus subject (segment barrier).  Pairwise same-key induction
+        # keeps every fused segment uniformly keyed back to its entry.
+        return BarrierReason.REPARTITION
+    return None
+
+
+def _fusible(spec: StreamSpec, aus: Mapping[str, AnalyticsUnitSpec]) -> bool:
+    return stream_barrier(spec, aus) is None
 
 
 def plan_segments(app: Application,
@@ -255,40 +394,15 @@ def plan_segments(app: Application,
     taps = set(taps)
     aus = {a.name: a for a in app.analytics_units}
     streams = {s.name: s for s in app.streams}
-    consumers = _consumers(app)
+    consumers = consumer_counts(app)
 
     def extendable(upstream: StreamSpec) -> StreamSpec | None:
         """The unique fusible successor of ``upstream``, or None (barrier)."""
-        if consumers.get(upstream.name, 0) != 1 or upstream.name in taps:
-            return None  # multi-subscriber tap / promised bus subject
-        if upstream.durable:
-            # a durable interior stream is a promise just like a tap: its
-            # append-only log only fills if publishes hit the bus subject,
-            # so it must stay a segment boundary
-            return None
         nxt = next((s for s in app.streams if upstream.name in s.inputs), None)
-        if nxt is None or not _fusible(nxt, aus):
-            return None
-        if nxt.replay_from is not None:
-            # a replaying consumer starts on its OWN input subjects' logs;
-            # folding it mid-segment would re-anchor the replay onto the
-            # segment entry's subject.  It may still head its own segment
-            # (the fused unit inherits the entry's replay_from).
-            return None
-        if nxt.delivery == "keyed" and not (upstream.delivery == "keyed"
-                                            and upstream.key == nxt.key):
-            # a keyed consumer re-partitions on ITS input.  If the chain is
-            # uniformly keyed on the SAME field (the DSL propagates .key_by
-            # through stateless stages), the fused unit inherits the entry's
-            # key policy and hashes once at entry — equivalent to per-stage
-            # hashing as long as interior stages don't rewrite the key
-            # field's VALUE (rewriting it while keeping the field in the
-            # schema re-partitions mid-chain in the unfused graph; keep such
-            # a stage out of the device chain or .tap() it).  A different
-            # key field (or a keyed consumer of an unkeyed stage) is a
-            # genuine re-partition point: the interior stream must stay a
-            # bus subject (segment barrier).  Pairwise same-key induction
-            # keeps every fused segment uniformly keyed back to its entry.
+        if nxt is None:
+            return None  # consumed only by gadgets / external subscribers
+        if edge_barrier(upstream, nxt, aus,
+                        consumers=consumers, taps=taps) is not None:
             return None
         return nxt
 
@@ -839,7 +953,7 @@ def fuse_application(app: Application, *,
             name=exit_.name, analytics_unit=name, inputs=tuple(entry.inputs),
             fixed_instances=1 if any(s.fixed_instances == 1 for s in segment)
             else None,
-            delivery=entry.delivery, key=entry.key,
+            delivery=entry.delivery, key=entry.key, steal=entry.steal,
             max_batch=seg_max_batch,
             durable=exit_.durable, retention=exit_.retention,
             replay_from=entry.replay_from))

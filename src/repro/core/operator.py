@@ -33,7 +33,7 @@ import time
 from typing import Any, Callable, Mapping
 
 from .bus import MessageBus
-from .delivery import ReplayFrom, resolve_replay
+from .delivery import Group, Keyed, ReplayFrom, resolve_replay
 from .durable import DurableError, Retention, resolve_replay_from
 from .entities import (ActuatorSpec, AnalyticsUnitSpec, DatabaseSpec,
                        DriverSpec, GadgetSpec, Placement, SensorSpec,
@@ -80,6 +80,10 @@ class Operator:
         self._resolved: dict[str, dict] = {}
         # events observed by tests/ops tooling
         self.events: list[tuple[float, str, str]] = []
+        # datax-check diagnostic summaries recorded at deploy, per app name,
+        # plus a node -> entries view pushed onto instance sidecars at spawn
+        self._diagnostics: dict[str, list[dict]] = {}
+        self._diag_by_node: dict[str, list[dict]] = {}
         self._pending_sensors: list[str] = []
         self._reconciler: threading.Thread | None = None
         self._stop = threading.Event()
@@ -330,6 +334,11 @@ class Operator:
             if spec.retention is not None and not spec.durable:
                 raise OperatorError(
                     f"stream {spec.name!r}: retention= requires durable=True")
+            if spec.steal and spec.delivery == "broadcast":
+                raise OperatorError(
+                    f"stream {spec.name!r}: steal=True needs a queue group "
+                    f"to steal from; broadcast instances each see every "
+                    f"message already")
             missing = [s for s in spec.inputs if s not in self._stream_names()]
             if missing:
                 raise CoherenceError(
@@ -400,13 +409,23 @@ class Operator:
         # database, so a rebalanced partition finds its per-key state).
         # Other streams consuming the same inputs use their own group names
         # and still see every message (§3 reuse broadcast across groups).
-        return self.executor.start_instance(
+        # The typed policy carries spec.steal through to bus.subscribe —
+        # the legacy group=/key= spelling had no way to say it.
+        if spec.delivery == "keyed":
+            policy = Keyed(spec.name, spec.key, steal=spec.steal)
+        elif spec.delivery == "group":
+            policy = Group(spec.name, steal=spec.steal)
+        else:
+            policy = None
+        handle = self.executor.start_instance(
             entity_kind="analytics_unit", entity_name=au.name, owner=spec.name,
             logic=au.logic, config=dict(resolved), inputs=tuple(spec.inputs),
             output=spec.name, db=db or self._db_for(resolved),
-            group=spec.name if spec.delivery in ("group", "keyed") else None,
-            key=spec.key if spec.delivery == "keyed" else None,
-            max_batch=spec.max_batch, replay_from=replay_from)
+            policy=policy, max_batch=spec.max_batch, replay_from=replay_from)
+        diags = self._diag_by_node.get(f"stream/{spec.name}")
+        if diags:
+            handle.sidecar.note_diagnostics(diags)
+        return handle
 
     def register_gadget(self, spec: GadgetSpec) -> None:
         """Create a gadget: validate its actuator + input streams and
@@ -687,7 +706,50 @@ class Operator:
                 "gadgets": sorted(self._gadgets),
                 "databases": sorted(self._databases),
                 "instances": [h.instance_id for h in self.executor.all_instances()],
+                "diagnostics": {
+                    app: {
+                        "error": sum(1 for d in diags
+                                     if d["severity"] == "error"),
+                        "warning": sum(1 for d in diags
+                                       if d["severity"] == "warning"),
+                        "info": sum(1 for d in diags
+                                    if d["severity"] == "info"),
+                    } for app, diags in self._diagnostics.items()},
             }
+
+    def record_diagnostics(self, app_name: str, diagnostics) -> None:
+        """Record an app's ``datax check`` diagnostic summary at deploy time.
+
+        ``Application.deploy`` calls this with the analyzer's findings so
+        the flagged hazards stay visible on the running deployment:
+        :meth:`diagnostics` returns the full records, :meth:`describe`
+        carries per-app severity counts, and instances spawned afterwards
+        expose their own stream's findings in sidecar ``metrics()``
+        (the REST-analog ops surface).  Accepts
+        :class:`~.analyze.Diagnostic` records or their ``to_json`` dicts.
+        """
+        entries = [d.to_json() if hasattr(d, "to_json") else dict(d)
+                   for d in diagnostics]
+        with self._lock:
+            self._diagnostics[app_name] = entries
+            self._diag_by_node = {}
+            for diags in self._diagnostics.values():
+                for e in diags:
+                    self._diag_by_node.setdefault(e["node"], []).append(e)
+        if entries:
+            rank = {"info": 0, "warning": 1, "error": 2}
+            worst = max((e["severity"] for e in entries),
+                        key=lambda s: rank.get(s, -1))
+            self._event("diagnostics",
+                        f"app/{app_name} ({len(entries)} finding(s), "
+                        f"worst={worst})")
+
+    def diagnostics(self) -> dict:
+        """Deploy-time ``datax check`` findings per app name (JSON dicts,
+        see :meth:`record_diagnostics`)."""
+        with self._lock:
+            return {app: list(diags)
+                    for app, diags in self._diagnostics.items()}
 
     def registered_streams(self) -> list[str]:
         """Everything subscribable — the paper's stream-reuse surface (§3)."""

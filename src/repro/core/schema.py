@@ -59,6 +59,11 @@ class ShardSpec:
     """
 
     axes: tuple
+    #: True when this spec was coerced from a legacy bare tuple spelling
+    #: (``sharding=("data", None)``); the ``datax check`` DX402 hygiene rule
+    #: flags such call sites statically.  Excluded from equality/repr so
+    #: coerced specs still compare equal to explicit ones.
+    legacy: bool = dataclasses.field(default=False, compare=False, repr=False)
 
     def __post_init__(self) -> None:
         axes = tuple(self.axes)
@@ -98,7 +103,7 @@ def _coerce_sharding(value) -> "ShardSpec | None":
             "bare sharding tuples are deprecated; pass "
             f"sharding=ShardSpec({tuple(value)!r})",
             DeprecationWarning, stacklevel=4)
-        return ShardSpec(tuple(value))
+        return ShardSpec(tuple(value), legacy=True)
     raise ValueError(f"sharding must be a ShardSpec (or legacy tuple), "
                      f"got {type(value).__name__}")
 
@@ -174,9 +179,9 @@ class FieldSpec:
         if self.shape is not None:
             if other.shape is None or len(self.shape) != len(other.shape):
                 return False
-            for want, got in zip(self.shape, other.shape):
-                if want != -1 and want != got:
-                    return False
+            if any(want != -1 and want != got
+                   for want, got in zip(self.shape, other.shape)):
+                return False
         if self.dtype is not None and self.dtype != other.dtype:
             return False
         return True
@@ -350,10 +355,8 @@ class ConfigSchema:
             if old_t != tname:
                 return False
         # type changes on shared fields break compatibility
-        for name, (tname, _) in self.fields.items():
-            if name in old.fields and old.fields[name][0] != tname:
-                return False
-        return True
+        return all(name not in old.fields or old.fields[name][0] == tname
+                   for name, (tname, _) in self.fields.items())
 
 
 # ---------------------------------------------------------------------------

@@ -11,6 +11,7 @@ metrics also drive the auto-scaling process".
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import itertools
 import threading
@@ -187,10 +188,8 @@ class Executor:
             # recorded separately so compile time never skews the latency
             # EWMA that drives straggler replacement
             t0 = time.monotonic()
-            try:
+            with contextlib.suppress(Exception):
                 warm()
-            except Exception:
-                pass
             sidecar.record_warmup(time.monotonic() - t0)
         sidecar.attach_process_stats(getattr(process, "stats", None))
         batch_fn = getattr(process, "process_batch", None)

@@ -68,6 +68,9 @@ class Sidecar:
         ]
         self._rr = 0  # round-robin cursor over input subscriptions
         self._lock = threading.Lock()
+        # deploy-time datax-check findings for this instance's stream
+        # (operator pushes them at spawn via note_diagnostics)
+        self.diagnostics: list[dict] = []
         # metrics
         self.published = 0
         self.processed = 0
@@ -301,9 +304,20 @@ class Sidecar:
                     if stats.get("last_snapshot_ts") else None),
                 # federated transport view (remote buses only, else None)
                 "transport": self._transport_metrics(),
+                # deploy-time datax-check findings anchored at this
+                # instance's stream (code + severity; full records on
+                # Operator.diagnostics())
+                "diagnostics": [{"code": d.get("code"),
+                                 "severity": d.get("severity")}
+                                for d in self.diagnostics],
                 "uptime_s": time.monotonic() - self.started_at,
                 "idle_s": time.monotonic() - self.last_activity,
             }
+
+    def note_diagnostics(self, entries) -> None:
+        """Attach deploy-time ``datax check`` findings (JSON dicts) for
+        this instance's stream; surfaced in :meth:`metrics`."""
+        self.diagnostics = [dict(e) for e in entries]
 
     def healthy(self, stall_timeout_s: float = 60.0) -> bool:
         m = self.metrics()

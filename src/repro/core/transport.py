@@ -41,6 +41,7 @@ layer does: acknowledge only after the message's effect is recorded.
 """
 from __future__ import annotations
 
+import contextlib
 import itertools
 import os
 import socket
@@ -565,11 +566,9 @@ class BusServer:
                 if sub.closed and sub.qsize() == 0:
                     # subject unregistered / bus closed underneath us — tell
                     # the client so its consumer unblocks instead of hanging
-                    try:
+                    with contextlib.suppress(OSError):
                         self._send(peer, {"op": "sub_closed",
                                           "sid": proxy.sid})
-                    except OSError:
-                        pass
                     return
                 continue
             # in-flight BEFORE enqueue: if the connection dies anywhere
@@ -673,10 +672,8 @@ class BusServer:
             self.disconnects += 1
         for sid in list(peer.subs):
             self._retire_proxy(peer, sid, clean=False)
-        try:
+        with contextlib.suppress(OSError):
             peer.conn.close()
-        except OSError:
-            pass
 
     def _reap_loop(self) -> None:
         while not self._closed.wait(min(1.0, self.hb_timeout / 4)):
@@ -688,10 +685,8 @@ class BusServer:
                 self.reaped += 1
                 _dbg(f"server: reaping {peer.name} "
                      f"(silent {now - peer.last_seen:.1f}s)")
-                try:
+                with contextlib.suppress(OSError):
                     peer.conn.shutdown(socket.SHUT_RDWR)
-                except OSError:
-                    pass
                 self._drop_peer(pid, peer)
 
     # -- introspection / lifecycle -------------------------------------------
@@ -735,17 +730,13 @@ class BusServer:
     def close(self) -> None:
         """Stop accepting, drop every peer (reaping their proxies)."""
         self._closed.set()
-        try:
+        with contextlib.suppress(OSError):
             self._listener.close()
-        except OSError:
-            pass
         with self._lock:
             peers = list(self._peers.items())
         for pid, peer in peers:
-            try:
+            with contextlib.suppress(OSError):
                 peer.conn.shutdown(socket.SHUT_RDWR)
-            except OSError:
-                pass
             self._drop_peer(pid, peer)
 
 
@@ -1064,14 +1055,10 @@ class RemoteBus:
             # shutdown() before close(): the reader thread still holds the
             # fd, so a bare close() would neither send FIN to the server nor
             # unblock the local recv — the peer would linger until reaped
-            try:
+            with contextlib.suppress(OSError):
                 sock.shutdown(socket.SHUT_RDWR)
-            except OSError:
-                pass
-            try:
+            with contextlib.suppress(OSError):
                 sock.close()
-            except OSError:
-                pass
         for event, slot in waiters:
             slot.append(TransportError(f"connection lost: {reason}"))
             event.set()
@@ -1263,10 +1250,8 @@ class RemoteBus:
 
     def revoke_token(self, token: str) -> None:
         """Invalidate a remote token (best-effort when disconnected)."""
-        try:
+        with contextlib.suppress(TransportError):
             self._rpc("revoke_token", token=token)
-        except TransportError:
-            pass
 
     def subscribe(self, subject: str, *, token: str,
                   maxsize: int | None = None, wire: bool = False,
@@ -1374,10 +1359,8 @@ class RemoteBus:
 
     def note_lost(self, subject: str, n: int = 1) -> None:
         """Forward poison-message loss accounting to the remote subject."""
-        try:
+        with contextlib.suppress(TransportError):
             self._send_frame({"op": "note_lost", "subject": subject, "n": n})
-        except TransportError:
-            pass
 
     def group_info(self, subject: str, group: str) -> dict | None:
         """Snapshot of a remote queue group (RPC)."""
@@ -1436,10 +1419,8 @@ class RemoteBus:
             return
         for sub in list(self._subs.values()):
             self.unsubscribe(sub)
-        try:
+        with contextlib.suppress(TransportError):
             self._send_frame({"op": "bye"})
-        except TransportError:
-            pass
         self._closed = True
         self._drop_connection("closed")
 

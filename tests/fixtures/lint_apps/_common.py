@@ -1,0 +1,29 @@
+"""Shared stand-in logic factories for the lint-app fixture corpus.
+
+Each fixture module plants exactly ONE hazard and declares it in its
+``EXPECT`` attribute; ``tests/test_analyze.py`` asserts the analyzer fires
+that code and nothing else.  The logic bodies here never run — the fixtures
+are only ever *analyzed*, not deployed.
+"""
+
+
+def gen_factory(ctx):
+    """Driver logic: a one-shot generator (never actually pulled)."""
+    def g():
+        yield {"x": 1}
+    return g()
+
+
+def passthrough(ctx):
+    """AU logic: identity transform."""
+    return lambda stream, payload: payload
+
+
+def folder(ctx):
+    """AU logic for stateful reduce-style stages."""
+    return lambda stream, payload: payload
+
+
+def sink(ctx):
+    """Actuator logic: swallow every insight."""
+    return lambda stream, payload: None

@@ -1,0 +1,25 @@
+"""DX101: a per-key stateful ``reduce`` stage running under plain group
+delivery — its KeyedStore folds are only exactly-once when every key
+sticks to one instance, which needs keyed delivery."""
+from repro.core import (ActuatorSpec, AnalyticsUnitSpec, Application,
+                        DriverSpec, GadgetSpec, SensorSpec, StreamSpec)
+
+from _common import folder, gen_factory, sink
+
+EXPECT = "DX101"
+
+
+def build_app() -> Application:
+    return Application(
+        name="dx101",
+        drivers=[DriverSpec(name="src", logic=gen_factory)],
+        analytics_units=[AnalyticsUnitSpec(
+            name="running-total", logic=folder,
+            stateful=True, combinator="reduce")],
+        actuators=[ActuatorSpec(name="sink", logic=sink)],
+        sensors=[SensorSpec(name="events", driver="src")],
+        streams=[StreamSpec(name="totals", analytics_unit="running-total",
+                            inputs=("events",), delivery="group")],
+        gadgets=[GadgetSpec(name="display", actuator="sink",
+                            inputs=("totals",))],
+    )

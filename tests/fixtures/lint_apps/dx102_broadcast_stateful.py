@@ -1,0 +1,24 @@
+"""DX102: broadcast delivery into a stateful pool that can scale past one
+instance — all instances share the stream's platform database, so every
+update is applied once per instance (state double-counting)."""
+from repro.core import (ActuatorSpec, AnalyticsUnitSpec, Application,
+                        DriverSpec, GadgetSpec, SensorSpec, StreamSpec)
+
+from _common import folder, gen_factory, sink
+
+EXPECT = "DX102"
+
+
+def build_app() -> Application:
+    return Application(
+        name="dx102",
+        drivers=[DriverSpec(name="src", logic=gen_factory)],
+        analytics_units=[AnalyticsUnitSpec(
+            name="counter", logic=folder, stateful=True, max_instances=4)],
+        actuators=[ActuatorSpec(name="sink", logic=sink)],
+        sensors=[SensorSpec(name="events", driver="src")],
+        streams=[StreamSpec(name="counts", analytics_unit="counter",
+                            inputs=("events",), delivery="broadcast")],
+        gadgets=[GadgetSpec(name="display", actuator="sink",
+                            inputs=("counts",))],
+    )

@@ -1,0 +1,28 @@
+"""DX103: ``steal=True`` on a plain-group stream feeding a keyed consumer —
+group stealing moves individual messages between members, perturbing the
+publish order the downstream keyed stage depends on."""
+from repro.core import (ActuatorSpec, AnalyticsUnitSpec, Application,
+                        DriverSpec, GadgetSpec, SensorSpec, StreamSpec)
+
+from _common import gen_factory, passthrough, sink
+
+EXPECT = "DX103"
+
+
+def build_app() -> Application:
+    return Application(
+        name="dx103",
+        drivers=[DriverSpec(name="src", logic=gen_factory)],
+        analytics_units=[
+            AnalyticsUnitSpec(name="normalize", logic=passthrough),
+            AnalyticsUnitSpec(name="route", logic=passthrough)],
+        actuators=[ActuatorSpec(name="sink", logic=sink)],
+        sensors=[SensorSpec(name="events", driver="src")],
+        streams=[
+            StreamSpec(name="normalized", analytics_unit="normalize",
+                       inputs=("events",), delivery="group", steal=True),
+            StreamSpec(name="routed", analytics_unit="route",
+                       inputs=("normalized",), delivery="keyed", key="x")],
+        gadgets=[GadgetSpec(name="display", actuator="sink",
+                            inputs=("routed",))],
+    )

@@ -1,0 +1,22 @@
+"""DX104: ``replay_from=`` on a stream whose input subject is never marked
+durable — there is no log to replay, so the stream would start empty."""
+from repro.core import (ActuatorSpec, AnalyticsUnitSpec, Application,
+                        DriverSpec, GadgetSpec, SensorSpec, StreamSpec)
+
+from _common import gen_factory, passthrough, sink
+
+EXPECT = "DX104"
+
+
+def build_app() -> Application:
+    return Application(
+        name="dx104",
+        drivers=[DriverSpec(name="src", logic=gen_factory)],
+        analytics_units=[AnalyticsUnitSpec(name="audit", logic=passthrough)],
+        actuators=[ActuatorSpec(name="sink", logic=sink)],
+        sensors=[SensorSpec(name="events", driver="src")],  # NOT durable
+        streams=[StreamSpec(name="audited", analytics_unit="audit",
+                            inputs=("events",), replay_from="earliest")],
+        gadgets=[GadgetSpec(name="display", actuator="sink",
+                            inputs=("audited",))],
+    )

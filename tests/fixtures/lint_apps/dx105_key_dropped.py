@@ -1,0 +1,30 @@
+"""DX105: a keyed stream whose key field is dropped by the upstream
+producer's schema — every message would hash on a missing field."""
+from repro.core import (ActuatorSpec, AnalyticsUnitSpec, Application,
+                        DriverSpec, FieldSpec, GadgetSpec, SensorSpec,
+                        StreamSchema, StreamSpec)
+
+from _common import gen_factory, passthrough, sink
+
+EXPECT = "DX105"
+
+READING = StreamSchema.of(value=FieldSpec("float"))
+
+
+def build_app() -> Application:
+    return Application(
+        name="dx105",
+        drivers=[DriverSpec(name="src", logic=gen_factory,
+                            output_schema=READING)],
+        analytics_units=[AnalyticsUnitSpec(
+            name="by-region", logic=passthrough,
+            input_schemas=(READING,))],
+        actuators=[ActuatorSpec(name="sink", logic=sink)],
+        sensors=[SensorSpec(name="readings", driver="src")],
+        # keyed on "region", but the producer only emits {"value"}
+        streams=[StreamSpec(name="regional", analytics_unit="by-region",
+                            inputs=("readings",), delivery="keyed",
+                            key="region")],
+        gadgets=[GadgetSpec(name="display", actuator="sink",
+                            inputs=("regional",))],
+    )

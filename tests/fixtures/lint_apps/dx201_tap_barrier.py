@@ -1,0 +1,29 @@
+"""DX201 (info): an adjacent DEVICE->DEVICE chain that does NOT fuse —
+the interior stream is ``.tap()``-promised, which is a fusion barrier the
+analyzer names explicitly (``TAPPED``)."""
+from repro.core import App
+
+EXPECT = "DX201"
+
+
+def build_app() -> App:
+    app = App("dx201")
+
+    def double(p):
+        return {"x": p["x"] * 2}
+
+    def halve(p):
+        return {"x": p["x"] / 2}
+
+    def src(ctx, n=4):
+        def g():
+            for i in range(n):
+                yield {"x": float(i)}
+        return g()
+
+    app.driver(src, name="src")
+    stage1 = app.sense("numbers", "src").map(double, name="doubled",
+                                             device=True)
+    stage1.tap()  # the promise that splits the device chain
+    stage1.map(halve, name="halved", device=True).tap()
+    return app

@@ -1,0 +1,28 @@
+"""DX301: a ShardSpec whose rank does not match its field's shape — the
+hint can never address the array, so sharded execution silently degrades."""
+from repro.core import (ActuatorSpec, AnalyticsUnitSpec, Application,
+                        DriverSpec, GadgetSpec, SensorSpec, ShardSpec,
+                        StreamSchema, StreamSpec)
+
+from _common import gen_factory, passthrough, sink
+
+EXPECT = "DX301"
+
+# 2-D field, 1-entry hint: rank mismatch
+FRAMES = StreamSchema.device(x=((8, 8), "float32", ShardSpec(("data",))))
+
+
+def build_app() -> Application:
+    return Application(
+        name="dx301",
+        drivers=[DriverSpec(name="src", logic=gen_factory,
+                            output_schema=FRAMES)],
+        analytics_units=[AnalyticsUnitSpec(
+            name="pass", logic=passthrough, input_schemas=(FRAMES,))],
+        actuators=[ActuatorSpec(name="sink", logic=sink)],
+        sensors=[SensorSpec(name="frames", driver="src")],
+        streams=[StreamSpec(name="passed", analytics_unit="pass",
+                            inputs=("frames",))],
+        gadgets=[GadgetSpec(name="display", actuator="sink",
+                            inputs=("passed",))],
+    )

@@ -1,0 +1,29 @@
+"""DX302: a mesh axis named on a size-1 dimension — no mesh larger than 1
+can ever divide it, so the hint silently degrades to replication."""
+from repro.core import (ActuatorSpec, AnalyticsUnitSpec, Application,
+                        DriverSpec, GadgetSpec, SensorSpec, ShardSpec,
+                        StreamSchema, StreamSpec)
+
+from _common import gen_factory, passthrough, sink
+
+EXPECT = "DX302"
+
+# leading dim has extent 1 but names the "data" axis
+FRAMES = StreamSchema.device(x=((1, 16), "float32",
+                                ShardSpec(("data", None))))
+
+
+def build_app() -> Application:
+    return Application(
+        name="dx302",
+        drivers=[DriverSpec(name="src", logic=gen_factory,
+                            output_schema=FRAMES)],
+        analytics_units=[AnalyticsUnitSpec(
+            name="pass", logic=passthrough, input_schemas=(FRAMES,))],
+        actuators=[ActuatorSpec(name="sink", logic=sink)],
+        sensors=[SensorSpec(name="frames", driver="src")],
+        streams=[StreamSpec(name="passed", analytics_unit="pass",
+                            inputs=("frames",))],
+        gadgets=[GadgetSpec(name="display", actuator="sink",
+                            inputs=("passed",))],
+    )

@@ -1,0 +1,31 @@
+"""DX303: two stages of one fusible DEVICE chain declare different
+``max_batch`` values — fusion folds them onto one unit and the stage
+closest to the segment exit silently wins."""
+from repro.core import App
+
+EXPECT = "DX303"
+
+
+def build_app() -> App:
+    app = App("dx303")
+
+    def double(p):
+        return {"x": p["x"] * 2}
+
+    def halve(p):
+        return {"x": p["x"] / 2}
+
+    def src(ctx, n=4):
+        def g():
+            for i in range(n):
+                yield {"x": float(i)}
+        return g()
+
+    app.driver(src, name="src")
+    chain = app.sense("numbers", "src").map(double, name="doubled",
+                                            device=True)
+    chain.scaled(max_batch=32)   # upstream asks for deep bursts...
+    tail = chain.map(halve, name="halved", device=True)
+    tail.scaled(max_batch=1)     # ...downstream forces per-message dispatch
+    tail.tap()
+    return app

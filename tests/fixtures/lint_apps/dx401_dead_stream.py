@@ -1,0 +1,20 @@
+"""DX401: a stream nothing consumes — no downstream stream or gadget, no
+``.tap()`` promise, no durable log.  Every message is dropped on the
+floor."""
+from repro.core import App
+
+EXPECT = "DX401"
+
+
+def build_app() -> App:
+    app = App("dx401")
+
+    def src(ctx, n=4):
+        def g():
+            for i in range(n):
+                yield {"x": float(i)}
+        return g()
+
+    app.driver(src, name="src")
+    app.sense("numbers", "src").map(lambda p: p, name="orphan")
+    return app

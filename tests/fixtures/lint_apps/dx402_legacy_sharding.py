@@ -1,0 +1,36 @@
+"""DX402: a sharding hint spelled as a legacy bare tuple instead of a
+:class:`~repro.core.ShardSpec` — deprecated since the typed addressing API
+landed; the analyzer flags the call site statically."""
+import warnings
+
+from repro.core import (ActuatorSpec, AnalyticsUnitSpec, Application,
+                        DriverSpec, FieldSpec, GadgetSpec, SensorSpec,
+                        StreamSchema, StreamSpec)
+
+from _common import gen_factory, passthrough, sink
+
+EXPECT = "DX402"
+
+with warnings.catch_warnings():
+    # the legacy spelling warns at build time too — the fixture is about
+    # the STATIC diagnostic, so keep the runtime warning out of test logs
+    warnings.simplefilter("ignore", DeprecationWarning)
+    FRAMES = StreamSchema.of(x=FieldSpec("device", shape=(8, 16),
+                                         dtype="float32",
+                                         sharding=("data", None)))
+
+
+def build_app() -> Application:
+    return Application(
+        name="dx402",
+        drivers=[DriverSpec(name="src", logic=gen_factory,
+                            output_schema=FRAMES)],
+        analytics_units=[AnalyticsUnitSpec(
+            name="pass", logic=passthrough, input_schemas=(FRAMES,))],
+        actuators=[ActuatorSpec(name="sink", logic=sink)],
+        sensors=[SensorSpec(name="frames", driver="src")],
+        streams=[StreamSpec(name="passed", analytics_unit="pass",
+                            inputs=("frames",))],
+        gadgets=[GadgetSpec(name="display", actuator="sink",
+                            inputs=("passed",))],
+    )

@@ -1,0 +1,24 @@
+"""DX403: retention knobs on a subject that is not durable — there is no
+log for the retention policy to bound, so the knobs silently do nothing."""
+from repro.core import (ActuatorSpec, AnalyticsUnitSpec, Application,
+                        DriverSpec, GadgetSpec, SensorSpec, StreamSpec)
+
+from _common import gen_factory, passthrough, sink
+
+EXPECT = "DX403"
+
+
+def build_app() -> Application:
+    return Application(
+        name="dx403",
+        drivers=[DriverSpec(name="src", logic=gen_factory)],
+        analytics_units=[AnalyticsUnitSpec(name="pass", logic=passthrough)],
+        actuators=[ActuatorSpec(name="sink", logic=sink)],
+        # retention without durable=True: nothing is ever retained
+        sensors=[SensorSpec(name="events", driver="src",
+                            retention={"max_records": 128})],
+        streams=[StreamSpec(name="passed", analytics_unit="pass",
+                            inputs=("events",))],
+        gadgets=[GadgetSpec(name="display", actuator="sink",
+                            inputs=("passed",))],
+    )

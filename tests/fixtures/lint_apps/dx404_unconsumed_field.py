@@ -1,0 +1,29 @@
+"""DX404 (info): a producer schema field no typed consumer ever reads —
+serialized, published, and dropped on every message."""
+from repro.core import (ActuatorSpec, AnalyticsUnitSpec, Application,
+                        DriverSpec, FieldSpec, GadgetSpec, SensorSpec,
+                        StreamSchema, StreamSpec)
+
+from _common import gen_factory, passthrough, sink
+
+EXPECT = "DX404"
+
+FULL = StreamSchema.of(value=FieldSpec("float"), debug_blob=FieldSpec("str"))
+SLIM = StreamSchema.of(value=FieldSpec("float"))
+
+
+def build_app() -> Application:
+    return Application(
+        name="dx404",
+        drivers=[DriverSpec(name="src", logic=gen_factory,
+                            output_schema=FULL)],
+        # the only consumer declares SLIM: "debug_blob" is never read
+        analytics_units=[AnalyticsUnitSpec(
+            name="pass", logic=passthrough, input_schemas=(SLIM,))],
+        actuators=[ActuatorSpec(name="sink", logic=sink)],
+        sensors=[SensorSpec(name="readings", driver="src")],
+        streams=[StreamSpec(name="passed", analytics_unit="pass",
+                            inputs=("readings",))],
+        gadgets=[GadgetSpec(name="display", actuator="sink",
+                            inputs=("passed",))],
+    )

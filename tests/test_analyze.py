@@ -1,0 +1,465 @@
+"""datax check: the build-time dataflow analyzer (repro.core.analyze).
+
+Covers the seeded-bug fixture corpus (each fixture fires exactly its
+planted DX code), the shipped examples (no error-severity findings), the
+BarrierReason refactor (explanations match actual fusion behavior), the
+three integration layers (strict build, CLI, operator/sidecar recording),
+and the steal= plumbing that rode along.
+"""
+import importlib.util
+import json
+import logging
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.core import App, Operator, connect
+from repro.core.analyze import (Diagnostic, DiagnosticsError, Severity,
+                                analyze_application, analyze_target,
+                                has_errors, scan_ignores)
+from repro.core.dsl import DSLError
+from repro.core.fusion import (BarrierReason, consumer_counts, edge_barrier,
+                               plan_segments, stream_barrier)
+from repro.core.operator import OperatorError
+
+REPO = Path(__file__).resolve().parent.parent
+FIXTURES = sorted((REPO / "tests" / "fixtures" / "lint_apps").glob("dx*.py"))
+EXAMPLES = REPO / "examples"
+SRC = REPO / "src"
+
+
+def _load(path: Path):
+    sys.path.insert(0, str(path.parent))
+    try:
+        spec = importlib.util.spec_from_file_location(path.stem, path)
+        mod = importlib.util.module_from_spec(spec)
+        spec.loader.exec_module(mod)
+        return mod
+    finally:
+        sys.path.remove(str(path.parent))
+
+
+def _codes(diags):
+    return {d.code for d in diags}
+
+
+def _analyze_obj(obj):
+    out = []
+    for _, application, taps in analyze_target(obj):
+        out.extend(analyze_application(application, taps=taps))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Seeded-bug corpus: each fixture fires exactly its planted code
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("path", FIXTURES, ids=[p.stem for p in FIXTURES])
+def test_fixture_fires_exactly_its_code(path):
+    mod = _load(path)
+    diags = _analyze_obj(mod.build_app)
+    assert diags, f"{path.stem} produced no diagnostics"
+    assert _codes(diags) == {mod.EXPECT}, (
+        f"{path.stem}: expected only {mod.EXPECT}, got "
+        f"{[d.format() for d in diags]}")
+
+
+def test_fixture_corpus_covers_every_rule():
+    from repro.core.analyze import RULES
+    planted = {_load(p).EXPECT for p in FIXTURES}
+    assert planted == set(RULES), (
+        f"rules without a fixture: {set(RULES) - planted}")
+
+
+def test_diagnostic_shape():
+    mod = _load(FIXTURES[0])
+    d = _analyze_obj(mod.build_app)[0]
+    assert isinstance(d, Diagnostic)
+    assert d.code == mod.EXPECT and d.severity is Severity.ERROR
+    assert d.node.startswith(("stream/", "sensor/", "field/"))
+    j = d.to_json()
+    assert j["severity"] == "error" and j["app"] == "dx101"
+    assert d.code in d.format() and d.fixit in d.format()
+
+
+# ---------------------------------------------------------------------------
+# Shipped examples stay error-free (the zero-false-positive gate)
+# ---------------------------------------------------------------------------
+
+def _example_paths():
+    always = ["quickstart.py", "fever_screening.py", "stream_reuse.py",
+              "replay_corpus.py"]
+    return [EXAMPLES / n for n in always]
+
+
+@pytest.mark.parametrize("path", _example_paths(),
+                         ids=[p.stem for p in _example_paths()])
+def test_examples_have_no_error_diagnostics(path):
+    from repro.core.analyze import _discover
+    mod = _load(path)
+    targets = _discover(mod)
+    assert targets, f"{path.name}: no checkable app discovered"
+    for _, obj in targets:
+        diags = _analyze_obj(obj)
+        errors = [d.format() for d in diags
+                  if d.severity >= Severity.ERROR]
+        warnings = [d.format() for d in diags
+                    if d.severity == Severity.WARNING]
+        assert not errors, f"{path.name}: {errors}"
+        assert not warnings, f"{path.name}: {warnings}"
+
+
+def test_valid_dsl_graphs_are_error_free():
+    """Property-style: representative *valid* graphs across the DSL surface
+    (plain chain, keyed stateful, durable+replay, fused device chain,
+    stolen keyed pool) carry no error-severity diagnostics."""
+    def src(ctx, n=4):
+        def g():
+            for i in range(n):
+                yield {"k": str(i % 2), "x": float(i)}
+        return g()
+
+    def sink_factory(ctx):
+        return lambda s, p: None
+
+    # plain chain into a gadget
+    a1 = App("valid-chain")
+    a1.driver(src, name="src")
+    a1.actuator(sink_factory, name="sink")
+    a1.sense("ev", "src").map(lambda p: p, name="m") >> a1.gadget(
+        "g", "sink")
+    # keyed stateful reduce, scaled, stealing
+    a2 = App("valid-keyed")
+    a2.driver(src, name="src")
+    (a2.sense("ev", "src").key_by("k")
+     .reduce(lambda acc, p: (acc or 0) + p["x"], name="sums")
+     .scaled(instances=2, steal=True).tap())
+    # durable feed + replaying consumer
+    a3 = App("valid-durable")
+    a3.driver(src, name="src")
+    feed = a3.sense("ev", "src").durable(retention={"max_records": 64})
+    feed.map(lambda p: p, name="late").replay(from_="earliest").tap()
+    # fusible device chain with one max_batch declaration
+    a4 = App("valid-device")
+    a4.driver(src, name="src")
+    (a4.sense("ev", "src")
+     .map(lambda p: {"x": p["x"] * 2}, name="d1", device=True)
+     .map(lambda p: {"x": p["x"] + 1}, name="d2", device=True)
+     .scaled(max_batch=16).tap())
+    for app in (a1, a2, a3, a4):
+        diags = _analyze_obj(app)
+        errs = [d.format() for d in diags if d.severity >= Severity.ERROR]
+        assert not errs, f"{app.name}: {errs}"
+        app.build(strict=True)  # and strict build agrees
+
+
+# ---------------------------------------------------------------------------
+# BarrierReason: explanations match actual fusion behavior
+# ---------------------------------------------------------------------------
+
+def _representative_app():
+    app = App("barriers")
+
+    def src(ctx, n=2):
+        def g():
+            for i in range(n):
+                yield {"k": str(i), "x": float(i)}
+        return g()
+
+    def sink_factory(ctx):
+        return lambda s, p: None
+
+    app.driver(src, name="src")
+    app.actuator(sink_factory, name="sink")
+    # fusible pair, a tapped mid-chain subject (DEVICE-DEVICE edge that
+    # cannot fuse), a keyed fusible pair, then a host exit into a gadget
+    chain = (app.sense("ev", "src")
+             .map(lambda p: p, name="d1", device=True)
+             .map(lambda p: p, name="d2", device=True))
+    chain.tap()
+    tail = (chain.key_by("k")
+            .map(lambda p: p, name="d3", device=True)
+            .map(lambda p: p, name="d4", device=True))
+    tail.map(lambda p: p, name="h1") >> app.gadget("g", "sink")
+    return app
+
+
+def test_barrier_reasons_match_fusion_behavior():
+    app = _representative_app()
+    application = app._compile()
+    taps = frozenset(app._taps)
+    aus = {a.name: a for a in application.analytics_units}
+    streams = {s.name: s for s in application.streams}
+    consumers = consumer_counts(application)
+    segments = plan_segments(application, taps=taps)
+    seg_of = {s.name: i for i, seg in enumerate(segments) for s in seg}
+    # every adjacent stream->stream edge: fused together iff no barrier
+    for down in application.streams:
+        for subject in down.inputs:
+            up = streams.get(subject)
+            if up is None:
+                continue
+            fused_together = (seg_of.get(up.name) is not None
+                              and seg_of.get(up.name) == seg_of.get(
+                                  down.name))
+            reason = stream_barrier(up, aus) or edge_barrier(
+                up, down, aus, consumers=consumers, taps=taps)
+            if fused_together:
+                assert reason is None, (up.name, down.name, reason)
+            else:
+                assert reason is not None, (up.name, down.name)
+    # the planted barriers come out by name
+    by_edge = {}
+    for down in application.streams:
+        for subject in down.inputs:
+            up = streams.get(subject)
+            if up is not None:
+                by_edge[(up.name, down.name)] = (
+                    stream_barrier(up, aus) or edge_barrier(
+                        up, down, aus, consumers=consumers, taps=taps))
+    assert by_edge[("d1", "d2")] is None
+    assert by_edge[("d2", "d3")] is BarrierReason.TAPPED
+    assert by_edge[("d3", "d4")] is None  # uniformly keyed chain fuses
+    assert by_edge[("d4", "h1")] is BarrierReason.NOT_DEVICE
+    assert str(BarrierReason.TAPPED).startswith("TAPPED: ")
+    assert BarrierReason.TAPPED.explain
+
+
+def test_dx201_names_the_barrier():
+    app = _representative_app()
+    diags = [d for d in _analyze_obj(app) if d.code == "DX201"]
+    assert len(diags) == 1            # only the d2 -> d3 edge needs a story
+    assert "'d2' -> 'd3'" in diags[0].message
+    assert "TAPPED" in diags[0].message
+    # fused-together pairs and host edges are not second-guessed
+    assert diags[0].node == "stream/d3"
+
+
+# ---------------------------------------------------------------------------
+# Integration layer 1: App.build(strict=)
+# ---------------------------------------------------------------------------
+
+def _app_with_error():
+    from repro.core import ShardSpec, StreamSchema
+    app = App("strict-bad")
+
+    def src(ctx):
+        def g():
+            yield {"x": 1.0}
+        return g()
+
+    # rank-mismatched ShardSpec: DX301 (error severity), but still a graph
+    # the legacy validators accept
+    bad = StreamSchema.device(x=((8, 8), "float32", ShardSpec(("data",))))
+    app.driver(src, name="src", emits=bad)
+    app.sense("ev", "src").map(lambda p: p, name="m").tap()
+    return app
+
+
+def test_build_strict_raises_on_error_diagnostics():
+    with pytest.raises(DiagnosticsError) as ei:
+        _app_with_error().build(strict=True)
+    assert any(d.code == "DX301" for d in ei.value.diagnostics)
+
+
+def test_build_default_logs_and_succeeds(caplog):
+    with caplog.at_level(logging.WARNING, logger="repro.core.analyze"):
+        application = _app_with_error().build()
+    assert application.streams  # built anyway
+    assert any("DX301" in r.message for r in caplog.records)
+
+
+def test_build_clean_app_is_quiet(caplog):
+    app = App("strict-clean")
+
+    def src(ctx):
+        def g():
+            yield {"x": 1.0}
+        return g()
+
+    app.driver(src, name="src")
+    app.sense("ev", "src").map(lambda p: p, name="m").tap()
+    with caplog.at_level(logging.WARNING, logger="repro.core.analyze"):
+        app.build(strict=True)
+    assert not caplog.records
+
+
+# ---------------------------------------------------------------------------
+# Integration layer 2: the CLI
+# ---------------------------------------------------------------------------
+
+def _run_cli(*args):
+    env = dict(os.environ, PYTHONPATH=str(SRC))
+    return subprocess.run(
+        [sys.executable, "-m", "repro.core.analyze", *args],
+        capture_output=True, text=True, cwd=REPO, env=env)
+
+
+def test_cli_reports_errors_with_exit_code():
+    bad = REPO / "tests" / "fixtures" / "lint_apps" / \
+        "dx104_replay_nondurable.py"
+    proc = _run_cli(str(bad))
+    assert proc.returncode == 1
+    assert "DX104" in proc.stdout
+
+
+def test_cli_clean_module_exits_zero():
+    proc = _run_cli(str(EXAMPLES / "quickstart.py"))
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "clean" in proc.stdout
+
+
+def test_cli_json_output():
+    bad = REPO / "tests" / "fixtures" / "lint_apps" / \
+        "dx104_replay_nondurable.py"
+    proc = _run_cli(str(bad), "--json")
+    report = json.loads(proc.stdout)
+    assert report["errors"] == 1
+    codes = [d["code"] for r in report["reports"]
+             for d in r["diagnostics"]]
+    assert codes == ["DX104"]
+
+
+def test_cli_pragma_suppresses(tmp_path):
+    src_file = (REPO / "tests" / "fixtures" / "lint_apps" /
+                "dx104_replay_nondurable.py")
+    common = (REPO / "tests" / "fixtures" / "lint_apps" / "_common.py")
+    patched = ("# datax: ignore[DX104] fixture exercises the pragma path\n"
+               + src_file.read_text())
+    (tmp_path / "suppressed.py").write_text(patched)
+    (tmp_path / "_common.py").write_text(common.read_text())
+    proc = _run_cli(str(tmp_path / "suppressed.py"))
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "ignoring DX104" in proc.stdout
+
+
+def test_scan_ignores():
+    text = ("x = 1  # datax: ignore[DX104] vetted\n"
+            "# datax: ignore[DX301]\n# datax ignore[DX999]\n")
+    assert scan_ignores(text) == {"DX104", "DX301"}
+
+
+# ---------------------------------------------------------------------------
+# Integration layer 3: deploy-time recording (operator + sidecar REST analog)
+# ---------------------------------------------------------------------------
+
+def test_deploy_records_diagnostics_on_operator_and_sidecar():
+    app = App("flagged")
+
+    def src(ctx, n=1):
+        def g():
+            for i in range(n):
+                yield {"x": float(i)}
+        return g()
+
+    app.driver(src, name="src")
+    app.sense("ev", "src").map(lambda p: p, name="orphan")  # DX401 warning
+    with connect(start=False) as op:
+        app.deploy(op, start_sensors=False)
+        recorded = op.diagnostics()
+        assert "flagged" in recorded
+        codes = [d["code"] for d in recorded["flagged"]]
+        assert "DX401" in codes
+        summary = op.describe()["diagnostics"]["flagged"]
+        assert summary["warning"] >= 1 and summary["error"] == 0
+        sidecars = op.executor.instances_of("orphan")
+        assert sidecars
+        entries = sidecars[0].sidecar.metrics()["diagnostics"]
+        assert {"code": "DX401", "severity": "warning"} in entries
+
+
+def test_deploy_clean_app_records_empty():
+    app = App("clean-deploy")
+
+    def src(ctx, n=1):
+        def g():
+            for i in range(n):
+                yield {"x": float(i)}
+        return g()
+
+    app.driver(src, name="src")
+    app.sense("ev", "src").map(lambda p: p, name="m").tap()
+    with connect(start=False) as op:
+        app.deploy(op, start_sensors=False)
+        assert op.diagnostics() == {"clean-deploy": []}
+        assert not has_errors([])
+
+
+# ---------------------------------------------------------------------------
+# Satellite: steal= plumbing (DSL -> spec -> fusion -> subscription)
+# ---------------------------------------------------------------------------
+
+def test_scaled_steal_reaches_the_queue_group():
+    app = App("steal-app")
+
+    def src(ctx, n=1):
+        def g():
+            for i in range(n):
+                yield {"k": str(i), "x": float(i)}
+        return g()
+
+    app.driver(src, name="src")
+    (app.sense("ev", "src").key_by("k")
+     .map(lambda p: p, name="routed")
+     .scaled(instances=2, steal=True).tap())
+    application = app.build()
+    spec = next(s for s in application.streams if s.name == "routed")
+    assert spec.steal and spec.delivery == "keyed"
+    with connect(start=False) as op:
+        application.deploy(op, start_sensors=False)
+        m = op.executor.instances_of("routed")[0].sidecar.metrics()
+        assert m["groups"]["ev"]["steal_enabled"] is True
+
+
+def test_steal_survives_fusion():
+    app = App("steal-fused")
+
+    def src(ctx, n=1):
+        def g():
+            for i in range(n):
+                yield {"x": float(i)}
+        return g()
+
+    app.driver(src, name="src")
+    # steal lives on the segment ENTRY stream: the fused unit consumes the
+    # entry's input subject, so the entry's pool policy is what carries over
+    entry = (app.sense("ev", "src")
+             .map(lambda p: p, name="d1", device=True)
+             .scaled(steal=True))
+    entry.map(lambda p: p, name="d2", device=True).tap()
+    application = app.build()
+    fused = next(s for s in application.streams if s.name == "d2")
+    au = next(a for a in application.analytics_units
+              if a.name == fused.analytics_unit)
+    assert au.fused_stages          # the chain really fused
+    assert fused.steal is True      # entry's steal carried onto the unit
+
+
+def test_steal_rejected_for_broadcast():
+    app = App("steal-bad")
+
+    def src(ctx, n=1):
+        def g():
+            for i in range(n):
+                yield {"x": float(i)}
+        return g()
+
+    app.driver(src, name="src")
+    handle = app.sense("ev", "src").map(lambda p: p, name="m")
+    with pytest.raises(DSLError, match="steal"):
+        handle.scaled(delivery="broadcast", steal=True)
+    # and the operator-level validation agrees for raw v1 specs
+    from repro.core import AnalyticsUnitSpec, StreamSpec
+    op = Operator()
+    try:
+        op.register_analytics_unit(AnalyticsUnitSpec(
+            name="pass", logic=lambda ctx: lambda s, p: p))
+        with pytest.raises(OperatorError, match="steal"):
+            op.create_stream(StreamSpec(
+                name="bad", analytics_unit="pass", inputs=(),
+                delivery="broadcast", steal=True))
+    finally:
+        op.shutdown()

@@ -1,0 +1,21 @@
+#!/usr/bin/env python
+"""``datax check`` CLI shim — static dataflow analysis of a DataX app.
+
+Usage (from the repo root)::
+
+    PYTHONPATH=src python tools/datax_check.py examples/quickstart.py
+    PYTHONPATH=src python tools/datax_check.py mypkg.pipelines:build_app --json
+
+Thin wrapper over ``python -m repro.core.analyze`` so CI scripts and
+developers have a stable entry point; see ``docs/diagnostics.md`` for the
+DX code catalog and ``# datax: ignore[DXnnn] <reason>`` pragmas.
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.core.analyze import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())
